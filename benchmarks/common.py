@@ -1,0 +1,38 @@
+"""Shared benchmark helpers: timing, CSV rows, v5e roofline cost model."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+
+# TPU v5e constants (same as launch.dryrun)
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+Row = Tuple[str, float, str]      # (name, us_per_call, derived-info)
+
+
+def wall(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-clock seconds per call (blocks on jax outputs)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def v5e_time(flops: float, bytes_moved: float) -> float:
+    """Roofline latency model on one v5e chip: max(compute, memory)."""
+    return max(flops / PEAK_FLOPS, bytes_moved / HBM_BW)
+
+
+def emit(rows: List[Row]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")

@@ -1,0 +1,68 @@
+"""Beyond-paper table: decomposed-KV serving quality vs rank.
+
+Companion to EXPERIMENTS.md §Perf cell C: the measured 7–11× decode-memory
+win comes at a rank-controlled quality cost.  This benchmark quantifies the
+dial on the reduced deepseek model: teacher-forced decode logit-KL vs the
+dense-cache reference across ranks, at fixed dense-tail length.
+
+(The same axes as paper Fig. 10, applied to the KV stream — the paper's
+outlier observation suggests a K/V outlier-channel side-track as future
+work; the base-rank dial is measured here.)
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import all_archs
+from repro.models import decomposed_kv as DK
+from repro.models import model_fns
+from repro.models import transformer as T
+from .common import Row
+
+
+def run(quick: bool = False) -> List[Row]:
+    cfg = all_archs()["deepseek-7b"].reduced().replace(num_layers=4)
+    fns = model_fns(cfg)
+    params = fns.init(jax.random.PRNGKey(0), cfg)
+    seq = 48 if quick else 96
+    prefix = seq - 8
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, seq), 0, cfg.vocab)
+
+    # dense reference decode stream
+    _, cache_d = T.prefill(params, cfg, toks[:, :prefix], seq + 8)
+    ref = []
+    cd = cache_d
+    for t in range(prefix, seq):
+        lg, cd = T.decode_step(params, cfg, toks[:, t], cd,
+                               jnp.full((2,), t, jnp.int32))
+        ref.append(jax.nn.log_softmax(lg.astype(jnp.float32), -1))
+
+    rows: List[Row] = []
+    kvw_full = cfg.num_kv_heads * cfg.resolved_head_dim
+    full_rank = min(prefix, kvw_full)          # exact-recovery bound
+    ranks = (4, 16) if quick else (4, 16, 32, full_rank)
+    for r in ranks:
+        _, ck = DK.prefill_dkv(params, cfg, toks[:, :prefix], rank=r,
+                               tail=8, exact=(r == full_rank))
+        kls = []
+        for i, t in enumerate(range(prefix, seq)):
+            lg, ck = DK.decode_step_dkv(params, cfg, toks[:, t], ck,
+                                        jnp.full((2,), t, jnp.int32),
+                                        frozen_len=prefix)
+            lp = jax.nn.log_softmax(lg.astype(jnp.float32), -1)
+            kls.append(float(jnp.mean(jnp.sum(jnp.exp(ref[i])
+                                              * (ref[i] - lp), -1))))
+        kvw = cfg.num_kv_heads * cfg.resolved_head_dim
+        bytes_ratio = (prefix * kvw) / (prefix * r + r * kvw)
+        rows.append((f"dkv_quality/rank{r}", 0.0,
+                     f"decode_logit_kl={sum(kls) / len(kls):.4f};"
+                     f"kv_bytes_reduction={bytes_ratio:.1f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run())

@@ -1,0 +1,151 @@
+"""Paper Fig. 4 / Fig. 11a: single-layer runtime — original vs decomposed
+(no acceleration) vs decomposed (D-com co-accelerator).
+
+Three sections:
+1. MEASURED (CPU, scaled geometry) — preserved-GEMM speedup is real on any
+   backend; note the naive-decomposition slowdown is a GPU-regime effect
+   (tensor-core GEMMs are fast, unfused vector chains are launch-bound) so
+   the CPU B/A ratio inverts — the modeled sections cover that regime.
+2. MODELED, paper-faithful — A100-class GEMM engine (312 TFLOP/s fp16,
+   2 TB/s HBM, 8 µs kernel overhead, 15% effective bw on unfused vector
+   chains) + D-com decomposer (fig12 model, f = 8).  Reproduces the paper's
+   2.3× naive slowdown, ~3.8× D-com speedup vs A, ~8.7× vs B.
+3. MODELED, beyond-paper TPU-native — v5e with the decomposition held
+   VMEM-RESIDENT across Lanczos iterations (the TPU analogue of D-com's
+   distributed SRAM banks: one HBM load, then iterate at VMEM bandwidth).
+   This is the §Perf "beyond-paper" datapoint for serving cells.
+
+Geometry: Llama2-7b-like layer (4 × [4096,4096] GEMM chain), batch 64,
+S = 4096, rank 10 (paper Fig. 4 setting).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import decompose, lowrank_matmul
+from .common import HBM_BW, PEAK_FLOPS, Row, wall
+from .fig12_expansion import batch_decomposition_latency
+
+S = H = 4096
+BATCH = 64
+N_MM = 4
+RANK = 10
+
+# paper-faithful GPU-regime constants
+A100_FLOPS = 312e12
+A100_BW = 2.0e12
+LAUNCH = 8e-6                 # kernel launch + sync
+VEC_EFF = 0.15                # effective bw of unfused short-vector chains
+OPS_PER_ITER = 12             # matvec + 2×CGS2 (proj, correction) ×2 + norms
+
+# beyond-paper v5e constants
+VMEM_BW = 20e12               # sustained VMEM bandwidth
+
+
+def measured(quick: bool) -> List[Row]:
+    s, h = (512, 512) if quick else (1024, 2048)
+    b = 2
+    x = jax.random.normal(jax.random.PRNGKey(0), (b, s, h), jnp.float32)
+    w = [jax.random.normal(jax.random.PRNGKey(i), (h, h), jnp.float32) * 0.02
+         for i in range(N_MM)]
+
+    @jax.jit
+    def dense_layer(x):
+        y = x
+        for wi in w:
+            y = y @ wi
+        return y
+
+    @jax.jit
+    def decomposed_layer(x):
+        lr = decompose(x, RANK, iters=RANK + 4)
+        out = lr
+        for wi in w:
+            out = lowrank_matmul(out, wi)
+        return out.vt
+
+    @jax.jit
+    def preserved_only(u, s_, vt):
+        from repro.core.lowrank import LowRank
+        out = LowRank(u, s_, vt)
+        for wi in w:
+            out = lowrank_matmul(out, wi)
+        return out.vt
+
+    t_a = wall(dense_layer, x)
+    t_b = wall(decomposed_layer, x)
+    lr0 = decompose(x, RANK, iters=RANK + 4)
+    t_c = wall(preserved_only, lr0.u, lr0.core, lr0.vt)
+    return [
+        ("fig11/measured/A_dense_layer", t_a * 1e6, f"S={s},H={h},B={b}"),
+        ("fig11/measured/B_decomp_plus_preserved", t_b * 1e6,
+         f"ratio_vs_A={t_b / t_a:.2f}x (CPU regime; see modeled)"),
+        ("fig11/measured/C_preserved_gemms_only", t_c * 1e6,
+         f"speedup_vs_A={t_a / t_c:.2f}x (Eq.6 chain, decomposer offloaded)"),
+    ]
+
+
+def modeled_paper() -> List[Row]:
+    """Paper-faithful A100 + D-com model."""
+    # A: dense layer GEMMs, compute-bound on tensor cores
+    fl_a = BATCH * N_MM * 2 * S * H * H
+    t_a = max(fl_a / A100_FLOPS, BATCH * N_MM * (2 * S * H + H * H) * 2
+              / A100_BW)
+    # naive on-device decomposition: unfused vector chain, launch-bound
+    a_pass = S * H * 2 / (VEC_EFF * A100_BW)
+    t_iter = 2 * (LAUNCH + a_pass) + (OPS_PER_ITER - 2) * LAUNCH
+    t_dec_naive = t_iter * RANK * BATCH
+    # preserved GEMMs (Eq. 6): skinny, memory-bound on W
+    by_c = N_MM * (H * H * 2 + BATCH * 2 * RANK * H * 2)
+    fl_c = BATCH * N_MM * 2 * RANK * H * H
+    t_gemm = max(fl_c / A100_FLOPS, by_c / A100_BW)
+    t_b = t_dec_naive + t_gemm
+    # D-com decomposer (fig12 model at f*=8), overlapped with the GEMM
+    t_dcom = batch_decomposition_latency(8)
+    t_c = max(t_gemm, t_dcom)
+    return [
+        ("fig11/modeled_paper/A_dense", t_a * 1e6, "A100-class GEMM engine"),
+        ("fig11/modeled_paper/B_naive_decomposed", t_b * 1e6,
+         f"slowdown_vs_A={t_b / t_a:.2f}x (paper: ~2.3x)"),
+        ("fig11/modeled_paper/C_dcom", t_c * 1e6,
+         f"speedup_vs_A={t_a / t_c:.2f}x (paper: 3.8x); "
+         f"speedup_vs_B={t_b / t_c:.2f}x (paper: 8.74x)"),
+        ("fig11/modeled_paper/decomp_accel", 0.0,
+         f"naive/dcom={t_dec_naive / t_dcom:.2f}x (paper: ~8x)"),
+    ]
+
+
+def modeled_v5e() -> List[Row]:
+    """Beyond-paper: VMEM-resident decomposer on v5e (one HBM load, then
+    all 2K reorth passes at VMEM bandwidth) + preserved GEMMs."""
+    fl_a = BATCH * N_MM * 2 * S * H * H
+    t_a = max(fl_a / PEAK_FLOPS,
+              BATCH * N_MM * (2 * S * H + H * H) * 2 / HBM_BW)
+    a_bytes = S * H * 2
+    t_load = a_bytes / HBM_BW
+    t_iter = max(a_bytes / VMEM_BW, 2 * S * H / PEAK_FLOPS)
+    t_dec = (t_load + 2 * RANK * t_iter) * BATCH
+    by_c = N_MM * (H * H * 2 + BATCH * 2 * RANK * H * 2)
+    fl_c = BATCH * N_MM * 2 * RANK * H * H
+    t_gemm = max(fl_c / PEAK_FLOPS, by_c / HBM_BW)
+    t_c = max(t_gemm, t_dec)
+    return [
+        ("fig11/modeled_v5e/A_dense", t_a * 1e6, ""),
+        ("fig11/modeled_v5e/decomposer_vmem_resident", t_dec * 1e6,
+         f"vs naive HBM-streaming "
+         f"{(2 * RANK * BATCH * a_bytes / HBM_BW) / t_dec:.1f}x"),
+        ("fig11/modeled_v5e/C_overlap", t_c * 1e6,
+         f"speedup_vs_A={t_a / t_c:.2f}x (beyond-paper TPU-native)"),
+    ]
+
+
+def run(quick: bool = False) -> List[Row]:
+    return measured(quick) + modeled_paper() + modeled_v5e()
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run())

@@ -1,0 +1,51 @@
+"""Benchmark aggregator: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  ``--quick`` shrinks shapes.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module suffixes to run")
+    args = ap.parse_args()
+
+    from . import (dkv_quality, fig2_convergence, fig3_breakdown,
+                   fig10_outliers, fig11_layer_runtime, fig12_expansion,
+                   table2_table3_configs)
+    mods = {
+        "fig2": fig2_convergence, "fig3": fig3_breakdown,
+        "fig10": fig10_outliers, "fig11": fig11_layer_runtime,
+        "fig12": fig12_expansion, "table2_table3": table2_table3_configs,
+        "dkv_quality": dkv_quality,
+    }
+    if args.only:
+        keep = args.only.split(",")
+        mods = {k: v for k, v in mods.items() if k in keep}
+
+    print("name,us_per_call,derived")
+    ok = True
+    for name, mod in mods.items():
+        t0 = time.time()
+        try:
+            for row in mod.run(quick=args.quick):
+                print(f"{row[0]},{row[1]:.3f},{row[2]}", flush=True)
+            print(f"_meta/{name}_wall_s,{(time.time() - t0) * 1e6:.0f},ok",
+                  flush=True)
+        except Exception as e:                       # keep the suite going
+            ok = False
+            import traceback
+            traceback.print_exc()
+            print(f"_meta/{name},0,FAILED:{e}", flush=True)
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

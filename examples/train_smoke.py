@@ -1,0 +1,97 @@
+"""End-to-end training driver: ~100M-param dense LM for a few hundred steps
+on the synthetic Markov stream, with checkpoints, the straggler watchdog,
+and (optionally) PowerSGD low-rank gradient compression — the paper's
+decomposer machinery applied to the communication channel.
+
+  PYTHONPATH=src python examples/train_smoke.py --steps 300
+  PYTHONPATH=src python examples/train_smoke.py --steps 50 --compress
+"""
+import argparse
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec, register
+from repro.runtime.driver import train_loop
+
+# ~100M params: 8 layers, d_model 768, vocab 16k
+CFG_100M = register(ArchConfig(
+    name="demo-100m", family="dense",
+    num_layers=8, d_model=768, num_heads=12, num_kv_heads=4,
+    d_ff=2048, vocab=16384, remat=False, dtype="float32",
+))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--compress", action="store_true",
+                    help="PowerSGD rank-4 gradient compression")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    ckpt_dir = args.ckpt_dir or os.path.join(tempfile.gettempdir(),
+                                             "repro_train_smoke")
+    shape = ShapeSpec("train", args.seq_len, args.batch, "train")
+
+    if args.compress:
+        # wire the compressor as a grad transform through a custom loop
+        from repro.data import DataConfig, SyntheticLM
+        from repro.distributed.compression import (PowerSGDConfig,
+                                                   compress_decompress,
+                                                   compression_ratio,
+                                                   init_state)
+        from repro.optim import make_optimizer
+        from repro.runtime import steps as steps_mod
+
+        cfg = CFG_100M
+        opt = make_optimizer(cfg)
+        params, opt_state = steps_mod.init_train_state(
+            cfg, jax.random.PRNGKey(0), opt)
+        pcfg = PowerSGDConfig(rank=4)
+        pstate = init_state(params, pcfg)
+        print(f"[compress] dense/compressed payload = "
+              f"{compression_ratio(params, pcfg):.1f}x")
+
+        fns_step = steps_mod.make_train_step(cfg, opt, grad_transform=None)
+
+        @jax.jit
+        def step(params, opt_state, pstate, batch):
+            from repro.models import api
+            loss, grads = jax.value_and_grad(
+                lambda p: api.model_fns(cfg).loss_fn(p, cfg, batch))(params)
+            grads, pstate = compress_decompress(grads, pstate, pcfg)
+            from repro.optim import clip_by_global_norm
+            grads, gn = clip_by_global_norm(grads, 1.0)
+            params, opt_state = opt.update(grads, opt_state, params)
+            return params, opt_state, pstate, loss
+
+        src = SyntheticLM(cfg, shape, DataConfig())
+        for i in range(args.steps):
+            batch = {k: jnp.asarray(v) for k, v in src.batch_at(i).items()}
+            params, opt_state, pstate, loss = step(params, opt_state,
+                                                   pstate, batch)
+            if i % 10 == 0:
+                print(f"[compress-train] step {i} loss {float(loss):.4f}")
+        print(f"final loss (compressed grads): {float(loss):.4f}")
+        return
+
+    res = train_loop(CFG_100M, shape, total_steps=args.steps,
+                     ckpt_dir=ckpt_dir, ckpt_every=100, log_every=20)
+    if not res.losses:
+        print(f"already trained to step {res.step} (checkpoint resume); "
+              f"use a fresh --ckpt-dir to retrain")
+        return
+    first, last = res.losses[0], res.losses[-1]
+    print(f"loss {first:.3f} -> {last:.3f} over {res.step} steps "
+          f"(restarts={res.restarts}, stragglers={res.straggler_flags})")
+    if args.steps >= 100:
+        assert last < first, "training must reduce loss on the Markov stream"
+
+
+if __name__ == "__main__":
+    main()

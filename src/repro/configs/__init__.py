@@ -1,0 +1,3 @@
+"""Per-architecture configs (deliverable f) + shape registry."""
+from .base import (SHAPES, ArchConfig, ShapeSpec, all_archs, cells, get_arch,
+                   register)

@@ -1,0 +1,10 @@
+"""deepseek-7b [dense] — llama-arch, MHA (kv=32), SwiGLU. [arXiv:2401.02954; hf]"""
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="deepseek-7b", family="dense",
+    num_layers=30, d_model=4096, num_heads=32, num_kv_heads=32,
+    d_ff=11008, vocab=102400,
+    activation="silu", gated_mlp=True,
+    decompose_note="full: QKV/O/up/gate/down decomposable",
+))

@@ -1,0 +1,10 @@
+"""gemma-2b [dense] — GeGLU, head_dim=256, MQA (kv=1). [arXiv:2403.08295; hf]"""
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="gemma-2b", family="dense",
+    num_layers=18, d_model=2048, num_heads=8, num_kv_heads=1,
+    head_dim=256, d_ff=16384, vocab=256000,
+    activation="geglu", gated_mlp=True, tie_embeddings=True,
+    decompose_note="full: QKV/O/up/gate/down decomposable",
+))

@@ -1,0 +1,11 @@
+"""granite-3-2b [dense] — GQA kv=8, SwiGLU, tied embeddings.
+[hf:ibm-granite/granite-3.0-2b-base; hf]"""
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="granite-3-2b", family="dense",
+    num_layers=40, d_model=2048, num_heads=32, num_kv_heads=8,
+    d_ff=8192, vocab=49155,
+    activation="silu", gated_mlp=True, tie_embeddings=True,
+    decompose_note="full: QKV/O/up/gate/down decomposable",
+))

@@ -1,0 +1,17 @@
+"""kimi-k2-1t-a32b [moe] — trillion-param MoE: 384 experts top-8, 1 shared
+expert, first layer dense.  Adafactor optimizer; weights stay bf16.
+[arXiv:2501.kimi2; unverified — paper-table config]"""
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="kimi-k2-1t-a32b", family="moe",
+    num_layers=61, d_model=7168, num_heads=64, num_kv_heads=8,
+    d_ff=18432, vocab=163840,
+    num_experts=384, top_k=8, moe_d_ff=2048,
+    n_shared_experts=1, first_k_dense=1,
+    expert_sharding="2d",
+    activation="silu", gated_mlp=True,
+    optimizer="adafactor",
+    decompose_note=("attention-path + pre-router hidden only (same as "
+                    "olmoe); expert weights 2-D sharded (EP x data)"),
+))

@@ -1,0 +1,12 @@
+"""llama2-7b — the PAPER's own evaluation model (Tables 2-3, Figs. 4/10/11).
+Not in the assigned pool; registered so benchmarks run the paper's exact
+configuration axes."""
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="llama2-7b", family="dense",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=32,
+    d_ff=11008, vocab=32000,
+    activation="silu", gated_mlp=True,
+    decompose_note="paper's model: Table 2/3 layer lists apply directly",
+))

@@ -1,0 +1,14 @@
+"""llama-3.2-vision-11b [vlm] — dense LM + cross-attn image layers every 5th
+layer; vision frontend STUBBED (input_specs supplies precomputed patch
+embeddings).  [hf:meta-llama/Llama-3.2-11B-Vision; unverified]"""
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="llama-3.2-vision-11b", family="vlm",
+    num_layers=40, d_model=4096, num_heads=32, num_kv_heads=8,
+    d_ff=14336, vocab=128256,
+    cross_attn_period=5, num_image_tokens=1601,
+    activation="silu", gated_mlp=True,
+    decompose_note=("full on text side; vision KV decomposed offline like "
+                    "weights (frontend stubbed)"),
+))

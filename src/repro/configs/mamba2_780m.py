@@ -1,0 +1,12 @@
+"""mamba2-780m [ssm] — attention-free SSD (state-space duality).
+[arXiv:2405.21060; unverified]"""
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="mamba2-780m", family="ssm",
+    num_layers=48, d_model=1536, num_heads=0, num_kv_heads=0,
+    d_ff=0, vocab=50280,
+    ssm_state=128, ssm_expand=2, ssm_head_dim=64,
+    decompose_note=("projections only (attention-free): in/out projections "
+                    "decompose per Eq. 8 with W = d_inner"),
+))

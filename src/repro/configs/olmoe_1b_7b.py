@@ -1,0 +1,14 @@
+"""olmoe-1b-7b [moe] — 64 experts top-8, per-expert d_ff=1024, MHA.
+[arXiv:2409.02060; hf]"""
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="olmoe-1b-7b", family="moe",
+    num_layers=16, d_model=2048, num_heads=16, num_kv_heads=16,
+    d_ff=1024, vocab=50304,
+    num_experts=64, top_k=8, moe_d_ff=1024,
+    activation="silu", gated_mlp=True,
+    decompose_note=("attention-path + pre-router hidden only: post-router "
+                    "token-permuted expert slices break per-prompt low-rank "
+                    "structure (DESIGN.md §5)"),
+))

@@ -1,0 +1,14 @@
+"""seamless-m4t-medium [audio] — enc-dec transformer backbone; audio frontend
+STUBBED (input_specs supplies precomputed frame embeddings).
+[arXiv:2308.11596; hf]"""
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="seamless-m4t-medium", family="audio",
+    num_layers=24, d_model=1024, num_heads=16, num_kv_heads=16,
+    d_ff=4096, vocab=256206,
+    enc_layers=12,                 # 12 enc + 12 dec ("12L" per stack)
+    num_audio_frames=4096,         # encoder memory length for decode shapes
+    activation="gelu", gated_mlp=False, use_bias=True,
+    decompose_note="full: enc self-attn, dec self/cross-attn, FFNs",
+))

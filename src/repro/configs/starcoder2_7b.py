@@ -1,0 +1,11 @@
+"""starcoder2-7b [dense] — GQA kv=4, RoPE, biased linears, ungated GELU MLP.
+[arXiv:2402.19173; hf]"""
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="starcoder2-7b", family="dense",
+    num_layers=32, d_model=4608, num_heads=36, num_kv_heads=4,
+    d_ff=18432, vocab=49152,
+    activation="gelu", gated_mlp=False, use_bias=True,
+    decompose_note="full: QKV/O/up/down decomposable",
+))

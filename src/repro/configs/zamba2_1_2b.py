@@ -1,0 +1,16 @@
+"""zamba2-1.2b [hybrid] — Mamba2 backbone + one SHARED attention+MLP block
+invoked every ``attn_period`` layers (weight reuse, zamba2-style; the
+per-invocation LoRA deltas of the released model are omitted — noted in
+DESIGN.md).  [arXiv:2411.15242; hf]"""
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="zamba2-1.2b", family="hybrid",
+    num_layers=38, d_model=2048, num_heads=32, num_kv_heads=32,
+    d_ff=8192, vocab=32000,
+    ssm_state=64, ssm_expand=2, ssm_head_dim=64,
+    attn_period=6,
+    activation="silu", gated_mlp=True,
+    decompose_note=("projections + shared-attn QKV; SSD scan consumes "
+                    "full-rank x_t (V-track reconstruct, cheap)"),
+))

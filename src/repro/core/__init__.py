@@ -1,0 +1,30 @@
+"""D-com core: runtime activation decomposition (paper's contribution).
+
+Public surface:
+* ``LowRank``            — factored activation pytree (+ outlier track)
+* ``decompose``          — batched Lanczos truncated SVD of activations
+* ``lowrank_matmul`` …   — decomposition-preserved linear algebra (§3.2)
+* ``extract`` / ``ThresholdTable`` — channel-wise outlier handling (§4)
+* ``DecompositionPolicy`` — per-layer configuration (§6.2)
+"""
+from .lowrank import (LowRank, from_dense_svd, gather_channels, rank_concat,
+                      relative_error, retruncate, zero_channels)
+from .lanczos import (DEFAULT_HOOKS, BidiagResult, LanczosHooks, bidiag_to_svd,
+                      decompose, lanczos_bidiag, lanczos_svd)
+from .outlier import (ThresholdTable, attach_dense_outliers,
+                      calibrate_threshold, channel_outlier_counts, extract,
+                      measured_extraction_frac, select_outlier_channels,
+                      split_outliers)
+from .preserved import (activation_compression_ratio, chain_flops,
+                        compute_reduction_ratio_input_only,
+                        compute_reduction_ratio_input_weight,
+                        decompose_weight, lowrank_matmul,
+                        lowrank_x_lowrank_weight, matmul_flops, plan_chain,
+                        preserved_pv, preserved_qk_scores,
+                        preserved_residual_add, weight_compression_ratio,
+                        weight_rank_break_even)
+from .policy import (PAPER_BEST_CONFIG, PAPER_LAYER_CONFIGS,
+                     DecompositionPolicy, LayerPolicy)
+from . import svd_alt
+
+__all__ = [k for k in dir() if not k.startswith("_")]

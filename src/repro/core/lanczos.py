@@ -1,0 +1,176 @@
+"""Lanczos bidiagonalization (Golub–Kahan) — paper Algorithm 1.
+
+The paper chooses Lanczos over QR / divide-and-conquer because it converges
+fastest at the small ranks (1–20) useful for activation compression, and it
+works directly on A (no AᵀA).  The runtime is dominated by the two
+re-orthogonalization steps in the inner loop (paper Fig. 3); those are the
+ops the D-com accelerator — and our Pallas kernel — fuse and expand.
+
+Implementation notes
+--------------------
+* Fixed iteration count ``iters`` (static) so the whole factorization jits
+  and scans; early-exit (paper line 6) is replaced by a numerical guard that
+  zeroes further directions once ‖z‖ falls below ε — the resulting singular
+  values come out ≈0, which is equivalent to the break.
+* Full re-orthogonalization, classical Gram–Schmidt applied twice (CGS2) —
+  matches the paper's "orthogonalize against V/U" and is what their
+  accelerator executes.  U/V buffers are zero-padded to [.., iters], so
+  projecting against not-yet-filled columns is a no-op.
+* Internally fp32 regardless of input dtype (bf16 inputs upcast), matching
+  the fp32-accumulate behaviour of MXU/MAC hardware.
+* ``matvec``/``rmatvec``/``reorth`` are pluggable so the Pallas kernels in
+  ``repro.kernels`` can replace the jnp reference implementations.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .lowrank import LowRank
+
+Array = jax.Array
+EPS = 1e-8
+
+
+class LanczosHooks(NamedTuple):
+    """Pluggable fused inner steps (jnp reference by default; Pallas kernels
+    via ``repro.kernels.ops.make_pallas_hooks``).
+
+    Each step fuses (matvec → CGS2 re-orthogonalization) — exactly the op
+    sequence the D-com accelerator expands (paper Fig. 9).  Normalization
+    stays outside (O(S) / O(H), negligible).  Passing an all-zero Q buffer
+    makes the re-orthogonalization a no-op (used for the first iteration).
+    """
+    right_step: Callable[[Array, Array, Array], Array]  # (A, u[S], V[H,k]) -> z[H]
+    left_step: Callable[[Array, Array, Array], Array]   # (A, v[H], U[S,k]) -> u[S]
+
+
+def _reorth_cgs2(z: Array, q: Array) -> Array:
+    """Twice-is-enough classical Gram–Schmidt: z ← z − Q(Qᵀz), twice."""
+    z = z - q @ (q.T @ z)
+    z = z - q @ (q.T @ z)
+    return z
+
+
+DEFAULT_HOOKS = LanczosHooks(
+    right_step=lambda a, u, vbuf: _reorth_cgs2(a.T @ u, vbuf),
+    left_step=lambda a, v, ubuf: _reorth_cgs2(a @ v, ubuf),
+)
+
+
+class BidiagResult(NamedTuple):
+    u: Array       # [S, k] left Lanczos vectors
+    v: Array       # [H, k] right Lanczos vectors
+    alpha: Array   # [k]   diagonal of B
+    beta: Array    # [k-1] superdiagonal of B
+
+
+def _safe_normalize(x: Array):
+    n = jnp.linalg.norm(x)
+    ok = n > EPS
+    inv = jnp.where(ok, 1.0 / jnp.maximum(n, EPS), 0.0)
+    return x * inv, jnp.where(ok, n, 0.0)
+
+
+@partial(jax.jit, static_argnames=("iters", "hooks"))
+def lanczos_bidiag(a: Array, iters: int,
+                   z0: Optional[Array] = None,
+                   hooks: LanczosHooks = DEFAULT_HOOKS) -> BidiagResult:
+    """Golub–Kahan bidiagonalization of ``a [S, H]`` with ``iters`` steps.
+
+    Produces A ≈ U B Vᵀ with B upper-bidiagonal (diag=alpha, superdiag=beta).
+    """
+    s_dim, h_dim = a.shape
+    a32 = a.astype(jnp.float32)
+    if z0 is None:
+        # Deterministic start vector; any non-degenerate direction works and
+        # a fixed one keeps runs reproducible (the paper does not specify).
+        key = jax.random.PRNGKey(0)
+        z0 = jax.random.normal(key, (h_dim,), jnp.float32)
+    z0 = z0.astype(jnp.float32)
+
+    u_buf = jnp.zeros((s_dim, iters), jnp.float32)
+    v_buf = jnp.zeros((h_dim, iters), jnp.float32)
+    alpha = jnp.zeros((iters,), jnp.float32)
+    beta = jnp.zeros((max(iters - 1, 1),), jnp.float32)
+
+    v0, _ = _safe_normalize(z0)
+    u0 = hooks.left_step(a32, v0, u_buf)   # U buffer all-zero ⇒ pure matvec
+    u0, a0 = _safe_normalize(u0)
+    u_buf = u_buf.at[:, 0].set(u0)
+    v_buf = v_buf.at[:, 0].set(v0)
+    alpha = alpha.at[0].set(a0)
+
+    def body(j, carry):
+        u_buf, v_buf, alpha, beta = carry
+        u_prev = u_buf[:, j - 1]
+        # --- right step: z = Aᵀ u_{j-1}, re-orthogonalized against V -----
+        z = hooks.right_step(a32, u_prev, v_buf)
+        z, b = _safe_normalize(z)
+        v_buf = v_buf.at[:, j].set(z)
+        beta = beta.at[j - 1].set(b)
+        # --- left step: u = A v_j, re-orthogonalized against U ----------
+        u = hooks.left_step(a32, z, u_buf)
+        u, al = _safe_normalize(u)
+        u_buf = u_buf.at[:, j].set(u)
+        alpha = alpha.at[j].set(al)
+        return u_buf, v_buf, alpha, beta
+
+    u_buf, v_buf, alpha, beta = jax.lax.fori_loop(
+        1, iters, body, (u_buf, v_buf, alpha, beta))
+    return BidiagResult(u_buf, v_buf, alpha, beta)
+
+
+def bidiag_to_svd(res: BidiagResult, rank: int):
+    """SVD of the tiny k×k bidiagonal B; rotate the Lanczos bases.
+
+    Returns (U [S, rank], s [rank], Vt [rank, H]).
+    """
+    k = res.alpha.shape[0]
+    b = jnp.diag(res.alpha)
+    if k > 1:
+        b = b + jnp.diag(res.beta[:k - 1], k=1)
+    p, s, qt = jnp.linalg.svd(b)               # k×k each
+    u = res.u @ p[:, :rank]                     # [S, rank]
+    vt = qt[:rank, :] @ res.v.T                 # [rank, H]
+    return u, s[:rank], vt
+
+
+@partial(jax.jit, static_argnames=("rank", "iters", "hooks"))
+def lanczos_svd(a: Array, rank: int, iters: Optional[int] = None,
+                z0: Optional[Array] = None,
+                hooks: LanczosHooks = DEFAULT_HOOKS):
+    """Truncated SVD of a single matrix [S, H] via Lanczos bidiag.
+
+    ``iters`` defaults to ``rank`` (paper-faithful: K iterations for rank K);
+    oversampling (iters > rank) improves the trailing singular triplets.
+    """
+    iters = rank if iters is None else iters
+    assert iters >= rank, "need at least `rank` Lanczos iterations"
+    res = lanczos_bidiag(a, iters, z0=z0, hooks=hooks)
+    return bidiag_to_svd(res, rank)
+
+
+@partial(jax.jit, static_argnames=("rank", "iters", "hooks"))
+def decompose(x: Array, rank: int, iters: Optional[int] = None,
+              hooks: LanczosHooks = DEFAULT_HOOKS) -> LowRank:
+    """Batched activation decomposition: x [..., S, H] → LowRank.
+
+    Each prompt's [S, H] slice is decomposed independently (paper §3.1:
+    "we apply the decomposition on each prompt separately").
+    """
+    batch_shape = x.shape[:-2]
+    flat = x.reshape((-1,) + x.shape[-2:])
+
+    def one(m):
+        u, s, vt = lanczos_svd(m, rank, iters=iters, hooks=hooks)
+        return u, s, vt
+
+    u, s, vt = jax.vmap(one)(flat)
+    u = u.reshape(batch_shape + u.shape[1:])
+    s = s.reshape(batch_shape + s.shape[1:])
+    vt = vt.reshape(batch_shape + vt.shape[1:])
+    return LowRank(u.astype(x.dtype), s.astype(x.dtype), vt.astype(x.dtype))

@@ -1,0 +1,233 @@
+"""Low-rank activation representation (the paper's central data structure).
+
+An activation matrix ``X [S, H]`` is represented as ``U @ core @ Vt`` where
+
+* ``U  [S, k]``   — left factor (token subspace),
+* ``core``        — either a vector ``[k]`` (diagonal, fresh SVD output) or a
+                    dense matrix ``[k, k2]`` (after input+weight preserved
+                    contractions, paper Eq. 7),
+* ``Vt [k2, H]``  — right factor (channel subspace).
+
+The optional *outlier track* (paper §4, "multi-track decomposition") carries
+the extracted outlier channels either densely (``ov [S, C]``) or themselves
+decomposed (``o_u/o_core/o_vt``), together with the static-size channel index
+vector ``o_idx [C]``.  ``Vt`` of the base track always lives in the *original*
+H-sized channel space with the outlier channels zeroed, so reconstruction is
+``U @ core @ Vt  +  scatter(outlier_track, o_idx)``.
+
+Everything is a registered pytree so it flows through jit/vmap/scan/pjit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class LowRank:
+    """U @ core @ Vt (+ optional outlier track)."""
+
+    u: Array                      # [..., S, k]
+    core: Array                   # [..., k] (diag) or [..., k, k2]
+    vt: Array                     # [..., k2, H]
+    # ---- outlier track (all None when disabled) ----
+    o_idx: Optional[Array] = None   # [..., C] int32 channel indices
+    o_u: Optional[Array] = None     # [..., S, ko]
+    o_core: Optional[Array] = None  # [..., ko] or [..., ko, ko2]
+    o_vt: Optional[Array] = None    # [..., ko2, C]
+    o_dense: Optional[Array] = None  # [..., S, C] (dense outlier mode)
+
+    # -- pytree protocol -------------------------------------------------
+    def tree_flatten(self):
+        children = (self.u, self.core, self.vt, self.o_idx, self.o_u,
+                    self.o_core, self.o_vt, self.o_dense)
+        return children, None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+    # -- conveniences ----------------------------------------------------
+    @property
+    def rank(self) -> int:
+        return self.u.shape[-1]
+
+    @property
+    def seq_len(self) -> int:
+        return self.u.shape[-2]
+
+    @property
+    def hidden(self) -> int:
+        return self.vt.shape[-1]
+
+    @property
+    def has_outliers(self) -> bool:
+        """True when a second (outlier) track is present.
+
+        When ``o_idx`` is not None the track lives in the indexed channel
+        subspace (width C); after a preserved matmul the track becomes
+        full-width (``o_idx is None`` but factors present) and is simply
+        added during reconstruction.
+        """
+        return (self.o_idx is not None or self.o_u is not None
+                or self.o_dense is not None)
+
+    @property
+    def core_is_diag(self) -> bool:
+        return self.core.ndim == self.u.ndim - 1
+
+    def scaled_u(self) -> Array:
+        """U @ core folded to the left:  [..., S, k2]."""
+        if self.core_is_diag:
+            return self.u * self.core[..., None, :]
+        return jnp.einsum("...sk,...kl->...sl", self.u, self.core)
+
+    def outlier_values(self) -> Optional[Array]:
+        """Dense [..., S, C] values of the outlier track (None if disabled)."""
+        if not self.has_outliers:
+            return None
+        if self.o_dense is not None:
+            return self.o_dense
+        if self.o_core.ndim == self.o_u.ndim - 1:
+            su = self.o_u * self.o_core[..., None, :]
+        else:
+            su = jnp.einsum("...sk,...kl->...sl", self.o_u, self.o_core)
+        return jnp.einsum("...sk,...kc->...sc", su, self.o_vt)
+
+    def reconstruct(self) -> Array:
+        """Materialize the dense [..., S, H] activation."""
+        x = jnp.einsum("...sk,...kh->...sh", self.scaled_u(), self.vt)
+        ov = self.outlier_values()
+        if ov is not None:
+            if self.o_idx is not None:
+                x = _scatter_channels_add(x, ov, self.o_idx)
+            else:  # full-width second track (post preserved-matmul)
+                x = x + ov
+        return x
+
+    def without_outliers(self) -> "LowRank":
+        return LowRank(self.u, self.core, self.vt)
+
+    def astype(self, dtype) -> "LowRank":
+        cast = lambda a: None if a is None else (
+            a if jnp.issubdtype(a.dtype, jnp.integer) else a.astype(dtype))
+        return LowRank(cast(self.u), cast(self.core), cast(self.vt),
+                       self.o_idx, cast(self.o_u), cast(self.o_core),
+                       cast(self.o_vt), cast(self.o_dense))
+
+    # -- bookkeeping for benchmarks ---------------------------------------
+    def param_count(self) -> int:
+        n = self.u.size + self.core.size + self.vt.size
+        for a in (self.o_u, self.o_core, self.o_vt, self.o_dense):
+            if a is not None:
+                n += a.size
+        if self.o_idx is not None:
+            n += self.o_idx.size
+        return n
+
+
+def _scatter_channels_add(x: Array, vals: Array, idx: Array) -> Array:
+    """x[..., :, idx[c]] += vals[..., :, c] with batched idx support."""
+    if idx.ndim == 1:
+        return x.at[..., idx].add(vals)
+
+    # batched index vectors: vmap over every leading dim of idx.
+    def body(x2, v2, i2):
+        return _scatter_channels_add(x2, v2, i2)
+
+    return jax.vmap(body)(x, vals, idx)
+
+
+def gather_channels(x: Array, idx: Array) -> Array:
+    """x[..., :, idx] with batched idx support → [..., S, C]."""
+    if idx.ndim == 1:
+        return x[..., idx]
+    return jax.vmap(gather_channels)(x, idx)
+
+
+def zero_channels(x: Array, idx: Array) -> Array:
+    """Return x with the indexed channels set to zero (batched idx ok)."""
+    if idx.ndim == 1:
+        return x.at[..., idx].set(0.0)
+    return jax.vmap(zero_channels)(x, idx)
+
+
+def from_dense_svd(x: Array, rank: int) -> LowRank:
+    """Oracle construction via jnp.linalg.svd (LAPACK); baseline for tests."""
+    u, s, vt = jnp.linalg.svd(x, full_matrices=False)
+    return LowRank(u[..., :, :rank], s[..., :rank], vt[..., :rank, :])
+
+
+def relative_error(lr: LowRank, x: Array) -> Array:
+    """‖X − X̂‖_F / ‖X‖_F (paper Eq. 2's ε)."""
+    num = jnp.linalg.norm((lr.reconstruct() - x).reshape(x.shape[:-2] + (-1,)),
+                          axis=-1)
+    den = jnp.linalg.norm(x.reshape(x.shape[:-2] + (-1,)), axis=-1)
+    return num / jnp.maximum(den, 1e-12)
+
+
+@partial(jax.jit, static_argnames=("new_rank",))
+def retruncate(lr: LowRank, new_rank: int) -> LowRank:
+    """Re-compress a LowRank whose factors lost orthogonality (e.g. after
+    rank concatenation for residual adds).  Cost O(S·k² + H·k²), never
+    O(S·H·min(S,H)).  Outlier track is passed through unchanged."""
+    su = lr.scaled_u()                          # [..., S, k2]
+    qu, ru = jnp.linalg.qr(su)                  # S×k2, k2×k2
+    qv, rv = jnp.linalg.qr(jnp.swapaxes(lr.vt, -1, -2))  # H×k2, k2×k2
+    small = jnp.einsum("...ij,...kj->...ik", ru, rv)      # k2 × k2
+    us, ss, vts = jnp.linalg.svd(small, full_matrices=False)
+    u = jnp.einsum("...sk,...kr->...sr", qu, us[..., :, :new_rank])
+    vt = jnp.einsum("...rk,...hk->...rh", vts[..., :new_rank, :], qv)
+    return LowRank(u, ss[..., :new_rank], vt, lr.o_idx, lr.o_u, lr.o_core,
+                   lr.o_vt, lr.o_dense)
+
+
+def add_bias_rank(lr: LowRank, bias: Array) -> LowRank:
+    """Exact  lr + 1·biasᵀ  as one extra rank (U gains a ones column, Vᵀ the
+    bias row; dense/indexed outlier tracks pass through unchanged)."""
+    u, core, vt = lr.u, lr.core, lr.vt
+    ones = jnp.ones(u.shape[:-1] + (1,), u.dtype)
+    u = jnp.concatenate([u, ones], axis=-1)
+    brow = jnp.broadcast_to(bias.astype(vt.dtype),
+                            vt.shape[:-2] + (1, vt.shape[-1]))
+    if lr.core_is_diag:
+        core = jnp.concatenate(
+            [core, jnp.ones(core.shape[:-1] + (1,), core.dtype)], axis=-1)
+        vt = jnp.concatenate([vt, brow], axis=-2)
+    else:
+        k, k2 = core.shape[-2], core.shape[-1]
+        core = jnp.pad(core, [(0, 0)] * (core.ndim - 2) + [(0, 1), (0, 1)])
+        core = core.at[..., k, k2].set(1.0)
+        vt = jnp.concatenate([vt, brow], axis=-2)
+    return LowRank(u, core, vt, lr.o_idx, lr.o_u, lr.o_core, lr.o_vt,
+                   lr.o_dense)
+
+
+def rank_concat(a: LowRank, b: LowRank) -> LowRank:
+    """Exact sum  a + b  as a rank-(ka+kb) LowRank (for residual streams).
+
+    Outlier tracks must match channel indices (or be absent on one side);
+    they are summed densely when both present.
+    """
+    su_a, su_b = a.scaled_u(), b.scaled_u()
+    u = jnp.concatenate([su_a, su_b], axis=-1)
+    vt = jnp.concatenate([a.vt, b.vt], axis=-2)
+    core = jnp.ones(u.shape[:-2] + (u.shape[-1],), u.dtype)
+    o_idx = a.o_idx if a.o_idx is not None else b.o_idx
+    o_dense = None
+    if a.has_outliers or b.has_outliers:
+        ov_a = a.outlier_values()
+        ov_b = b.outlier_values()
+        if ov_a is not None and ov_b is not None:
+            o_dense = ov_a + ov_b
+        else:
+            o_dense = ov_a if ov_a is not None else ov_b
+    return LowRank(u, core, vt, o_idx, o_dense=o_dense)

@@ -1,0 +1,338 @@
+"""Decomposition-preserved computation (paper §3.2).
+
+The paper's key computational trick: once an activation X ≈ U·Σ·Vᵀ exists,
+a linear layer  Y = X·W  is evaluated as  Vᵀ* = Vᵀ·W  ONLY (Eq. 6), keeping
+the output in decomposed form (U, Σ, Vᵀ*).  Consecutive decomposed matmuls
+never re-run the decomposer, and output activation memory stays compressed.
+
+For input+weight decomposition (W ≈ U_w·Σ_w·Vᵀ_w) only the inner chain
+Σ* = Σ_I · Vᵀ_I · U_W · Σ_W  is evaluated (Eq. 7) and the output is
+(U_I, Σ*, Vᵀ_W).
+
+The *outlier track* (paper §4) rides along: a dense [S, C] channel slice
+becomes, after a preserved matmul by W, the factored pair
+(o_u = vals [S, C], o_vt = W[idx, :] [C, H]) — i.e. a rank-C full-width
+side-track, still never materializing an [S, H] tensor.
+
+This module also provides the contraction-order planner (the paper's Eq. 4/5
+"optimal computation order" analysis, generalized to measured FLOP counts)
+and preserved-form attention contractions (QKᵀ and P·V through the factors),
+which is the natural TPU extension of the paper's "keep inputs decomposed
+for all matmuls within a layer".
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .lowrank import LowRank
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# FLOP accounting / contraction-order planner (paper Eq. 4, 5, 8, 9)
+# ---------------------------------------------------------------------------
+
+def matmul_flops(m: int, k: int, n: int) -> int:
+    """MACs×2 for an [m,k]@[k,n] product."""
+    return 2 * m * k * n
+
+
+def chain_flops(dims: Sequence[int], order: Sequence[int]) -> int:
+    """FLOPs of multiplying the matrix chain M0[d0,d1]·M1[d1,d2]·…
+
+    ``order`` lists which adjacent pair is contracted at each step, indexing
+    into the *current* chain.  Used by tests to verify the paper's claimed
+    optimal orders (Eq. 4/5) are what the planner picks.
+    """
+    dims = list(dims)
+    total = 0
+    for pos in order:
+        total += matmul_flops(dims[pos], dims[pos + 1], dims[pos + 2])
+        del dims[pos + 1]
+    return total
+
+
+def plan_chain(dims: Sequence[int]) -> Tuple[List[int], int]:
+    """Optimal matrix-chain order by exhaustive DP (chains here are ≤ 6 long).
+
+    Returns (order as successive adjacent-pair indices, total FLOPs).
+    """
+    dims = tuple(dims)
+    n = len(dims) - 1  # number of matrices
+    if n == 1:
+        return [], 0
+
+    best = {}
+
+    def solve(d: Tuple[int, ...]):
+        if d in best:
+            return best[d]
+        if len(d) == 3:
+            best[d] = ([0], matmul_flops(*d))
+            return best[d]
+        opt = None
+        for pos in range(len(d) - 2):
+            cost = matmul_flops(d[pos], d[pos + 1], d[pos + 2])
+            rest = d[:pos + 1] + d[pos + 2:]
+            sub_order, sub_cost = solve(rest)
+            total = cost + sub_cost
+            if opt is None or total < opt[1]:
+                opt = ([pos] + sub_order, total)
+        best[d] = opt
+        return opt
+
+    return solve(dims)
+
+
+def compute_reduction_ratio_input_only(s: int, r2: int) -> float:
+    """Paper Eq. 8: dense(S·D·W) / preserved(r2·D·W) = S / r2."""
+    return s / r2
+
+
+def compute_reduction_ratio_input_weight(s: int, d: int, w: int,
+                                         r1: int, r2: int,
+                                         p1: int, p2: int) -> float:
+    """Paper Eq. 9 (denominator = preserved Eq. 7 chain cost)."""
+    dense = s * d * w
+    preserved = r2 * d * p1 + r2 * p1 * p2 + r1 * r2 * p2
+    return dense / preserved
+
+
+def activation_compression_ratio(s: int, d: int, r1: int, r2: int) -> float:
+    """Paper Eq. 10 (with p→r): dense S·D vs factored storage."""
+    return (s * d) / (s * r1 + r1 * r2 + r2 * d)
+
+
+def weight_compression_ratio(d: int, w: int, p1: int, p2: int) -> float:
+    """Paper Eq. 12."""
+    return (d * w) / (d * p1 + p1 * p2 + p2 * w)
+
+
+def weight_rank_break_even(d: int, w: int) -> float:
+    """Paper Eq. 11: p below this bound ⇒ decomposed weight is smaller."""
+    return (((d + w) ** 2 + 4 * d * w) ** 0.5 - (d + w)) / 2
+
+
+# ---------------------------------------------------------------------------
+# Preserved matmuls
+# ---------------------------------------------------------------------------
+
+def _apply_core_left(u: Array, core: Array) -> Array:
+    if core.ndim == u.ndim - 1:
+        return u * core[..., None, :]
+    return jnp.einsum("...sk,...kl->...sl", u, core)
+
+
+def lowrank_matmul(lr: LowRank, w: Array, *,
+                   bias: Optional[Array] = None) -> LowRank:
+    """Preserved-format  (U·Σ·Vᵀ [+outliers]) @ W  →  LowRank (paper Eq. 6).
+
+    Only ``Vᵀ* = Vᵀ @ W`` (shape [k2, N]) is computed — S never appears in
+    any contraction.  The dense outlier track (o_dense [S, C] at channels
+    ``o_idx``) turns into the factored full-width pair
+    (o_u = o_dense, o_vt = W[o_idx, :]), because
+    scatter(o_dense, idx) @ W ≡ o_dense @ W[idx, :].
+
+    ``bias`` (shape [N]) is absorbed as one extra rank: U gains a column of
+    ones and Vᵀ gains the bias row (exact, costs rank+1).
+    """
+    vt_new = jnp.einsum("...kh,hn->...kn", lr.vt, w)
+
+    o_idx = o_u = o_core = o_vt = o_dense = None
+    if lr.has_outliers:
+        if lr.o_dense is not None and lr.o_idx is not None:
+            o_u = lr.o_dense                              # [..., S, C]
+            o_core = jnp.ones(o_u.shape[:-2] + (o_u.shape[-1],), o_u.dtype)
+            o_vt = w[lr.o_idx, :] if lr.o_idx.ndim == 1 else (
+                jax.vmap(lambda i: w[i, :])(
+                    lr.o_idx.reshape(-1, lr.o_idx.shape[-1])
+                ).reshape(lr.o_idx.shape[:-1] + (lr.o_idx.shape[-1],
+                                                 w.shape[-1])))
+            o_vt = o_vt.astype(o_u.dtype)
+        else:
+            # already full-width factored track: push W through its Vᵀ
+            o_u, o_core = lr.o_u, lr.o_core
+            o_vt = jnp.einsum("...kh,hn->...kn", lr.o_vt, w)
+
+    u, core = lr.u, lr.core
+    if bias is not None:
+        ones = jnp.ones(u.shape[:-1] + (1,), u.dtype)
+        u = jnp.concatenate([u, ones], axis=-1)
+        if lr.core_is_diag:
+            core = jnp.concatenate(
+                [core, jnp.ones(core.shape[:-1] + (1,), core.dtype)], axis=-1)
+            vt_new = jnp.concatenate(
+                [vt_new,
+                 jnp.broadcast_to(bias.astype(vt_new.dtype),
+                                  vt_new.shape[:-2] + (1, vt_new.shape[-1]))],
+                axis=-2)
+        else:
+            k, k2 = core.shape[-2], core.shape[-1]
+            core = jnp.pad(core, [(0, 0)] * (core.ndim - 2) + [(0, 1), (0, 1)])
+            core = core.at[..., k, k2].set(1.0)
+            vt_new = jnp.concatenate(
+                [vt_new,
+                 jnp.broadcast_to(bias.astype(vt_new.dtype),
+                                  vt_new.shape[:-2] + (1, vt_new.shape[-1]))],
+                axis=-2)
+    return LowRank(u, core, vt_new, o_idx, o_u, o_core, o_vt, o_dense)
+
+
+def lowrank_x_lowrank_weight(lr: LowRank, w_lr: LowRank) -> LowRank:
+    """Input+weight preserved product (paper Eq. 7).
+
+    X @ W ≈ (U_I Σ_I Vᵀ_I) (U_W Σ_W Vᵀ_W)
+          = U_I · [Σ_I (Vᵀ_I U_W) Σ_W] · Vᵀ_W  =  U_I · Σ* · Vᵀ_W
+    with Σ* of shape [r1, p2]; cost r2·H·p1 + r1·r2·p1 + r1·p1·p2 — no S, no
+    output-H contraction at all.
+    """
+    m = jnp.einsum("...kh,hp->...kp", lr.vt, w_lr.scaled_u()
+                   if w_lr.u.ndim == 2 else w_lr.u)       # Vᵀ_I · (U_W Σ_W)
+    if lr.core_is_diag:
+        core_new = lr.core[..., :, None] * m
+    else:
+        core_new = jnp.einsum("...kl,...lp->...kp", lr.core, m)
+
+    o_idx = o_u = o_core = o_vt = o_dense = None
+    if lr.has_outliers:
+        w_dense_rows = None
+        if lr.o_dense is not None and lr.o_idx is not None:
+            # outlier channels hit U_W rows idx: vals @ (U_W Σ_W)[idx] @ Vᵀ_W
+            su_w = w_lr.scaled_u()                        # [H, p2]
+            w_dense_rows = su_w[lr.o_idx, :] if lr.o_idx.ndim == 1 else (
+                jax.vmap(lambda i: su_w[i, :])(
+                    lr.o_idx.reshape(-1, lr.o_idx.shape[-1])
+                ).reshape(lr.o_idx.shape[:-1] + (lr.o_idx.shape[-1],
+                                                 su_w.shape[-1])))
+            o_u = lr.o_dense
+            o_core = jnp.einsum("...cp->...cp", w_dense_rows).astype(o_u.dtype)
+            o_vt = jnp.broadcast_to(
+                w_lr.vt.astype(o_u.dtype),
+                o_core.shape[:-2] + w_lr.vt.shape) if o_core.ndim > 2 \
+                else w_lr.vt.astype(o_u.dtype)
+        else:
+            o_u, o_core = lr.o_u, lr.o_core
+            inner = jnp.einsum("...kh,hp->...kp", lr.o_vt, w_lr.scaled_u())
+            if lr.o_core is not None and lr.o_core.ndim == lr.o_u.ndim - 1:
+                o_core = inner * lr.o_core[..., :, None]
+                o_u = lr.o_u
+            else:
+                o_core = jnp.einsum("...kl,...lp->...kp", lr.o_core, inner)
+            o_vt = w_lr.vt.astype(o_u.dtype)
+
+    vt_out = jnp.broadcast_to(
+        w_lr.vt, core_new.shape[:-2] + w_lr.vt.shape) \
+        if core_new.ndim > 2 and w_lr.vt.ndim == 2 else w_lr.vt
+    return LowRank(lr.u, core_new, vt_out.astype(lr.u.dtype),
+                   o_idx, o_u, o_core, o_vt, o_dense)
+
+
+def decompose_weight(w: Array, rank: int) -> LowRank:
+    """Offline weight decomposition (exact truncated SVD — offline cost is
+    irrelevant per the paper; runtime decomposition is only for activations).
+    """
+    u, s, vt = jnp.linalg.svd(w.astype(jnp.float32), full_matrices=False)
+    return LowRank(u[..., :, :rank].astype(w.dtype),
+                   s[..., :rank].astype(w.dtype),
+                   vt[..., :rank, :].astype(w.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Preserved-form attention contractions
+# ---------------------------------------------------------------------------
+# With Q = U_q Σ_q Vᵀ_q and K = U_k Σ_k Vᵀ_k (the SAME U per prompt when QKV
+# share a decomposed input), per-head scores factor through a tiny [kq, kk]
+# inner matrix: scores_h = U_q · (Σ_q Vᵀ_q,h · V_k,h Σ_k) · Uᵀ_k.
+# Cost per head: kq·dh·kk + S·kq·kk + S·S·kq  vs dense  S·S·dh
+# — an dh/kq ≈ 12× FLOP cut at rank 10, head_dim 128.
+
+def preserved_qk_scores(q: LowRank, k: LowRank, num_heads: int,
+                        scale: float,
+                        num_kv_heads: Optional[int] = None) -> Array:
+    """Per-head attention scores from factored Q, K → dense [..., nh, S, T].
+
+    GQA-aware: K may carry ``num_kv_heads`` < num_heads; Q heads are grouped.
+    Outlier tracks are folded in exactly (they're low-rank side tracks, so the
+    concatenated factorization [base | outlier] is still low-rank).
+    """
+    kvh = num_kv_heads or num_heads
+    g = num_heads // kvh
+    uq, vq = _with_outlier_concat(q)     # [..., S, kq'] , [..., kq', nh·dh]
+    uk, vk = _with_outlier_concat(k)
+    dh = vk.shape[-1] // kvh
+    vq_h = vq.reshape(vq.shape[:-1] + (kvh, g, dh))  # [..., kq, kvh, g, dh]
+    vk_h = vk.reshape(vk.shape[:-1] + (kvh, dh))     # [..., kk, kvh, dh]
+    inner = jnp.einsum("...qkgd,...pkd->...kgqp", vq_h, vk_h)
+    left = jnp.einsum("...sq,...kgqp->...kgsp", uq, inner)
+    sc = jnp.einsum("...kgsp,...tp->...kgst", left, uk)
+    shape = sc.shape[:-4] + (num_heads,) + sc.shape[-2:]
+    return scale * sc.reshape(shape)
+
+
+def preserved_pv(p: Array, v: LowRank, num_heads: int,
+                 num_kv_heads: Optional[int] = None) -> Array:
+    """probs [..., nh, S, T] × factored V → per-head out [..., S, nh·dh].
+
+    P @ V = (P @ U_v) @ (Σ_v Vᵀ_v)_h : the S·T·k contraction is shared-U, the
+    per-head part is rank-k.  GQA-aware like :func:`preserved_qk_scores`.
+    """
+    kvh = num_kv_heads or num_heads
+    g = num_heads // kvh
+    uv, vv = _with_outlier_concat(v)
+    dh = vv.shape[-1] // kvh
+    vv_h = vv.reshape(vv.shape[:-1] + (kvh, dh))     # [..., kv, kvh, dh]
+    pg = p.reshape(p.shape[:-3] + (kvh, g) + p.shape[-2:])
+    pu = jnp.einsum("...kgst,...tp->...kgsp", pg, uv)
+    out = jnp.einsum("...kgsp,...pkd->...skgd", pu, vv_h)
+    return out.reshape(out.shape[:-3] + (num_heads * dh,))
+
+
+def _with_outlier_concat(lr: LowRank) -> Tuple[Array, Array]:
+    """(U·Σ, Vᵀ) with any outlier track folded in as extra rank columns.
+
+    Channel-indexed dense tracks are scattered into an H-wide zero row-space
+    first (exact; the [C, H] scatter touches only C rows).
+    """
+    su = lr.scaled_u()
+    vt = lr.vt
+    if not lr.has_outliers:
+        return su, vt
+    if lr.o_dense is not None and lr.o_idx is not None:
+        c = lr.o_idx.shape[-1]
+        h = lr.hidden
+        eye_rows = jnp.zeros(lr.o_idx.shape[:-1] + (c, h), vt.dtype)
+        if lr.o_idx.ndim == 1:
+            eye_rows = eye_rows.at[jnp.arange(c), lr.o_idx].set(1.0)
+        else:
+            def scat(e, i):
+                return e.at[jnp.arange(c), i].set(1.0)
+            flat_i = lr.o_idx.reshape(-1, c)
+            flat_e = eye_rows.reshape(-1, c, h)
+            eye_rows = jax.vmap(scat)(flat_e, flat_i).reshape(eye_rows.shape)
+        su = jnp.concatenate([su, lr.o_dense.astype(su.dtype)], axis=-1)
+        vt = jnp.concatenate([vt, eye_rows], axis=-2)
+        return su, vt
+    # full-width factored track
+    if lr.o_core.ndim == lr.o_u.ndim - 1:
+        so = lr.o_u * lr.o_core[..., None, :]
+    else:
+        so = jnp.einsum("...sk,...kl->...sl", lr.o_u, lr.o_core)
+    su = jnp.concatenate([su, so.astype(su.dtype)], axis=-1)
+    vt = jnp.concatenate([vt, lr.o_vt.astype(vt.dtype)], axis=-2)
+    return su, vt
+
+
+# ---------------------------------------------------------------------------
+# Residual add in preserved form
+# ---------------------------------------------------------------------------
+
+def preserved_residual_add(lr: LowRank, residual: LowRank) -> LowRank:
+    """Exact x + y for two LowRanks sharing nothing: rank-concat (cheap, grows
+    rank; callers retruncate on a policy-chosen cadence)."""
+    from .lowrank import rank_concat
+    return rank_concat(lr, residual)

@@ -1,0 +1,96 @@
+"""Baseline SVD algorithms (paper §2.3 / Fig. 2 comparison set).
+
+The paper motivates Lanczos by comparing convergence speed across QR
+decomposition, divide-and-conquer, and Lanczos for small ranks.  We provide
+JAX implementations of the comparison set so ``benchmarks/fig2_convergence``
+can reproduce the ordering on identical inputs:
+
+* ``oracle_svd``        — jnp.linalg.svd (LAPACK divide-and-conquer on CPU;
+                          the paper's red dotted "optimal" line).
+* ``qr_iteration_svd``  — block QR / subspace iteration on AᵀA: the classical
+                          "QR decomposition" contender.
+* ``randomized_svd``    — Halko-style randomized range finder (one extra
+                          contender showing the small-rank regime trade-off).
+* Lanczos lives in ``core.lanczos`` (the paper's choice).
+
+All are fixed-iteration and jit-friendly.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .lowrank import LowRank
+
+Array = jax.Array
+
+
+def oracle_svd(a: Array, rank: int) -> Tuple[Array, Array, Array]:
+    """Full LAPACK SVD, truncated — the accuracy oracle."""
+    u, s, vt = jnp.linalg.svd(a.astype(jnp.float32), full_matrices=False)
+    return u[:, :rank], s[:rank], vt[:rank, :]
+
+
+@partial(jax.jit, static_argnames=("rank", "iters"))
+def qr_iteration_svd(a: Array, rank: int, iters: int = 8
+                     ) -> Tuple[Array, Array, Array]:
+    """Subspace (block power) iteration with QR re-orthogonalization.
+
+    Works on AᵀA implicitly: V ← qr(Aᵀ(A·V)).  Cost per iter: two dense
+    matmuls [S,H]·[H,r] — much heavier per-iteration than Lanczos' matvecs
+    at equal rank, which is exactly the paper's point for small r.
+    """
+    a32 = a.astype(jnp.float32)
+    h = a.shape[-1]
+    v = jax.random.normal(jax.random.PRNGKey(1), (h, rank), jnp.float32)
+    v, _ = jnp.linalg.qr(v)
+
+    def body(_, v):
+        w = a32 @ v                    # [S, r]
+        z = a32.T @ w                  # [H, r]
+        v, _ = jnp.linalg.qr(z)
+        return v
+
+    v = jax.lax.fori_loop(0, iters, body, v)
+    av = a32 @ v                       # [S, r]
+    u, r_small = jnp.linalg.qr(av)
+    us, s, vts = jnp.linalg.svd(r_small)
+    return u @ us, s, (vts @ v.T)
+
+
+@partial(jax.jit, static_argnames=("rank", "oversample", "power_iters"))
+def randomized_svd(a: Array, rank: int, oversample: int = 4,
+                   power_iters: int = 2) -> Tuple[Array, Array, Array]:
+    """Halko–Martinsson–Tropp randomized SVD with power iterations."""
+    a32 = a.astype(jnp.float32)
+    s_dim, h_dim = a.shape
+    k = min(rank + oversample, min(s_dim, h_dim))
+    omega = jax.random.normal(jax.random.PRNGKey(2), (h_dim, k), jnp.float32)
+    y = a32 @ omega
+    q, _ = jnp.linalg.qr(y)
+
+    def body(_, q):
+        z = a32.T @ q
+        z, _ = jnp.linalg.qr(z)
+        y = a32 @ z
+        q, _ = jnp.linalg.qr(y)
+        return q
+
+    q = jax.lax.fori_loop(0, power_iters, body, q)
+    b = q.T @ a32                       # [k, H]
+    ub, s, vt = jnp.linalg.svd(b, full_matrices=False)
+    return (q @ ub)[:, :rank], s[:rank], vt[:rank, :]
+
+
+def as_lowrank(u: Array, s: Array, vt: Array) -> LowRank:
+    return LowRank(u, s, vt)
+
+
+def reconstruction_error(a: Array, u: Array, s: Array, vt: Array) -> Array:
+    """Relative Frobenius error of U·diag(s)·Vᵀ vs A."""
+    rec = (u * s[None, :]) @ vt
+    return (jnp.linalg.norm(rec - a.astype(jnp.float32))
+            / jnp.maximum(jnp.linalg.norm(a.astype(jnp.float32)), 1e-12))

@@ -1,0 +1,5 @@
+"""Distribution layer: sharding rule tables, gradient compression,
+collective helpers."""
+from .sharding import (batch_sharding, cache_sharding, dp_axes,
+                       opt_state_sharding, param_spec, params_sharding,
+                       replicated, token_sharding)

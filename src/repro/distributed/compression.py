@@ -1,0 +1,97 @@
+"""Low-rank gradient compression (PowerSGD-style) with error feedback.
+
+The distributed-optimization tie-in to the paper: gradient matrices are
+activations of the communication channel, and the SAME progressive low-rank
+machinery D-com builds for activations (subspace iteration / Lanczos-family
+methods, ``core.svd_alt.qr_iteration_svd`` is one power step with QR) makes
+the DP all-reduce payload rank-r instead of dense.
+
+Protocol per 2-D-reshapeable gradient G [m, n] (1-D tensors stay dense):
+  1. G ← G + E (error feedback memory)
+  2. P = G Q;  all-reduce(P);  P ← orthonormalize(P)      [one power step]
+  3. Q' = Gᵀ P;  all-reduce(Q')
+  4. Ĝ = P Q'ᵀ;  E ← G − Ĝ;  emit Ĝ
+Under pjit the all-reduces are implicit (GSPMD inserts them for the
+DP-sharded batch dim); this module supplies the compress/decompress math
+and the error-feedback state so ``runtime.steps`` can wire it as a
+``grad_transform``.  Compression ratio per matrix: (m·n)/(r·(m+n)).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class PowerSGDConfig:
+    rank: int = 4
+    min_elems: int = 65_536       # don't compress tiny tensors
+    seed: int = 17
+
+
+def _reshape2d(g: jax.Array) -> Tuple[jax.Array, Tuple[int, ...]]:
+    shape = g.shape
+    if g.ndim == 1:
+        return g[None, :], shape
+    m = 1
+    for d in shape[:-1]:
+        m *= d
+    return g.reshape(m, shape[-1]), shape
+
+
+def _orthonormalize(p: jax.Array) -> jax.Array:
+    q, _ = jnp.linalg.qr(p)
+    return q
+
+
+def init_state(params: Pytree, cfg: PowerSGDConfig) -> Pytree:
+    """Error-feedback memory (zeros, fp32) + fixed random Q per leaf."""
+    def one(path, p):
+        if p.size < cfg.min_elems or p.ndim < 2:
+            return {"e": None, "q": None}
+        g2, _ = _reshape2d(jnp.zeros(p.shape, jnp.float32))
+        key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed),
+                                 abs(hash(str(path))) % (2 ** 31))
+        q = jax.random.normal(key, (g2.shape[1], cfg.rank), jnp.float32)
+        return {"e": jnp.zeros(p.shape, jnp.float32), "q": q}
+    return jax.tree_util.tree_map_with_path(
+        one, params, is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def compress_decompress(grads: Pytree, state: Pytree, cfg: PowerSGDConfig
+                        ) -> Tuple[Pytree, Pytree]:
+    """Apply PowerSGD round-trip (what the receiver would see) + new state."""
+    def one(g, st):
+        if st["e"] is None:
+            return g, st
+        g32 = g.astype(jnp.float32) + st["e"]
+        g2, shape = _reshape2d(g32)
+        p = _orthonormalize(g2 @ st["q"])         # [m, r] (all-reduced in DP)
+        q_new = g2.T @ p                           # [n, r] (all-reduced in DP)
+        approx = (p @ q_new.T).reshape(shape)
+        err = g32 - approx
+        return approx.astype(g.dtype), {"e": err, "q": q_new}
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_s = tdef.flatten_up_to(state)
+    out = [one(g, s) for g, s in zip(flat_g, flat_s)]
+    return (tdef.unflatten([o[0] for o in out]),
+            tdef.unflatten([o[1] for o in out]))
+
+
+def compression_ratio(params: Pytree, cfg: PowerSGDConfig) -> float:
+    """Dense bytes / compressed bytes over the whole gradient pytree."""
+    dense = comp = 0
+    for p in jax.tree_util.tree_leaves(params):
+        n = p.size
+        dense += n
+        if n < cfg.min_elems or p.ndim < 2:
+            comp += n
+        else:
+            g2, _ = _reshape2d(jnp.zeros(p.shape, jnp.bool_))
+            comp += cfg.rank * (g2.shape[0] + g2.shape[1])
+    return dense / comp

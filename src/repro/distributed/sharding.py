@@ -1,0 +1,240 @@
+"""Sharding rule tables: param/optimizer/batch/cache PartitionSpecs.
+
+Mesh convention (launch.mesh): single-pod ``(16, 16) = ("data", "model")``;
+multi-pod ``(2, 16, 16) = ("pod", "data", "model")`` — "pod" composes with
+"data" into the DP super-axis for all data-parallel collectives.
+
+Strategy per family (DESIGN.md §4):
+* dense/vlm/audio — Megatron TP on "model": QKV/up column-parallel, O/down
+  row-parallel, vocab-sharded embedding/head when divisible; DP over
+  ("pod","data"); ZeRO-1 optimizer-state sharding over DP.
+* moe — experts sharded over "model" (EP); kimi-k2 additionally shards the
+  expert FFN dim over "data" (``expert_sharding="2d"`` ⇒ EP×FSDP).
+* ssm/hybrid — TP over d_inner/heads for projections; scan is
+  sequence-local.
+* decode caches — batch over DP; ``global_batch == 1`` (long_500k) shards
+  the KV time axis over "data" instead (flash-decoding style); KV heads over
+  "model" when divisible, else head_dim, else replicated (MQA).
+
+Every rule is divisibility-guarded: a dim that doesn't divide by its axis
+size falls back to replication (recorded per-arch in EXPERIMENTS.md §Dry-run
+— e.g. granite/seamless/mamba2 vocab is not 16-divisible).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# Mesh helpers
+# ---------------------------------------------------------------------------
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, tuple):
+        out = 1
+        for n in name:
+            out *= mesh.shape[n]
+        return out
+    return mesh.shape[name]
+
+
+def _fits(dim: int, mesh: Mesh, name) -> bool:
+    return dim % axis_size(mesh, name) == 0
+
+
+def _path_str(path) -> str:
+    parts = []
+    for e in path:
+        if hasattr(e, "key"):
+            parts.append(str(e.key))
+        elif hasattr(e, "idx"):
+            parts.append(str(e.idx))
+        else:
+            parts.append(str(e))
+    return "/".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+COL_PARALLEL = ("wq/w", "wk/w", "wv/w", "up/w", "gate/w", "in_proj/w",
+                "lm_head/w")
+ROW_PARALLEL = ("wo/w", "down/w", "out_proj/w")
+COL_BIAS = ("wq/b", "wk/b", "wv/b", "up/b", "gate/b", "in_proj/b")
+
+
+def param_spec(path_str: str, shape: Tuple[int, ...], mesh: Mesh,
+               cfg) -> P:
+    """PartitionSpec for one parameter leaf (leading stack dims replicated)."""
+    nd = len(shape)
+    spec = [None] * nd
+
+    def last(n=1):
+        return nd - n
+
+    if path_str.endswith("embed/w"):
+        if _fits(shape[0], mesh, "model"):
+            spec[0] = "model"
+    elif any(path_str.endswith(s) for s in COL_PARALLEL):
+        if _fits(shape[-1], mesh, "model"):
+            spec[last()] = "model"
+    elif any(path_str.endswith(s) for s in ROW_PARALLEL):
+        if _fits(shape[-2], mesh, "model"):
+            spec[last(2)] = "model"
+    elif any(path_str.endswith(s) for s in COL_BIAS):
+        if _fits(shape[-1], mesh, "model"):
+            spec[last()] = "model"
+    elif path_str.endswith(("w_gate", "w_up")):      # [.., E, H, F]
+        if _fits(shape[-3], mesh, "model"):
+            spec[last(3)] = "model"
+        if getattr(cfg, "expert_sharding", "1d") == "2d" \
+                and _fits(shape[-1], mesh, "data"):
+            spec[last()] = "data"
+    elif path_str.endswith("w_down"):                # [.., E, F, H]
+        if _fits(shape[-3], mesh, "model"):
+            spec[last(3)] = "model"
+        if getattr(cfg, "expert_sharding", "1d") == "2d" \
+                and _fits(shape[-2], mesh, "data"):
+            spec[last(2)] = "data"
+    # conv_w / a_log / d / dt_bias / norms / router / gates → replicated
+    return P(*spec)
+
+
+def params_sharding(param_shapes: Pytree, mesh: Mesh, cfg) -> Pytree:
+    def f(path, leaf):
+        return NamedSharding(mesh, param_spec(_path_str(path), leaf.shape,
+                                              mesh, cfg))
+    return jax.tree_util.tree_map_with_path(f, param_shapes)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer-state specs (ZeRO-1 over the DP super-axis)
+# ---------------------------------------------------------------------------
+
+def _zero1(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Add the DP axis to the first unsharded, divisible dim (ZeRO-1)."""
+    dp = dp_axes(mesh)
+    dims = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (d, s) in enumerate(zip(shape, dims)):
+        if s is None and d % axis_size(mesh, dp) == 0 and d > 1:
+            dims[i] = dp if len(dp) > 1 else dp[0]
+            break
+    return P(*dims)
+
+
+def opt_state_sharding(opt_shapes: Pytree, mesh: Mesh, cfg,
+                       zero1: bool = True) -> Pytree:
+    """Specs for optimizer state.  The state tree embeds param-shaped
+    subtrees (m/v for AdamW; factored vr/vc for Adafactor) whose paths END
+    with the param path — the same suffix rules apply; then ZeRO-1 adds DP
+    sharding."""
+    def f(path, leaf):
+        ps = _path_str(path)
+        spec = param_spec(ps, leaf.shape, mesh, cfg)
+        if zero1 and leaf.ndim >= 1 and "step" not in ps:
+            spec = _zero1(spec, leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(f, opt_shapes)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_sharding(batch_shapes: Pytree, mesh: Mesh) -> Pytree:
+    """Train/prefill batches: leading batch dim over DP."""
+    dp = dp_axes(mesh)
+    dp_name = dp if len(dp) > 1 else dp[0]
+
+    def f(leaf):
+        spec = [None] * leaf.ndim
+        if leaf.shape and leaf.shape[0] % axis_size(mesh, dp) == 0:
+            spec[0] = dp_name
+        elif leaf.ndim >= 2 and leaf.shape[0] == 1 \
+                and leaf.shape[1] % axis_size(mesh, dp) == 0:
+            spec[1] = dp_name            # batch-1 long context: shard S
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map(f, batch_shapes)
+
+
+def cache_sharding(cache_shapes: Pytree, mesh: Mesh, cfg) -> Pytree:
+    """Decode caches.  Leaf patterns (by dict key):
+    * k/v:   [..., B, T, kvh, hd] — B→DP (or T→"data" when B==1),
+             kvh→"model" (else hd→"model", else replicated),
+    * conv:  [..., B, W, ch]      — B→DP, ch→"model",
+    * ssm:   [..., B, nh, hd, ds] — B→DP, nh→"model".
+    """
+    dp = dp_axes(mesh)
+    dp_name = dp if len(dp) > 1 else dp[0]
+    dp_sz = axis_size(mesh, dp)
+
+    def f(path, leaf):
+        ps = _path_str(path)
+        leaf_name = ps.rsplit("/", 1)[-1]
+        nd = leaf.ndim
+        spec = [None] * nd
+        if leaf_name in ("k", "v"):
+            b_dim, t_dim, kvh_dim, hd_dim = nd - 4, nd - 3, nd - 2, nd - 1
+            if leaf.shape[b_dim] % dp_sz == 0 and leaf.shape[b_dim] > 1:
+                spec[b_dim] = dp_name
+            elif leaf.shape[b_dim] == 1 \
+                    and leaf.shape[t_dim] % mesh.shape["data"] == 0:
+                spec[t_dim] = "data"     # sequence-sharded KV
+            if _fits(leaf.shape[kvh_dim], mesh, "model") \
+                    and leaf.shape[kvh_dim] > 1:
+                spec[kvh_dim] = "model"
+            elif _fits(leaf.shape[hd_dim], mesh, "model"):
+                spec[hd_dim] = "model"
+        elif leaf_name in ("k_u", "v_u"):      # [.., B, T, r]
+            b_dim, t_dim = nd - 3, nd - 2
+            if leaf.shape[b_dim] % dp_sz == 0 and leaf.shape[b_dim] > 1:
+                spec[b_dim] = dp_name
+            elif leaf.shape[b_dim] == 1 \
+                    and leaf.shape[t_dim] % mesh.shape["data"] == 0:
+                spec[t_dim] = "data"
+            # NOTE (§Perf C3, refuted): sharding U's time axis over
+            # "model" cuts U reads ~17% but the sharded-softmax
+            # all-reduces of the [B,kvh,g,T] scores cost 2x more than the
+            # saving — U stays model-replicated.
+        elif leaf_name in ("k_vt", "v_vt"):    # [.., B, r, kvw]
+            b_dim, w_dim = nd - 3, nd - 1
+            if leaf.shape[b_dim] % dp_sz == 0 and leaf.shape[b_dim] > 1:
+                spec[b_dim] = dp_name
+            if _fits(leaf.shape[w_dim], mesh, "model"):
+                spec[w_dim] = "model"
+        elif leaf_name == "conv":
+            b_dim, ch_dim = nd - 3, nd - 1
+            if leaf.shape[b_dim] % dp_sz == 0 and leaf.shape[b_dim] > 1:
+                spec[b_dim] = dp_name
+            if _fits(leaf.shape[ch_dim], mesh, "model"):
+                spec[ch_dim] = "model"
+        elif leaf_name == "ssm":
+            b_dim, nh_dim = nd - 4, nd - 3
+            if leaf.shape[b_dim] % dp_sz == 0 and leaf.shape[b_dim] > 1:
+                spec[b_dim] = dp_name
+            if _fits(leaf.shape[nh_dim], mesh, "model"):
+                spec[nh_dim] = "model"
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map_with_path(f, cache_shapes)
+
+
+def token_sharding(mesh: Mesh, batch: int) -> NamedSharding:
+    dp = dp_axes(mesh)
+    dp_name = dp if len(dp) > 1 else dp[0]
+    if batch % axis_size(mesh, dp) == 0 and batch > 1:
+        return NamedSharding(mesh, P(dp_name))
+    return NamedSharding(mesh, P(None))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

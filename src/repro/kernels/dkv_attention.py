@@ -1,0 +1,129 @@
+"""Flash-decoding THROUGH the low-rank KV factors (beyond-paper kernel).
+
+The decomposed-KV decode step (models/decomposed_kv.py) replaces the
+[T, d_kv] cache read with rank-space contractions:
+
+    s_t   = inner · U_k[t]ᵀ          inner = q·Vᵀ_k  (tiny, precomputed)
+    out   = softmax(s) · U_v · Vᵀ_v
+
+Both big contractions stream U_{k,v} [T, r] over the time axis — the same
+memory-bound skinny pattern as the Lanczos chain, so the same D-com
+expansion treatment applies: the grid tiles T into ``f`` blocks, each block
+computes its scores AND folds them into a rank-space accumulator with
+online-softmax (flash) running statistics:
+
+    m' = max(m, max(s_blk));  c = exp(m − m')
+    l' = l·c + Σ exp(s_blk − m')
+    a' = a·c + exp(s_blk − m') · U_v[blk]          # a: [g, r] — tiny!
+
+One pass over U_k/U_v, no [T]-length score tensor ever materialized, and
+the accumulator lives in rank space (g×r), not head space.  The final
+out = (a/l)·Vᵀ_v and the dense-tail merge happen outside (cheap).
+
+Returns per-(batch, kv-head) partial stats (a, m, l) so the caller merges
+the exact dense tail with the standard flash combine rule.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _dkv_kernel(inner_ref, ku_ref, vu_ref, a_out, m_out, l_out,
+                m_s, l_s, a_s, *, f: int, blk: int):
+    """grid = (f,) time-blocks for ONE (batch, kv-head) slice.
+
+    inner [g, r]; ku/vu block [blk, r]; accumulators in VMEM scratch.
+    """
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, -1e30)
+        l_s[...] = jnp.zeros_like(l_s)
+        a_s[...] = jnp.zeros_like(a_s)
+
+    inner = inner_ref[...].astype(jnp.float32)          # [g, r]
+    ku = ku_ref[...].astype(jnp.float32)                # [blk, r]
+    s_blk = jnp.dot(inner, ku.T,
+                    preferred_element_type=jnp.float32)  # [g, blk]
+
+    m_old = m_s[...]                                     # [g, 1]
+    m_new = jnp.maximum(m_old, jnp.max(s_blk, axis=1, keepdims=True))
+    c = jnp.exp(m_old - m_new)
+    p = jnp.exp(s_blk - m_new)                           # [g, blk]
+    vu = vu_ref[...].astype(jnp.float32)                 # [blk, r]
+    a_s[...] = a_s[...] * c + jnp.dot(p, vu,
+                                      preferred_element_type=jnp.float32)
+    l_s[...] = l_s[...] * c + jnp.sum(p, axis=1, keepdims=True)
+    m_s[...] = m_new
+
+    @pl.when(j == f - 1)
+    def _fin():
+        a_out[...] = a_s[...]
+        m_out[...] = m_s[...]
+        l_out[...] = l_s[...]
+
+
+@functools.partial(jax.jit, static_argnames=("expansion", "interpret"))
+def dkv_attention_stats(inner: jax.Array, k_u: jax.Array, v_u: jax.Array,
+                        *, expansion: int = 8, interpret: bool = True):
+    """Rank-space flash stats for ONE (batch, kv-head) slice.
+
+    inner [g, r] (= scaled q·Vᵀ_k), k_u / v_u [T, r] →
+    (a [g, r], m [g, 1], l [g, 1]) with softmax-weighted U_v accumulated
+    in rank space.  T % expansion == 0.
+    """
+    g, r = inner.shape
+    t = k_u.shape[0]
+    assert t % expansion == 0, (t, expansion)
+    blk = t // expansion
+
+    a, m, l = pl.pallas_call(
+        functools.partial(_dkv_kernel, f=expansion, blk=blk),
+        grid=(expansion,),
+        in_specs=[
+            pl.BlockSpec((g, r), lambda j: (0, 0)),
+            pl.BlockSpec((blk, r), lambda j: (j, 0)),
+            pl.BlockSpec((blk, r), lambda j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((g, r), lambda j: (0, 0)),
+            pl.BlockSpec((g, 1), lambda j: (0, 0)),
+            pl.BlockSpec((g, 1), lambda j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g, r), jnp.float32),
+            jax.ShapeDtypeStruct((g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((g, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),      # running max
+            pltpu.VMEM((g, 1), jnp.float32),      # running denom
+            pltpu.VMEM((g, r), jnp.float32),      # rank-space accumulator
+        ],
+        interpret=interpret,
+    )(inner, k_u, v_u)
+    return a, m, l
+
+
+def merge_with_tail(a, m, l, v_vt, tail_scores, tail_v):
+    """Flash-combine the prefix rank-space stats with exact dense-tail
+    attention.  tail_scores [g, tl] (already masked), tail_v [tl, d].
+
+    Returns out [g, d] — the softmax over [prefix ∪ tail] exactly.
+    """
+    m_t = jnp.max(tail_scores, axis=1, keepdims=True)
+    p_t = jnp.exp(tail_scores - m_t)
+    l_t = jnp.sum(p_t, axis=1, keepdims=True)
+    o_t = p_t @ tail_v.astype(jnp.float32)               # [g, d]
+
+    m_all = jnp.maximum(m, m_t)
+    c_pre, c_t = jnp.exp(m - m_all), jnp.exp(m_t - m_all)
+    out_pre = (a @ v_vt.astype(jnp.float32)) * c_pre     # [g, d]
+    denom = l * c_pre + l_t * c_t
+    return (out_pre + o_t * c_t) / jnp.maximum(denom, 1e-30)

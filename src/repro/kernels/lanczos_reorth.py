@@ -1,0 +1,205 @@
+"""Fused Lanczos re-orthogonalization step — the D-com kernel (paper §5.3).
+
+The latency bottleneck of Lanczos bidiagonalization is the inner-loop
+re-orthogonalization (paper Fig. 3): a chain of
+
+    matvec  →  global reduce (Qᵀz)  →  broadcast  →  axpy (z − Q·p)   × 2
+
+which is memory-bound on a GPU/TPU vector unit.  The paper's *Computation
+Expansion* replicates the element-wise work across ``f`` partial blocks so
+the one long global reduction becomes ``f`` short local reductions plus a
+tiny global combine (Fig. 9c).
+
+TPU-native mapping (see DESIGN.md §2): the expansion factor ``f`` is the
+Pallas **grid size along the reduction dimension**.  Each grid step owns a
+VMEM-resident tile (the paper's per-cluster buffer) and computes
+
+  pass 0:  z_j   = (Aᵀu)_j            and accumulates p1 += Q_jᵀ z_j
+  pass 1:  z'_j  = z_j − Q_j p1       and accumulates p2 += Q_jᵀ z'_j
+  pass 2:  z''_j = z'_j − Q_j p2      and accumulates ‖z''‖² partials
+
+The p1/p2/nrm accumulators are tiny [1, k] / [1, 1] VMEM scratch — the
+paper's "small global memory for broadcast purposes".  The z intermediate
+lives in a full-length VMEM scratch so A is streamed from HBM exactly once
+per pass (3× total; the unfused chain reads A once but re-reads z/Q five
+times from HBM — at k ≥ 16 columns of Q the fused version moves less data,
+and all reductions are VMEM-local).
+
+Two symmetric variants:
+* ``right``: z = CGS2(Aᵀu, V) — output over columns of A (length H),
+* ``left`` : w = CGS2(A v, U) — output over rows of A (length S).
+
+Both are validated against ``ref.py`` in interpret mode; on hardware the
+MXU handles the [blk, k] projections and the VPU the element-wise tail.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _reorth_right_kernel(a_ref, u_ref, q_ref, z_out, nrm_out,
+                         z_buf, p1, p2, nrm, *, f: int, blk: int):
+    """grid = (3 passes, f column-blocks). A block (S, blk); Q block (blk, k)."""
+    p = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when((p == 0) & (j == 0))
+    def _init():
+        p1[...] = jnp.zeros_like(p1)
+        p2[...] = jnp.zeros_like(p2)
+        nrm[...] = jnp.zeros_like(nrm)
+
+    q = q_ref[...].astype(jnp.float32)            # (blk, k)
+
+    @pl.when(p == 0)
+    def _pass0():
+        a = a_ref[...].astype(jnp.float32)        # (S, blk)
+        u = u_ref[...].astype(jnp.float32)        # (S, 1)
+        z = jnp.sum(a * u, axis=0)[None, :]       # (1, blk) — local reduce
+        pl.store(z_buf, (pl.dslice(0, 1), pl.dslice(j * blk, blk)), z)
+        p1[...] += jnp.dot(z, q, preferred_element_type=jnp.float32)
+
+    @pl.when(p == 1)
+    def _pass1():
+        z = pl.load(z_buf, (pl.dslice(0, 1), pl.dslice(j * blk, blk)))
+        z = z - jnp.dot(p1[...], q.T, preferred_element_type=jnp.float32)
+        pl.store(z_buf, (pl.dslice(0, 1), pl.dslice(j * blk, blk)), z)
+        p2[...] += jnp.dot(z, q, preferred_element_type=jnp.float32)
+
+    @pl.when(p == 2)
+    def _pass2():
+        z = pl.load(z_buf, (pl.dslice(0, 1), pl.dslice(j * blk, blk)))
+        z = z - jnp.dot(p2[...], q.T, preferred_element_type=jnp.float32)
+        z_out[...] = z
+        nrm[...] += jnp.sum(z * z)
+
+    # nrm_out is revisited every step; the final write wins.
+    @pl.when((p == 2) & (j == f - 1))
+    def _fin():
+        nrm_out[...] = nrm[...]
+
+
+def _reorth_left_kernel(a_ref, v_ref, q_ref, z_out, nrm_out,
+                        z_buf, p1, p2, nrm, *, f: int, blk: int):
+    """grid = (3 passes, f row-blocks). A block (blk, H); Q block (blk, k)."""
+    p = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when((p == 0) & (j == 0))
+    def _init():
+        p1[...] = jnp.zeros_like(p1)
+        p2[...] = jnp.zeros_like(p2)
+        nrm[...] = jnp.zeros_like(nrm)
+
+    q = q_ref[...].astype(jnp.float32)            # (blk, k)
+
+    @pl.when(p == 0)
+    def _pass0():
+        a = a_ref[...].astype(jnp.float32)        # (blk, H)
+        v = v_ref[...].astype(jnp.float32)        # (1, H)
+        z = jnp.sum(a * v, axis=1)[:, None]       # (blk, 1) — local reduce
+        pl.store(z_buf, (pl.dslice(j * blk, blk), pl.dslice(0, 1)), z)
+        p1[...] += jnp.dot(z.T, q, preferred_element_type=jnp.float32)
+
+    @pl.when(p == 1)
+    def _pass1():
+        z = pl.load(z_buf, (pl.dslice(j * blk, blk), pl.dslice(0, 1)))
+        z = z - jnp.dot(q, p1[...].T, preferred_element_type=jnp.float32)
+        pl.store(z_buf, (pl.dslice(j * blk, blk), pl.dslice(0, 1)), z)
+        p2[...] += jnp.dot(z.T, q, preferred_element_type=jnp.float32)
+
+    @pl.when(p == 2)
+    def _pass2():
+        z = pl.load(z_buf, (pl.dslice(j * blk, blk), pl.dslice(0, 1)))
+        z = z - jnp.dot(q, p2[...].T, preferred_element_type=jnp.float32)
+        z_out[...] = z
+        nrm[...] += jnp.sum(z * z)
+
+    @pl.when((p == 2) & (j == f - 1))
+    def _fin():
+        nrm_out[...] = nrm[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("expansion", "interpret"))
+def reorth_right(a: jax.Array, u: jax.Array, v_buf: jax.Array,
+                 *, expansion: int = 8, interpret: bool = True):
+    """Fused  z = CGS2(Aᵀ·u, V)  → (z [H], ‖z‖² scalar).
+
+    ``expansion`` is the paper's f: the number of column-blocks the
+    reduction is expanded over.  H must divide by ``expansion``.
+    """
+    s_dim, h_dim = a.shape
+    k = v_buf.shape[-1]
+    assert h_dim % expansion == 0, (h_dim, expansion)
+    blk = h_dim // expansion
+    f = expansion
+
+    z, nrm = pl.pallas_call(
+        functools.partial(_reorth_right_kernel, f=f, blk=blk),
+        grid=(3, f),
+        in_specs=[
+            pl.BlockSpec((s_dim, blk), lambda p, j: (0, j)),   # A columns
+            pl.BlockSpec((s_dim, 1), lambda p, j: (0, 0)),     # u
+            pl.BlockSpec((blk, k), lambda p, j: (j, 0)),       # V rows
+        ],
+        out_specs=[
+            pl.BlockSpec((1, blk), lambda p, j: (0, j)),       # z
+            pl.BlockSpec((1, 1), lambda p, j: (0, 0)),         # ‖z‖²
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, h_dim), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, h_dim), jnp.float32),               # z intermediate
+            pltpu.VMEM((1, k), jnp.float32),                   # p1 = Qᵀz
+            pltpu.VMEM((1, k), jnp.float32),                   # p2
+            pltpu.VMEM((1, 1), jnp.float32),                   # norm acc
+        ],
+        interpret=interpret,
+    )(a, u[:, None], v_buf)
+    return z[0], nrm[0, 0]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("expansion", "interpret"))
+def reorth_left(a: jax.Array, v: jax.Array, u_buf: jax.Array,
+                *, expansion: int = 8, interpret: bool = True):
+    """Fused  w = CGS2(A·v, U)  → (w [S], ‖w‖² scalar).  S % expansion == 0."""
+    s_dim, h_dim = a.shape
+    k = u_buf.shape[-1]
+    assert s_dim % expansion == 0, (s_dim, expansion)
+    blk = s_dim // expansion
+    f = expansion
+
+    z, nrm = pl.pallas_call(
+        functools.partial(_reorth_left_kernel, f=f, blk=blk),
+        grid=(3, f),
+        in_specs=[
+            pl.BlockSpec((blk, h_dim), lambda p, j: (j, 0)),   # A rows
+            pl.BlockSpec((1, h_dim), lambda p, j: (0, 0)),     # v
+            pl.BlockSpec((blk, k), lambda p, j: (j, 0)),       # U rows
+        ],
+        out_specs=[
+            pl.BlockSpec((blk, 1), lambda p, j: (j, 0)),       # w
+            pl.BlockSpec((1, 1), lambda p, j: (0, 0)),         # ‖w‖²
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s_dim, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((s_dim, 1), jnp.float32),
+            pltpu.VMEM((1, k), jnp.float32),
+            pltpu.VMEM((1, k), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a, v[None, :], u_buf)
+    return z[:, 0], nrm[0, 0]

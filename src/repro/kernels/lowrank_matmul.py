@@ -1,0 +1,65 @@
+"""Preserved-compute GEMM  Vᵀ*[k, N] = Vᵀ[k, H] @ W[H, N]  (paper Eq. 6).
+
+The preserved matmul has a *skinny* left operand (k ≤ 32 rows): arithmetic
+intensity is ~k FLOPs/byte of W, so for small ranks it is memory-bound on W
+exactly like the Lanczos vector chain.  The same expansion treatment
+applies: the H reduction is split into ``f`` VMEM-resident blocks streamed
+while the previous block multiplies on the MXU; N is tiled independently so
+W is read exactly once.
+
+Block shapes are MXU-friendly: the k dimension is zero-padded to a multiple
+of 8 sublanes by the wrapper; H/N blocks default to 512/512 (fp32: 8 VMEM
+tiles each).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lr_matmul_kernel(vt_ref, w_ref, o_ref):
+    """grid = (N-blocks, f) — H reduction sequential in the last dim."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(vt_ref[...].astype(jnp.float32),
+                          w_ref[...].astype(jnp.float32),
+                          preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("expansion", "n_block",
+                                             "interpret"))
+def lowrank_matmul(vt: jax.Array, w: jax.Array, *, expansion: int = 8,
+                   n_block: int = 512, interpret: bool = True) -> jax.Array:
+    """Vᵀ[k,H] @ W[H,N] → [k,N] with f-way expanded H reduction."""
+    k, h_dim = vt.shape
+    h2, n_dim = w.shape
+    assert h_dim == h2
+    assert h_dim % expansion == 0
+    blk = h_dim // expansion
+    nb = min(n_block, n_dim)
+    assert n_dim % nb == 0
+
+    # Pad k to a sublane multiple so the MXU tile is well-formed.
+    k_pad = max(8, (k + 7) // 8 * 8)
+    if k_pad != k:
+        vt = jnp.pad(vt, ((0, k_pad - k), (0, 0)))
+
+    out = pl.pallas_call(
+        _lr_matmul_kernel,
+        grid=(n_dim // nb, expansion),
+        in_specs=[
+            pl.BlockSpec((k_pad, blk), lambda i, j: (0, j)),
+            pl.BlockSpec((blk, nb), lambda i, j: (j, i)),
+        ],
+        out_specs=pl.BlockSpec((k_pad, nb), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((k_pad, n_dim), jnp.float32),
+        interpret=interpret,
+    )(vt, w)
+    return out[:k]

@@ -1,0 +1,118 @@
+"""Jit'd public wrappers around the Pallas kernels + Lanczos hook factory.
+
+``INTERPRET`` defaults to True because this container is CPU-only; on a real
+TPU deployment set ``repro.kernels.ops.INTERPRET = False`` (or pass
+``interpret=False``) and the same BlockSpecs compile via Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.lanczos import LanczosHooks
+from . import dkv_attention as _dkv, lanczos_reorth, \
+    lowrank_matmul as _lrmm, matvec_expand, outlier_extract, ssd_chunk
+
+INTERPRET = True
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+def matvec(a, v, *, expansion: int = 8, interpret: Optional[bool] = None):
+    a, s = _pad_to(a, 0, 8)
+    a, _ = _pad_to(a, 1, expansion)
+    v, _ = _pad_to(v, 0, expansion)
+    y = matvec_expand.matvec(a, v, expansion=expansion, row_block=min(512, a.shape[0]),
+                             interpret=INTERPRET if interpret is None else interpret)
+    return y[:s]
+
+
+def rmatvec(a, u, *, expansion: int = 8, interpret: Optional[bool] = None):
+    a, _ = _pad_to(a, 0, expansion)
+    a, h = _pad_to(a, 1, 128)
+    u, _ = _pad_to(u, 0, expansion)
+    z = matvec_expand.rmatvec(a, u, expansion=expansion, col_block=min(512, a.shape[1]),
+                              interpret=INTERPRET if interpret is None else interpret)
+    return z[:h]
+
+
+def reorth_right(a, u, v_buf, *, expansion: int = 8,
+                 interpret: Optional[bool] = None):
+    interp = INTERPRET if interpret is None else interpret
+    return lanczos_reorth.reorth_right(a, u, v_buf, expansion=expansion,
+                                       interpret=interp)
+
+
+def reorth_left(a, v, u_buf, *, expansion: int = 8,
+                interpret: Optional[bool] = None):
+    interp = INTERPRET if interpret is None else interpret
+    return lanczos_reorth.reorth_left(a, v, u_buf, expansion=expansion,
+                                      interpret=interp)
+
+
+def lowrank_matmul(vt, w, *, expansion: int = 8,
+                   interpret: Optional[bool] = None):
+    interp = INTERPRET if interpret is None else interpret
+    return _lrmm.lowrank_matmul(vt, w, expansion=expansion, interpret=interp)
+
+
+def outlier_stats(x, threshold, *, expansion: int = 8,
+                  interpret: Optional[bool] = None):
+    interp = INTERPRET if interpret is None else interpret
+    return outlier_extract.outlier_stats(x, threshold, expansion=expansion,
+                                         interpret=interp)
+
+
+def dkv_attention_stats(inner, k_u, v_u, *, expansion: int = 8,
+                        interpret: Optional[bool] = None):
+    interp = INTERPRET if interpret is None else interpret
+    return _dkv.dkv_attention_stats(inner, k_u, v_u, expansion=expansion,
+                                    interpret=interp)
+
+
+merge_with_tail = _dkv.merge_with_tail
+
+
+def ssd_chunk_intra(cb, l, dt, x, *, head_block: int = 4,
+                    interpret: Optional[bool] = None):
+    interp = INTERPRET if interpret is None else interpret
+    return ssd_chunk.ssd_chunk_intra(cb, l, dt, x, head_block=head_block,
+                                     interpret=interp)
+
+
+# ---------------------------------------------------------------------------
+# Lanczos hook factory: plugs the fused Pallas steps into core.lanczos
+# ---------------------------------------------------------------------------
+
+def make_pallas_hooks(expansion: int = 8,
+                      interpret: Optional[bool] = None) -> LanczosHooks:
+    """LanczosHooks whose inner steps run the fused D-com kernel.
+
+    Shapes must divide by ``expansion`` (callers pad); normalization stays in
+    ``core.lanczos`` (the kernels return unnormalized vectors; the returned
+    ‖z‖² is dropped here because _safe_normalize recomputes it — O(H)).
+    """
+    interp = INTERPRET if interpret is None else interpret
+
+    def right_step(a, u, v_buf):
+        z, _ = lanczos_reorth.reorth_right(a, u, v_buf, expansion=expansion,
+                                           interpret=interp)
+        return z
+
+    def left_step(a, v, u_buf):
+        w, _ = lanczos_reorth.reorth_left(a, v, u_buf, expansion=expansion,
+                                          interpret=interp)
+        return w
+
+    return LanczosHooks(right_step=right_step, left_step=left_step)

@@ -1,0 +1,65 @@
+"""Channel-wise outlier statistics kernel (paper §4).
+
+Produces, per channel h of the activation X[S, H]:
+  * ``count[h]``  — number of elements with |x| > T,
+  * ``maxabs[h]`` — channel max |x| (the selection tiebreak).
+
+One streaming pass over X: grid = (H-blocks, f) with the S reduction
+expanded f ways; counts/max accumulate in the revisited output block.  The
+top-C selection and gather/scatter stay outside the kernel (jnp.top_k /
+take) — they touch only C ≈ 0.03·H channels and are not a bottleneck, which
+is exactly why the paper chose channel granularity.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _outlier_kernel(x_ref, t_ref, cnt_ref, mx_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+        mx_ref[...] = jnp.zeros_like(mx_ref)
+
+    a = jnp.abs(x_ref[...].astype(jnp.float32))          # (Sb, Hb)
+    t = t_ref[0, 0]
+    cnt_ref[...] += jnp.sum((a > t).astype(jnp.float32), axis=0)[None, :]
+    mx_ref[...] = jnp.maximum(mx_ref[...], jnp.max(a, axis=0)[None, :])
+
+
+@functools.partial(jax.jit, static_argnames=("expansion", "col_block",
+                                             "interpret"))
+def outlier_stats(x: jax.Array, threshold: jax.Array, *, expansion: int = 8,
+                  col_block: int = 512, interpret: bool = True):
+    """(counts[H] float32, maxabs[H] float32) for |x| > threshold."""
+    s_dim, h_dim = x.shape
+    assert s_dim % expansion == 0
+    blk = s_dim // expansion
+    cb = min(col_block, h_dim)
+    assert h_dim % cb == 0
+
+    t = jnp.asarray(threshold, jnp.float32).reshape(1, 1)
+    cnt, mx = pl.pallas_call(
+        _outlier_kernel,
+        grid=(h_dim // cb, expansion),
+        in_specs=[
+            pl.BlockSpec((blk, cb), lambda i, j: (j, i)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, cb), lambda i, j: (0, i)),
+            pl.BlockSpec((1, cb), lambda i, j: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, h_dim), jnp.float32),
+            jax.ShapeDtypeStruct((1, h_dim), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, t)
+    return cnt[0], mx[0]

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matvec(a: jax.Array, v: jax.Array) -> jax.Array:
+    return a.astype(jnp.float32) @ v.astype(jnp.float32)
+
+
+def rmatvec(a: jax.Array, u: jax.Array) -> jax.Array:
+    return a.astype(jnp.float32).T @ u.astype(jnp.float32)
+
+
+def _cgs2(z: jax.Array, q: jax.Array) -> jax.Array:
+    z = z - q @ (q.T @ z)
+    z = z - q @ (q.T @ z)
+    return z
+
+
+def reorth_right(a: jax.Array, u: jax.Array, v_buf: jax.Array):
+    """z = CGS2(Aᵀu, V); returns (z, ‖z‖²)."""
+    z = _cgs2(rmatvec(a, u), v_buf.astype(jnp.float32))
+    return z, jnp.sum(z * z)
+
+
+def reorth_left(a: jax.Array, v: jax.Array, u_buf: jax.Array):
+    """w = CGS2(Av, U); returns (w, ‖w‖²)."""
+    w = _cgs2(matvec(a, v), u_buf.astype(jnp.float32))
+    return w, jnp.sum(w * w)
+
+
+def lowrank_matmul(vt: jax.Array, w: jax.Array) -> jax.Array:
+    return vt.astype(jnp.float32) @ w.astype(jnp.float32)
+
+
+def outlier_stats(x: jax.Array, threshold):
+    a = jnp.abs(x.astype(jnp.float32))
+    cnt = jnp.sum((a > threshold).astype(jnp.float32), axis=0)
+    mx = jnp.max(a, axis=0)
+    return cnt, mx
+
+
+def dkv_attention_stats(inner, k_u, v_u):
+    """Oracle for kernels.dkv_attention: full-score softmax stats."""
+    s = inner.astype(jnp.float32) @ k_u.astype(jnp.float32).T   # [g, T]
+    m = jnp.max(s, axis=1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=1, keepdims=True)
+    a = p @ v_u.astype(jnp.float32)                              # [g, r]
+    return a, m, l
+
+
+def ssd_chunk_intra(cb, l, dt, x):
+    """Oracle for kernels.ssd_chunk: materialized masked-decay einsum."""
+    q = cb.shape[-1]
+    decay = jnp.exp(l[:, :, None, :] - l[:, None, :, :])     # [G,Q,Q,nh]
+    tril = jnp.tril(jnp.ones((q, q), bool))[None, :, :, None]
+    m = cb[..., None] * jnp.where(tril, decay, 0.0) * dt[:, None, :, :]
+    return jnp.einsum("gqsn,gsnd->gqnd", m, x.astype(jnp.float32))

@@ -1,0 +1,79 @@
+"""Fused intra-chunk SSD kernel (mamba2 hot-spot; flagged in models/mamba2).
+
+The pure-JAX chunked SSD materializes the masked decay tensor
+``M[b,c,q,s,n] = (C_q·B_s)·exp(l_q−l_s)·dt_s`` — the measured memory
+hot-spot of the mamba2/zamba2 train cells (EXPERIMENTS.md §Perf bonus:
+chunk-size U-shape).  This kernel fuses mask, decay, gating and the
+``M @ X`` contraction per (chunk, head-block) grid cell so M lives only as
+a [Q, Q] VMEM tile per head — HBM sees inputs and the [Q, hd] output
+exactly once.
+
+Grid = (batch·chunks, head-blocks); per cell:
+    cb    [Q, Q]   = C_chunk · B_chunkᵀ          (precomputed outside: it is
+                                                  head-independent)
+    l, dt [Q, nhb] running log-decay / step size for the head block
+    x     [Q, nhb·hd] chunk inputs
+    y     [Q, nhb·hd] = Σ_s tril(cb · exp(l_q − l_s) · dt_s) x_s
+
+The inter-chunk state recurrence stays outside (tiny, sequential).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(cb_ref, l_ref, dt_ref, x_ref, y_ref, *, q: int,
+                      nhb: int, hd: int):
+    cb = cb_ref[0].astype(jnp.float32)                # [Q, Q]
+    l = l_ref[0].astype(jnp.float32)                  # [Q, nhb]
+    dt = dt_ref[0].astype(jnp.float32)                # [Q, nhb]
+    x = x_ref[0].astype(jnp.float32)                  # [Q, nhb·hd]
+
+    row = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    tril = row >= col
+
+    y = jnp.zeros((q, nhb * hd), jnp.float32)
+    for n in range(nhb):                              # nhb is small (static)
+        decay = jnp.exp(l[:, n][:, None] - l[:, n][None, :])
+        m = jnp.where(tril, cb * decay * dt[:, n][None, :], 0.0)  # [Q, Q]
+        xn = x[:, n * hd:(n + 1) * hd]                # [Q, hd]
+        y = y.at[:, n * hd:(n + 1) * hd].set(
+            jnp.dot(m, xn, preferred_element_type=jnp.float32))
+    y_ref[0] = y
+
+
+@functools.partial(jax.jit, static_argnames=("head_block", "interpret"))
+def ssd_chunk_intra(cb: jax.Array, l: jax.Array, dt: jax.Array,
+                    x: jax.Array, *, head_block: int = 4,
+                    interpret: bool = True) -> jax.Array:
+    """Intra-chunk SSD term, fused.
+
+    cb [G, Q, Q] (G = batch·chunks), l/dt [G, Q, nh], x [G, Q, nh, hd]
+    → y [G, Q, nh, hd].  nh % head_block == 0.
+    """
+    g, q, nh = l.shape
+    hd = x.shape[-1]
+    assert nh % head_block == 0, (nh, head_block)
+    nblk = nh // head_block
+    xf = x.reshape(g, q, nh * hd)
+
+    y = pl.pallas_call(
+        functools.partial(_ssd_chunk_kernel, q=q, nhb=head_block, hd=hd),
+        grid=(g, nblk),
+        in_specs=[
+            pl.BlockSpec((1, q, q), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, q, head_block), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, q, head_block), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, q, head_block * hd), lambda i, j: (i, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, q, head_block * hd),
+                               lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((g, q, nh * hd), jnp.float32),
+        interpret=interpret,
+    )(cb, l, dt, xf)
+    return y.reshape(g, q, nh, hd)

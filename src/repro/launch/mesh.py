@@ -1,0 +1,22 @@
+"""Production mesh construction (deliverable e).
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (the dry-run sets XLA_FLAGS before any jax init;
+smoke tests see 1 device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single-pod 16×16 ("data","model") or 2-pod 2×16×16 ("pod","data",
+    "model").  512 placeholder devices are required for multi_pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1×1 mesh on the real local device — smoke tests / examples."""
+    return jax.make_mesh((1, 1), ("data", "model"))

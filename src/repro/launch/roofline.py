@@ -1,0 +1,103 @@
+"""Pure roofline helpers (no jax device-state side effects on import).
+
+``launch.dryrun`` (which MUST set XLA_FLAGS before any jax import) re-uses
+these; tests import from here so the pytest process keeps its single
+device.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict
+
+# ---------------------------------------------------------------------------
+# TPU v5e hardware constants (roofline denominators)
+# ---------------------------------------------------------------------------
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "u64": 8, "s64": 8,
+                "u32": 4, "s32": 4, "u16": 2, "s16": 2, "u8": 1, "s8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# Ring-schedule per-device traffic multiplier relative to RESULT bytes
+# (documented convention, EXPERIMENTS.md §Roofline): all-reduce moves ~2×
+# payload per device; all-gather/reduce-scatter/all-to-all/permute ~1×.
+_RING_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Sum bytes over every shape literal in an HLO result type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Any]:
+    """Per-collective-type payload bytes + op counts from optimized HLO."""
+    stats = {k: {"bytes": 0, "count": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?\S+ = (\([^)]*\)|\S+) ([a-z\-]+)", line)
+        if not m:
+            continue
+        op = m.group(2)
+        # normalize fusion-start variants like "all-gather-start"
+        base = op.replace("-start", "").replace("-done", "")
+        if base in _COLLECTIVES and not op.endswith("-done"):
+            stats[base]["bytes"] += _shape_bytes(m.group(1))
+            stats[base]["count"] += 1
+    return stats
+
+
+def roofline_terms(flops_per_dev: float, hbm_bytes_per_dev: float,
+                   coll: Dict[str, Any]) -> Dict[str, float]:
+    """Three roofline terms in seconds (all PER-DEVICE quantities).
+
+    cost_analysis of the SPMD-partitioned module is per-device, so we divide
+    by single-chip peaks (equivalent to global/chips — see EXPERIMENTS.md).
+    """
+    coll_bytes = sum(v["bytes"] * _RING_FACTOR[k] for k, v in coll.items())
+    return {
+        "compute_s": flops_per_dev / PEAK_FLOPS,
+        "memory_s": hbm_bytes_per_dev / HBM_BW,
+        "collective_s": coll_bytes / ICI_BW,
+        "collective_bytes": coll_bytes,
+    }
+
+
+def probe_plan(cfg):
+    """[(probe_cfg, n_units)] ×2 + n_units_full for linear extrapolation of
+    while-body-undercounted costs (see dryrun.calibrate)."""
+    if cfg.family == "vlm":
+        per = cfg.cross_attn_period
+        mk = lambda g: cfg.replace(num_layers=g * per)
+        return [(mk(1), 1), (mk(2), 2)], cfg.num_layers // per
+    if cfg.family == "hybrid":
+        per = cfg.attn_period
+        mk = lambda g: cfg.replace(num_layers=g * per)
+        # tail mamba layers folded into the per-layer average (documented)
+        return [(mk(1), per), (mk(2), 2 * per)], cfg.num_layers
+    if cfg.family == "audio":
+        mk = lambda p: cfg.replace(num_layers=2 * p, enc_layers=p,
+                                   num_audio_frames=cfg.num_audio_frames)
+        return [(mk(1), 1), (mk(2), 2)], cfg.enc_layers
+    if cfg.family == "moe" and cfg.first_k_dense:
+        mk = lambda m: cfg.replace(num_layers=cfg.first_k_dense + m)
+        return [(mk(1), 1), (mk(2), 2)], cfg.num_layers - cfg.first_k_dense
+    mk = lambda n: cfg.replace(num_layers=n)
+    return [(mk(1), 1), (mk(2), 2)], cfg.num_layers

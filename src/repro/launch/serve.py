@@ -1,0 +1,48 @@
+"""Serving CLI: continuous-batching engine on a reduced config.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --requests 8
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from ..configs.base import get_arch
+from ..models import api
+from ..serving import Engine, Request
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch).reduced()
+    fns = api.model_fns(cfg)
+    params = fns.init(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, slots=args.slots, max_len=args.max_len)
+
+    rng = np.random.RandomState(0)
+    for i in range(args.requests):
+        eng.submit(Request(uid=i,
+                           prompt=rng.randint(0, cfg.vocab, args.prompt_len,
+                                              dtype=np.int32),
+                           max_new_tokens=args.max_new))
+    done = eng.run()
+    for r in sorted(done, key=lambda r: r.uid):
+        print(f"req {r.uid}: {r.out_tokens}")
+    s = eng.stats
+    print(f"stats: prefills={s.prefills} decode_steps={s.decode_steps} "
+          f"tokens={s.tokens_out} wall={s.wall_s:.2f}s "
+          f"tok/s={s.tokens_out / max(s.wall_s, 1e-9):.1f}")
+
+
+if __name__ == "__main__":
+    main()

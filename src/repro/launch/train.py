@@ -1,0 +1,42 @@
+"""Training CLI: fault-tolerant loop on reduced configs (CPU container) or
+full configs (real TPU deployment — same code path, bigger mesh).
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama2-7b --smoke \
+      --steps 100 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+from ..configs.base import ShapeSpec, get_arch
+from ..runtime.driver import train_loop
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    shape = ShapeSpec("cli", args.seq_len, args.batch, "train")
+    os.makedirs(args.ckpt_dir, exist_ok=True)
+    res = train_loop(cfg, shape, total_steps=args.steps,
+                     ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                     seed=args.seed)
+    print(f"done: step={res.step} final_loss={res.losses[-1]:.4f} "
+          f"restarts={res.restarts} stragglers={res.straggler_flags}")
+
+
+if __name__ == "__main__":
+    main()

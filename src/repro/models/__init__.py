@@ -1,0 +1,5 @@
+"""Model zoo: pure-JAX functional models for all assigned architectures."""
+from . import api, encdec, hybrid, layers, mamba2, moe, transformer, vlm
+from .api import (ModelFns, abstract_params, active_param_count,
+                  decode_input_specs, make_fake_batch, model_fns,
+                  param_count, prefill_input_specs, train_batch_specs)

@@ -1,0 +1,137 @@
+"""Unified per-family model API (used by launch/, serving/, tests/).
+
+``model_fns(cfg)`` returns a ``ModelFns`` with a common signature across the
+six families; ``input_specs(cfg, shape)`` builds ShapeDtypeStruct stand-ins
+for every input of the requested workload kind (the dry-run pattern — no
+device allocation ever happens for full configs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeSpec
+from . import encdec, hybrid, mamba2, moe, transformer, vlm
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelFns:
+    init: Callable                      # (key, cfg) -> params
+    loss_fn: Callable                   # (params, cfg, batch) -> scalar
+    prefill: Callable                   # (params, cfg, *inputs) -> (logits, cache)
+    decode_step: Callable               # (params, cfg, token, cache, pos)
+    init_cache: Callable                # (cfg, batch, max_len) -> cache
+    forward: Optional[Callable] = None
+
+
+_FAMILY = {
+    "dense": ModelFns(transformer.init, transformer.loss_fn,
+                      transformer.prefill, transformer.decode_step,
+                      transformer.init_cache, transformer.forward),
+    "moe": ModelFns(moe.init, moe.loss_fn, moe.prefill, moe.decode_step,
+                    moe.init_cache, moe.forward),
+    "ssm": ModelFns(mamba2.init, mamba2.loss_fn, mamba2.prefill,
+                    mamba2.decode_step,
+                    lambda cfg, b, m: mamba2.init_state(cfg, b),
+                    mamba2.forward),
+    "hybrid": ModelFns(hybrid.init, hybrid.loss_fn, hybrid.prefill,
+                       hybrid.decode_step, hybrid.init_state, hybrid.forward),
+    "vlm": ModelFns(vlm.init, vlm.loss_fn, vlm.prefill, vlm.decode_step,
+                    vlm.init_cache, vlm.forward),
+    "audio": ModelFns(encdec.init, encdec.loss_fn, encdec.prefill,
+                      encdec.decode_step, encdec.init_cache, encdec.forward),
+}
+
+
+def model_fns(cfg: ArchConfig) -> ModelFns:
+    return _FAMILY[cfg.family]
+
+
+def abstract_params(cfg: ArchConfig):
+    """Parameter ShapeDtypeStructs without allocating anything."""
+    fns = model_fns(cfg)
+    return jax.eval_shape(lambda k: fns.init(k, cfg), jax.random.PRNGKey(0))
+
+
+def param_count(cfg: ArchConfig) -> int:
+    import math
+    shapes = abstract_params(cfg)
+    return sum(math.prod(l.shape)
+               for l in jax.tree_util.tree_leaves(shapes))
+
+
+def active_param_count(cfg: ArchConfig) -> int:
+    """Matmul-active params per token for the 6·N·D MODEL_FLOPS convention:
+    MoE counts top_k of num_experts; the input embedding is excluded when
+    untied (pure gather — no FLOPs), kept once when tied (it IS the head)."""
+    total = param_count(cfg)
+    if not cfg.tie_embeddings:
+        total -= cfg.padded_vocab * cfg.d_model      # gather-only embed table
+    if not cfg.num_experts:
+        return total
+    n_moe_layers = cfg.num_layers - cfg.first_k_dense
+    expert_params = 3 * cfg.d_model * cfg.moe_d_ff
+    inactive = n_moe_layers * (cfg.num_experts - cfg.top_k) * expert_params
+    return total - inactive
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins, per workload kind)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    specs = {"tokens": _sds((b, s), jnp.int32),
+             "labels": _sds((b, s), jnp.int32)}
+    if cfg.family == "vlm":
+        specs["image_embeds"] = _sds((b, cfg.num_image_tokens, cfg.d_model),
+                                     cfg.jax_dtype)
+    if cfg.family == "audio":
+        specs["frames"] = _sds((b, s, cfg.d_model), cfg.jax_dtype)
+    return specs
+
+
+def prefill_input_specs(cfg: ArchConfig, shape: ShapeSpec):
+    """Positional inputs of fns.prefill after (params, cfg)."""
+    b, s = shape.global_batch, shape.seq_len
+    tokens = _sds((b, s), jnp.int32)
+    if cfg.family == "vlm":
+        return (tokens, _sds((b, cfg.num_image_tokens, cfg.d_model),
+                             cfg.jax_dtype))
+    if cfg.family == "audio":
+        return (_sds((b, s, cfg.d_model), cfg.jax_dtype), tokens)
+    return (tokens,)
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeSpec):
+    """(token, cache, pos) specs for fns.decode_step."""
+    b, s = shape.global_batch, shape.seq_len
+    fns = model_fns(cfg)
+    cache = jax.eval_shape(lambda: fns.init_cache(cfg, b, s))
+    return (_sds((b,), jnp.int32), cache, _sds((b,), jnp.int32))
+
+
+def make_fake_batch(cfg: ArchConfig, shape: ShapeSpec, key=None
+                    ) -> Dict[str, Array]:
+    """Concrete synthetic batch matching train_batch_specs (smoke/examples)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    specs = train_batch_specs(cfg, shape)
+    out: Dict[str, Array] = {}
+    for name, sp in sorted(specs.items()):
+        key, sub = jax.random.split(key)
+        if jnp.issubdtype(sp.dtype, jnp.integer):
+            out[name] = jax.random.randint(sub, sp.shape, 0, cfg.vocab,
+                                           sp.dtype)
+        else:
+            out[name] = jax.random.normal(sub, sp.shape, jnp.float32) \
+                .astype(sp.dtype)
+    return out

@@ -1,0 +1,225 @@
+"""Decomposed-execution integration layer — the paper's technique wired into
+the model zoo (paper Figs. 1, 5, 6).
+
+For every layer the :class:`~repro.core.policy.DecompositionPolicy` selects,
+the block input is (a) outlier-extracted channel-wise (§4), (b) decomposed by
+batched Lanczos bidiagonalization (§2.3), and (c) consumed by the layer's
+GEMMs in decomposition-preserved form (§3.2):
+
+* QKV projections: ``lowrank_matmul`` (Eq. 6) — or
+  ``lowrank_x_lowrank_weight`` (Eq. 7) when the policy also decomposes the
+  weights (Table 3 mode; weight factors are produced OFFLINE by
+  :func:`decompose_layer_weights`).
+* Attention scores / PV: two modes —
+  - ``attn_mode="dense"`` (default): Q/K/V reconstructed per head, RoPE
+    applied, chunked dense attention.  Exact numerics; savings come from the
+    rank-k projections (this is what the quality benchmarks use).
+  - ``attn_mode="preserved"``: QKᵀ and P·V contracted *through the factors*
+    (S·S·k instead of S·S·dh) — the paper's "keep inputs decomposed for all
+    matmuls within a layer".  RoPE cannot be folded into a
+    position-independent Vᵀ factor, so this mode skips RoPE inside
+    decomposed layers (NoPE approximation; the trade-off is measured in
+    benchmarks, recorded in DESIGN.md §2).
+* MLP: up/gate as preserved matmuls, reconstruct at the nonlinearity
+  (non-GEMM boundary, paper Fig. 6), dense down-projection.
+
+The residual stream stays dense at block boundaries (paper's best configs
+decompose non-adjacent layers, so cross-layer preserved chains don't arise;
+the pure matmul-chain path of Eq. 6/7 is exercised directly by
+``benchmarks/fig11_layer_runtime``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core import lanczos as lz
+from ..core import outlier as ol
+from ..core.policy import DecompositionPolicy, LayerPolicy
+from ..core.lowrank import LowRank, add_bias_rank
+from ..core.preserved import (decompose_weight, lowrank_matmul,
+                              lowrank_x_lowrank_weight, preserved_pv,
+                              preserved_qk_scores)
+from . import layers as L
+from . import transformer as T
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class DecomposedRuntime:
+    """Runtime configuration for decomposed execution."""
+    policy: DecompositionPolicy
+    attn_mode: str = "dense"             # "dense" | "preserved"
+    hooks: Any = None                    # LanczosHooks (None → jnp reference)
+
+    def layer(self, i: int) -> LayerPolicy:
+        return self.policy.layer(i)
+
+
+# ---------------------------------------------------------------------------
+# Activation decomposition (outliers + Lanczos), batched
+# ---------------------------------------------------------------------------
+
+def decompose_activation(x: Array, lp: LayerPolicy, threshold: float,
+                         hooks=None) -> LowRank:
+    """x [B, S, H] → LowRank with dense outlier channel track.
+
+    Each prompt decomposes independently (paper §3.1); outlier channel count
+    is the static ``round(outlier_frac · H)``.
+    """
+    h_dim = x.shape[-1]
+    num_c = max(1, round(lp.outlier_frac * h_dim)) if lp.outlier_frac > 0 \
+        else 0
+    x32 = x.astype(jnp.float32)
+    kw = {} if hooks is None else {"hooks": hooks}
+    if num_c:
+        base, vals, idx = ol.extract(x32, jnp.asarray(threshold, jnp.float32),
+                                     num_c)
+    else:
+        base = x32
+    lr = lz.decompose(base, lp.rank, iters=lp.effective_iters, **kw)
+    lr = lr.astype(x.dtype)
+    if num_c:
+        lr = ol.attach_dense_outliers(lr, vals.astype(x.dtype), idx)
+    return lr
+
+
+# ---------------------------------------------------------------------------
+# Offline weight decomposition (Table 3 mode)
+# ---------------------------------------------------------------------------
+
+WEIGHT_KEYS = ("wq", "wk", "wv")        # attention in-projections
+MLP_KEYS = ("up", "gate")
+
+
+def decompose_layer_weights(params: Params, cfg,
+                            policy: DecompositionPolicy) -> Dict[int, Params]:
+    """Offline: per decomposed layer, factor the in-projection weights.
+
+    Returns {layer_idx: {"attn": {wq/wk/wv: LowRank}, "mlp": {...}}}.
+    Layer params are stacked [L, ...]; we slice per layer.
+    """
+    out: Dict[int, Params] = {}
+    for i in policy.decomposed_layers():
+        lp = policy.layer(i)
+        if not lp.decompose_weights:
+            continue
+        layer = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+        fac: Params = {"attn": {}, "mlp": {}}
+        for kname in WEIGHT_KEYS:
+            fac["attn"][kname] = decompose_weight(
+                layer["attn"][kname]["w"], lp.weight_rank)
+        for kname in MLP_KEYS:
+            if kname in layer["mlp"]:
+                fac["mlp"][kname] = decompose_weight(
+                    layer["mlp"][kname]["w"], lp.weight_rank)
+        out[i] = fac
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decomposed dense-transformer block
+# ---------------------------------------------------------------------------
+
+def _proj(lr: LowRank, wp: Params, wfac: Optional[LowRank]) -> LowRank:
+    if wfac is not None:
+        y = lowrank_x_lowrank_weight(lr, wfac)
+        if "b" in wp:
+            y = add_bias_rank(y, wp["b"])   # exact rank-1 bias fold
+        return y
+    return lowrank_matmul(lr, wp["w"], bias=wp.get("b"))
+
+
+def decomposed_block(p: Params, x: Array, positions: Array, cfg,
+                     lp: LayerPolicy, threshold: float,
+                     wfac: Optional[Params] = None,
+                     attn_mode: str = "dense", hooks=None) -> Array:
+    """One transformer block executed in decomposed form per ``lp``."""
+    nh, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    b, s, _ = x.shape
+
+    # ---- attention path -------------------------------------------------
+    h1 = T._norm(p["attn_norm"], x, cfg)
+    lr = decompose_activation(h1, lp, threshold, hooks)
+
+    wf = (wfac or {}).get("attn", {})
+    q_lr = _proj(lr, p["attn"]["wq"], wf.get("wq"))
+    k_lr = _proj(lr, p["attn"]["wk"], wf.get("wk"))
+    v_lr = _proj(lr, p["attn"]["wv"], wf.get("wv"))
+
+    if attn_mode == "preserved":
+        # Paper's preserved QKᵀ/PV contractions (NoPE inside the layer).
+        sc = preserved_qk_scores(q_lr, k_lr, nh, hd ** -0.5, kvh)
+        mask = positions[..., None] >= positions[..., None, :]
+        sc = jnp.where(mask[:, None, :, :], sc.astype(jnp.float32), -1e30)
+        pr = jax.nn.softmax(sc, axis=-1)
+        attn_out = preserved_pv(pr, v_lr, nh, kvh).astype(x.dtype)
+    else:
+        q = L._split_heads(q_lr.reconstruct(), nh)
+        k = L._split_heads(k_lr.reconstruct(), kvh)
+        v = L._split_heads(v_lr.reconstruct(), kvh)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        attn_out = L.attend(q, k, v, positions, out_dtype=x.dtype)
+
+    x = x + L.dense(p["attn"]["wo"], attn_out)
+
+    # ---- MLP path --------------------------------------------------------
+    h2 = T._norm(p["mlp_norm"], x, cfg)
+    lr2 = decompose_activation(h2, lp, threshold, hooks)
+    wfm = (wfac or {}).get("mlp", {})
+    up = _proj(lr2, p["mlp"]["up"], wfm.get("up")).reconstruct()
+    act = L.activation_fn(cfg.activation)
+    if "gate" in p["mlp"]:
+        gate = _proj(lr2, p["mlp"]["gate"], wfm.get("gate")).reconstruct()
+        hidden = act(gate) * up
+    else:
+        hidden = act(up)
+    x = x + L.dense(p["mlp"]["down"], hidden.astype(x.dtype))
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Whole-model decomposed forward (dense family)
+# ---------------------------------------------------------------------------
+
+def forward(params: Params, cfg, tokens: Array, runtime: DecomposedRuntime,
+            wfactors: Optional[Dict[int, Params]] = None) -> Array:
+    """Dense-LM forward with per-layer policy-selected decomposed execution.
+
+    Python-level layer loop (policies differ per layer); decomposed layers
+    run :func:`decomposed_block`, the rest the standard block.
+    """
+    x = params["embed"]["w"][tokens] * jnp.asarray(
+        cfg.d_model ** 0.5 if cfg.tie_embeddings else 1.0, cfg.jax_dtype)
+    positions = jnp.broadcast_to(jnp.arange(tokens.shape[1]), tokens.shape)
+
+    for i in range(cfg.num_layers):
+        layer = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+        pol = runtime.layer(i)
+        if pol.decompose:
+            thr = runtime.policy.thresholds.get(i)
+            x = decomposed_block(layer, x, positions, cfg, pol, thr,
+                                 (wfactors or {}).get(i),
+                                 runtime.attn_mode, runtime.hooks)
+        else:
+            x = T.block(layer, x, positions, cfg)
+    return T.logits_head(params, x, cfg)
+
+
+def logit_kl(params: Params, cfg, tokens: Array,
+             runtime: DecomposedRuntime,
+             wfactors: Optional[Dict[int, Params]] = None) -> Array:
+    """KL(base ‖ decomposed) over the vocab — the container-feasible stand-in
+    for the paper's arc_easy/wikitext quality metrics (see DESIGN.md §6)."""
+    base = jax.nn.log_softmax(
+        T.forward(params, cfg, tokens).astype(jnp.float32), axis=-1)
+    dec = jax.nn.log_softmax(
+        forward(params, cfg, tokens, runtime, wfactors).astype(jnp.float32),
+        axis=-1)
+    return jnp.mean(jnp.sum(jnp.exp(base) * (base - dec), axis=-1))

@@ -1,0 +1,202 @@
+"""Decomposed KV cache — the paper's activation decomposition applied to
+serving memory (beyond-paper §Perf feature).
+
+Decode is KV-bandwidth-bound: every step re-reads the whole [T, kvh·hd]
+cache.  K and V are activations, so D-com's machinery applies directly:
+after prefill, each layer's K/V is Lanczos-decomposed into
+(U [B, T, r], Vᵀ [B, r, kvh·hd]); per decode step the attention contracts
+THROUGH the factors —
+
+  scores = (q · Vᵀ_kᵀ) · Uᵀ_k        (r·d + T·r  vs  T·d  per head-group)
+  out    = ((p · U_v) · Vᵀ_v)
+
+so cache bytes read per step shrink by ~d_kv/r (Eq. 10 applied to the KV
+stream).  New tokens append to a small DENSE TAIL (exact attention over
+recent context); the serving engine re-compresses the tail into the
+low-rank prefix on a fixed cadence (rank-concat + retruncate, amortized) —
+mirroring the paper's "decomposition once, consumed many times" economics.
+
+Approximation surface: the low-rank prefix (rank r of the RoPE'd K/V rows).
+``prefill_dkv`` at full rank reproduces dense attention exactly
+(tests/test_decomposed_kv.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import lanczos as lz
+from . import layers as L
+from . import transformer as T
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+TAIL = 128                      # dense recent-token buffer length
+
+
+def init_cache(cfg, batch: int, frozen_len: int, rank: int,
+               tail: int = TAIL) -> Params:
+    kvw = cfg.num_kv_heads * cfg.resolved_head_dim
+    nl, dt = cfg.num_layers, cfg.jax_dtype
+    z = jnp.zeros
+    return {
+        "k_u": z((nl, batch, frozen_len, rank), dt),
+        "k_vt": z((nl, batch, rank, kvw), dt),
+        "v_u": z((nl, batch, frozen_len, rank), dt),
+        "v_vt": z((nl, batch, rank, kvw), dt),
+        "tail": {"k": z((nl, batch, tail, cfg.num_kv_heads,
+                         cfg.resolved_head_dim), dt),
+                 "v": z((nl, batch, tail, cfg.num_kv_heads,
+                         cfg.resolved_head_dim), dt)},
+    }
+
+
+def _decompose_kv(x: Array, rank: int, iters: Optional[int] = None,
+                  exact: bool = False) -> Tuple[Array, Array]:
+    """x [B, T, kvw] → (U [B, T, r], Vᵀ [B, r, kvw]).
+
+    Lanczos (the paper's production path) for r ≪ min(T, kvw); ``exact``
+    switches to direct SVD — used when r approaches full rank, where
+    floating-point Lanczos loses trailing directions (§2.3: Lanczos is the
+    small-rank algorithm)."""
+    if exact:
+        from ..core.lowrank import from_dense_svd
+        lr = from_dense_svd(x.astype(jnp.float32), rank)
+    else:
+        lr = lz.decompose(x.astype(jnp.float32), rank,
+                          iters=iters or min(rank + 8, min(x.shape[-2:])))
+    return lr.scaled_u().astype(x.dtype), lr.vt.astype(x.dtype)
+
+
+def prefill_dkv(p: Params, cfg, tokens: Array, rank: int,
+                tail: int = TAIL, exact: bool = False) -> Tuple[Array, Params]:
+    """Dense-family prefill that emits a decomposed KV cache."""
+    b, s = tokens.shape
+    logits, dense_cache = T.prefill(p, cfg, tokens, s)
+    kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+
+    def one(kv):
+        flat = kv.reshape(cfg.num_layers * b, s, kvh * hd)
+        u, vt = _decompose_kv(flat, rank, exact=exact)
+        return (u.reshape(cfg.num_layers, b, s, rank),
+                vt.reshape(cfg.num_layers, b, rank, kvh * hd))
+
+    k_u, k_vt = one(dense_cache["k"])
+    v_u, v_vt = one(dense_cache["v"])
+    z = jnp.zeros((cfg.num_layers, b, tail, kvh, hd), cfg.jax_dtype)
+    return logits, {"k_u": k_u, "k_vt": k_vt, "v_u": v_u, "v_vt": v_vt,
+                    "tail": {"k": z, "v": z}}
+
+
+def _lowrank_attention(q: Array, c: Params, tail_kv: Params,
+                       pos: Array, frozen_len: int, cfg) -> Array:
+    """q [B, 1, nh, d]; low-rank prefix + dense tail → out [B, 1, nh·d]."""
+    nh, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    g = nh // kvh
+    b = q.shape[0]
+    scale = hd ** -0.5
+    qg = q[:, 0].reshape(b, kvh, g, hd).astype(jnp.float32)
+
+    # ---- prefix scores through the factors ------------------------------
+    k_vt = c["k_vt"].astype(jnp.float32).reshape(b, -1, kvh, hd)
+    inner = jnp.einsum("bkgd,brkd->bkgr", qg, k_vt)          # [B,kvh,g,r]
+    sc_pre = jnp.einsum("bkgr,btr->bkgt", inner,
+                        c["k_u"].astype(jnp.float32)) * scale
+
+    # ---- tail scores (exact) ---------------------------------------------
+    tk = tail_kv["k"].astype(jnp.float32)                     # [B,tl,kvh,hd]
+    sc_tail = jnp.einsum("bkgd,btkd->bkgt", qg, tk) * scale
+    tail_pos = frozen_len + jnp.arange(tk.shape[1])[None, :]
+    valid = tail_pos <= pos[:, None]                          # [B, tl]
+    sc_tail = jnp.where(valid[:, None, None, :], sc_tail, -1e30)
+
+    # ---- joint softmax -----------------------------------------------------
+    sc = jnp.concatenate([sc_pre, sc_tail], axis=-1)
+    pr = jax.nn.softmax(sc, axis=-1)
+    p_pre, p_tail = pr[..., :frozen_len], pr[..., frozen_len:]
+
+    # ---- PV through the factors -------------------------------------------
+    tmp = jnp.einsum("bkgt,btr->bkgr", p_pre,
+                     c["v_u"].astype(jnp.float32))
+    v_vt = c["v_vt"].astype(jnp.float32).reshape(b, -1, kvh, hd)
+    out = jnp.einsum("bkgr,brkd->bkgd", tmp, v_vt)
+    out = out + jnp.einsum("bkgt,btkd->bkgd", p_tail,
+                           tail_kv["v"].astype(jnp.float32))
+    return out.reshape(b, 1, nh * hd)
+
+
+def decode_step_dkv(p: Params, cfg, token: Array, cache: Params,
+                    pos: Array, frozen_len: int) -> Tuple[Array, Params]:
+    """One-token decode over the decomposed cache (dense transformer)."""
+    x = p["embed"]["w"][token][:, None, :] * jnp.asarray(
+        cfg.d_model ** 0.5 if cfg.tie_embeddings else 1.0, cfg.jax_dtype)
+    kvh = cfg.num_kv_heads
+
+    def scan_fn(x, inp):
+        lp, ku, kvt, vu, vvt, tail = inp
+        h = T._norm(lp["attn_norm"], x, cfg)
+        q = L._split_heads(L.dense(lp["attn"]["wq"], h), cfg.num_heads)
+        k_new = L._split_heads(L.dense(lp["attn"]["wk"], h), kvh)
+        v_new = L._split_heads(L.dense(lp["attn"]["wv"], h), kvh)
+        q = L.apply_rope(q, pos[:, None], cfg.rope_theta)
+        k_new = L.apply_rope(k_new, pos[:, None], cfg.rope_theta)
+
+        slot = pos - frozen_len                       # tail write position
+        upd = lambda buf, new: jax.vmap(
+            lambda bb, nn, ss: jax.lax.dynamic_update_slice_in_dim(
+                bb, nn, ss, axis=0))(buf, new.astype(buf.dtype), slot)
+        tail = {"k": upd(tail["k"], k_new), "v": upd(tail["v"], v_new)}
+
+        layer_c = {"k_u": ku, "k_vt": kvt, "v_u": vu, "v_vt": vvt}
+        a = _lowrank_attention(q, layer_c, tail, pos, frozen_len, cfg)
+        x = x + L.dense(lp["attn"]["wo"], a.astype(x.dtype))
+        x = x + L.mlp(lp["mlp"], T._norm(lp["mlp_norm"], x, cfg),
+                      cfg.activation)
+        return x, tail
+
+    x, tails = L.xscan(scan_fn, x,
+                       (p["layers"], cache["k_u"], cache["k_vt"],
+                        cache["v_u"], cache["v_vt"], cache["tail"]))
+    new_cache = dict(cache)
+    new_cache["tail"] = tails
+    return T.logits_head(p, x, cfg)[:, 0], new_cache
+
+
+def compress_tail(cache: Params, cfg, rank: int) -> Params:
+    """Fold the dense tail into the low-rank prefix (rank-concat +
+    retruncate) — the serving engine calls this every TAIL steps."""
+    from ..core.lowrank import LowRank, retruncate
+    nl, b, tl, kvh, hd = cache["tail"]["k"].shape
+    kvw = kvh * hd
+
+    def one(u, vt, tail):
+        tail2 = tail.reshape(nl * b, tl, kvw).astype(jnp.float32)
+        u2 = u.reshape(nl * b, -1, rank).astype(jnp.float32)
+        vt2 = vt.reshape(nl * b, rank, kvw).astype(jnp.float32)
+        # tail as exact rank-tl factors appended to the prefix row space:
+        # [U | P_tail·tail] with Vt rows [Vt ; I-scatter] — here the tail
+        # rows live at the END of the time axis, so U gains tl rows.
+        t_frozen = u2.shape[1]
+        u_cat = jnp.concatenate(
+            [jnp.pad(u2, ((0, 0), (0, tl), (0, 0))),
+             jnp.pad(jnp.eye(tl, dtype=u2.dtype)[None].repeat(nl * b, 0),
+                     ((0, 0), (t_frozen, 0), (0, 0)))], axis=-1)
+        vt_cat = jnp.concatenate([vt2, tail2], axis=-2)
+        lr = retruncate(LowRank(u_cat,
+                                jnp.ones(u_cat.shape[:-1][:-1]
+                                         + (u_cat.shape[-1],), u_cat.dtype),
+                                vt_cat), rank)
+        return (lr.scaled_u().reshape(nl, b, t_frozen + tl, rank),
+                lr.vt.reshape(nl, b, rank, kvw))
+
+    k_u, k_vt = one(cache["k_u"], cache["k_vt"], cache["tail"]["k"])
+    v_u, v_vt = one(cache["v_u"], cache["v_vt"], cache["tail"]["v"])
+    z = jnp.zeros_like(cache["tail"]["k"])
+    return {"k_u": k_u.astype(cache["k_u"].dtype),
+            "k_vt": k_vt.astype(cache["k_vt"].dtype),
+            "v_u": v_u.astype(cache["v_u"].dtype),
+            "v_vt": v_vt.astype(cache["v_vt"].dtype),
+            "tail": {"k": z, "v": z}}

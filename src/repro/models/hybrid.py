@@ -1,0 +1,186 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one SHARED attention block.
+
+Layer layout (total = ``num_layers``): groups of (attn_period − 1) mamba
+blocks followed by one invocation of the single shared attention+MLP block
+(same weights every time, distinct KV cache per invocation), plus a tail of
+leftover mamba blocks.  E.g. zamba2-1.2b: 38 = 6 × (5 mamba + shared attn)
++ 2 mamba.
+
+The released model also applies per-invocation LoRA deltas to the shared
+block; omitted here (noted in DESIGN.md — orthogonal to the paper's
+technique).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import mamba2 as M
+from . import transformer as T
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def _layout(cfg) -> Tuple[int, int, int]:
+    """(groups, mamba_per_group, tail_mamba)."""
+    per = cfg.attn_period
+    groups = cfg.num_layers // per
+    tail = cfg.num_layers - groups * per
+    return groups, per - 1, tail
+
+
+def init(key, cfg) -> Params:
+    ks = jax.random.split(key, 5)
+    dt = cfg.jax_dtype
+    groups, mpg, tail = _layout(cfg)
+    p: Params = {
+        "embed": L.embed_init(ks[0], cfg.padded_vocab, cfg.d_model, dt),
+        "mamba": jax.vmap(jax.vmap(lambda k: M.init_block(k, cfg)))(
+            jax.random.split(ks[1], groups * mpg).reshape(groups, mpg, 2)),
+        "shared": T.init_block(ks[2], cfg),
+        "final_norm": L.norm_init(cfg.d_model, dt),
+        "lm_head": L.dense_init(ks[3], cfg.d_model, cfg.padded_vocab, dt),
+    }
+    if tail:
+        p["mamba_tail"] = jax.vmap(lambda k: M.init_block(k, cfg))(
+            jax.random.split(ks[4], tail))
+    return p
+
+
+def forward(p: Params, cfg, tokens: Array) -> Array:
+    x = p["embed"]["w"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(tokens.shape[1]), tokens.shape)
+    mblock = L.ckpt(M.block, cfg, static_argnums=(2,))
+    ablock = L.ckpt(T.block, cfg, static_argnums=(3,))
+
+    def group_fn(x, gp):
+        x, _ = L.xscan(lambda x, lp: (mblock(lp, x, cfg), None), x, gp)
+        x = ablock(p["shared"], x, positions, cfg)
+        return x, None
+
+    x, _ = L.xscan(group_fn, x, p["mamba"])
+    if "mamba_tail" in p:
+        x, _ = L.xscan(lambda x, lp: (mblock(lp, x, cfg), None),
+                            x, p["mamba_tail"])
+    return T.logits_head(p, x, cfg)
+
+
+def loss_fn(p: Params, cfg, batch: Dict[str, Array]) -> Array:
+    return L.cross_entropy(forward(p, cfg, batch["tokens"]), batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_state(cfg, batch: int, max_len: int) -> Params:
+    groups, mpg, tail = _layout(cfg)
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+    kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    st: Params = {
+        "mamba": {
+            "conv": jnp.zeros((groups, mpg, batch, cfg.ssm_conv_width - 1,
+                               conv_ch), cfg.jax_dtype),
+            "ssm": jnp.zeros((groups, mpg, batch, cfg.ssm_heads,
+                              cfg.ssm_head_dim, cfg.ssm_state), jnp.float32)},
+        "attn": {"k": jnp.zeros((groups, batch, max_len, kvh, hd),
+                                cfg.jax_dtype),
+                 "v": jnp.zeros((groups, batch, max_len, kvh, hd),
+                                cfg.jax_dtype)},
+    }
+    if tail:
+        st["tail"] = {
+            "conv": jnp.zeros((tail, batch, cfg.ssm_conv_width - 1, conv_ch),
+                              cfg.jax_dtype),
+            "ssm": jnp.zeros((tail, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                              cfg.ssm_state), jnp.float32)}
+    return st
+
+
+def _mamba_state_of(lp, h_in, cfg, b, s):
+    """Final (conv, ssm) state of a mamba block given its normed input."""
+    proj = L.dense(lp["ssd"]["in_proj"], h_in)
+    _, xbc, dt_raw = M._split_proj(proj, cfg)
+    conv_tail = xbc[:, -(cfg.ssm_conv_width - 1):, :].astype(cfg.jax_dtype)
+    xbc_f = M._conv_causal(xbc, lp["ssd"]["conv_w"], lp["ssd"]["conv_b"])
+    di, ds, nh, hd = (cfg.d_inner, cfg.ssm_state, cfg.ssm_heads,
+                      cfg.ssm_head_dim)
+    xh = xbc_f[..., :di].reshape(b, s, nh, hd).astype(jnp.float32)
+    bm = xbc_f[..., di:di + ds].astype(jnp.float32)
+    dtv = jax.nn.softplus(dt_raw.astype(jnp.float32) + lp["ssd"]["dt_bias"])
+    da = dtv * (-jnp.exp(lp["ssd"]["a_log"]))
+    l = jnp.cumsum(da, axis=1)
+    decay_to_end = jnp.exp(l[:, -1:, :] - l)
+    ssm = jnp.einsum("bsd,bsn,bsnp->bnpd", bm, dtv * decay_to_end, xh)
+    return {"conv": conv_tail, "ssm": ssm}
+
+
+def prefill(p: Params, cfg, tokens: Array, max_len: Optional[int] = None
+            ) -> Tuple[Array, Params]:
+    b, s = tokens.shape
+    t = max_len or s
+    x = p["embed"]["w"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(s), tokens.shape)
+    pad = [(0, 0), (0, t - s), (0, 0), (0, 0)]
+    state: Params = {}
+
+    def mamba_scan(x, lp):
+        h_in = L.rmsnorm(lp["norm"], x, cfg.norm_eps)
+        st = _mamba_state_of(lp, h_in, cfg, b, s)
+        return x + M.ssd_apply(lp["ssd"], h_in, cfg), st
+
+    def group_fn(x, gp):
+        x, mst = L.xscan(mamba_scan, x, gp)
+        h = L.rmsnorm(p["shared"]["attn_norm"], x, cfg.norm_eps)
+        k = L.apply_rope(L._split_heads(L.dense(p["shared"]["attn"]["wk"], h),
+                                        cfg.num_kv_heads), positions,
+                         cfg.rope_theta)
+        v = L._split_heads(L.dense(p["shared"]["attn"]["wv"], h),
+                           cfg.num_kv_heads)
+        kv = {"k": jnp.pad(k.astype(cfg.jax_dtype), pad),
+              "v": jnp.pad(v.astype(cfg.jax_dtype), pad)}
+        x = T.block(p["shared"], x, positions, cfg)
+        return x, (mst, kv)
+
+    x, (mst, kv) = L.xscan(group_fn, x, p["mamba"])
+    state["mamba"], state["attn"] = mst, kv
+    if "mamba_tail" in p:
+        x, tst = L.xscan(mamba_scan, x, p["mamba_tail"])
+        state["tail"] = tst
+    logits = T.logits_head(p, x[:, -1:, :], cfg)[:, 0]
+    return logits, state
+
+
+def decode_step(p: Params, cfg, token: Array, state: Params, pos: Array
+                ) -> Tuple[Array, Params]:
+    x = p["embed"]["w"][token][:, None, :]
+
+    def mamba_step(x, inp):
+        lp, st = inp
+        y, st = M.ssd_decode(lp["ssd"], L.rmsnorm(lp["norm"], x, cfg.norm_eps),
+                             st, cfg)
+        return x + y, st
+
+    def group_fn(x, inp):
+        gp, mst, kv = inp
+        x, mst = L.xscan(mamba_step, x, (gp, mst))
+        h = L.rmsnorm(p["shared"]["attn_norm"], x, cfg.norm_eps)
+        a, kv = L.decode_attention(p["shared"]["attn"], h, kv, pos, cfg)
+        x = x + a
+        x = x + L.mlp(p["shared"]["mlp"],
+                      L.rmsnorm(p["shared"]["mlp_norm"], x, cfg.norm_eps),
+                      cfg.activation)
+        return x, (mst, kv)
+
+    x, (mst, kv) = L.xscan(group_fn, x,
+                                (p["mamba"], state["mamba"], state["attn"]))
+    new_state: Params = {"mamba": mst, "attn": kv}
+    if "mamba_tail" in p:
+        x, tst = L.xscan(mamba_step, x,
+                              (p["mamba_tail"], state["tail"]))
+        new_state["tail"] = tst
+    return T.logits_head(p, x, cfg)[:, 0], new_state

@@ -1,0 +1,170 @@
+"""Dense decoder-only transformer (gemma / starcoder2 / deepseek / granite /
+llama2).  Layer params are stacked on a leading L axis and driven by
+``jax.lax.scan``; KV caches are stacked the same way.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg) -> Params:
+    ks = jax.random.split(key, 4)
+    dt = cfg.jax_dtype
+    return {
+        "attn_norm": L.norm_init(cfg.d_model, dt, cfg.use_bias),
+        "attn": L.attention_init(ks[0], cfg.d_model, cfg.num_heads,
+                                 cfg.num_kv_heads, cfg.resolved_head_dim,
+                                 dt, cfg.use_bias),
+        "mlp_norm": L.norm_init(cfg.d_model, dt, cfg.use_bias),
+        "mlp": L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, dt, cfg.gated_mlp,
+                          cfg.use_bias),
+    }
+
+
+def init(key, cfg) -> Params:
+    ks = jax.random.split(key, 3)
+    dt = cfg.jax_dtype
+    layer_keys = jax.random.split(ks[0], cfg.num_layers)
+    stacked = jax.vmap(lambda k: init_block(k, cfg))(layer_keys)
+    p = {
+        "embed": L.embed_init(ks[1], cfg.padded_vocab, cfg.d_model, dt),
+        "layers": stacked,
+        "final_norm": L.norm_init(cfg.d_model, dt, cfg.use_bias),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.dense_init(ks[2], cfg.d_model, cfg.padded_vocab, dt)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _norm(p, x, cfg):
+    return L.layernorm(p, x, cfg.norm_eps) if cfg.use_bias \
+        else L.rmsnorm(p, x, cfg.norm_eps)
+
+
+def _sp(x: Array, cfg) -> Array:
+    """Sequence-parallel residual constraint (Megatron-SP): the residual
+    stream lives sequence-sharded over "model"; GSPMD then emits
+    all-gather before the TP matmuls and reduce-scatter after them —
+    halving activation-collective bytes vs two all-reduces."""
+    if not cfg.seq_parallel:
+        return x
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(x, P(None, "model", None))
+
+
+def block(p: Params, x: Array, positions: Array, cfg) -> Array:
+    x = _sp(x, cfg)
+    x = x + L.causal_attention(p["attn"], _norm(p["attn_norm"], x, cfg),
+                               cfg, positions)
+    x = _sp(x, cfg)
+    x = x + L.mlp(p["mlp"], _norm(p["mlp_norm"], x, cfg), cfg.activation)
+    return x
+
+
+def logits_head(p: Params, x: Array, cfg) -> Array:
+    x = _norm(p["final_norm"], x, cfg)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("...h,vh->...v", x, p["embed"]["w"])
+    else:
+        logits = L.dense(p["lm_head"], x)
+    if cfg.padded_vocab != cfg.vocab:      # mask the padding tail
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                        logits.ndim - 1)
+        logits = jnp.where(iota < cfg.vocab, logits,
+                           jnp.asarray(-1e30, logits.dtype))
+    return logits
+
+
+def forward(p: Params, cfg, tokens: Array) -> Array:
+    """tokens [B, S] → logits [B, S, V]."""
+    x = p["embed"]["w"][tokens] * jnp.asarray(
+        cfg.d_model ** 0.5 if cfg.tie_embeddings else 1.0, cfg.jax_dtype)
+    positions = jnp.broadcast_to(jnp.arange(tokens.shape[1]), tokens.shape)
+
+    body = L.ckpt(block, cfg, static_argnums=(3,))
+
+    def scan_fn(x, lp):
+        return body(lp, x, positions, cfg), None
+
+    x, _ = L.xscan(scan_fn, x, p["layers"])
+    return logits_head(p, x, cfg)
+
+
+def loss_fn(p: Params, cfg, batch: Dict[str, Array]) -> Array:
+    logits = forward(p, cfg, batch["tokens"])
+    return L.cross_entropy(logits, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int) -> Params:
+    kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    shape = (cfg.num_layers, batch, max_len, kvh, hd)
+    return {"k": jnp.zeros(shape, cfg.jax_dtype),
+            "v": jnp.zeros(shape, cfg.jax_dtype)}
+
+
+def prefill(p: Params, cfg, tokens: Array, max_len: Optional[int] = None
+            ) -> Tuple[Array, Params]:
+    """Full-sequence forward that also emits the KV cache.
+
+    Returns (last-position logits [B, V], cache stacked [L, B, T, kvh, d]).
+    """
+    b, s = tokens.shape
+    t = max_len or s
+    x = p["embed"]["w"][tokens] * jnp.asarray(
+        cfg.d_model ** 0.5 if cfg.tie_embeddings else 1.0, cfg.jax_dtype)
+    positions = jnp.broadcast_to(jnp.arange(s), tokens.shape)
+
+    def scan_fn(x, lp):
+        h = _norm(lp["attn_norm"], x, cfg)
+        kvh = cfg.num_kv_heads
+        k = L._split_heads(L.dense(lp["attn"]["wk"], h), kvh)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        v = L._split_heads(L.dense(lp["attn"]["wv"], h), kvh)
+        x = block(lp, x, positions, cfg)
+        pad = [(0, 0), (0, t - s), (0, 0), (0, 0)]
+        return x, {"k": jnp.pad(k.astype(cfg.jax_dtype), pad),
+                   "v": jnp.pad(v.astype(cfg.jax_dtype), pad)}
+
+    x, cache = L.xscan(scan_fn, x, p["layers"])
+    logits = logits_head(p, x[:, -1:, :], cfg)[:, 0]
+    return logits, cache
+
+
+def decode_step(p: Params, cfg, token: Array, cache: Params, pos: Array
+                ) -> Tuple[Array, Params]:
+    """One-token step: token [B], pos [B] → (logits [B, V], new cache)."""
+    x = p["embed"]["w"][token][:, None, :] * jnp.asarray(
+        cfg.d_model ** 0.5 if cfg.tie_embeddings else 1.0, cfg.jax_dtype)
+
+    def scan_fn(x, inp):
+        lp, c = inp
+        h = _norm(lp["attn_norm"], x, cfg)
+        a, c = L.decode_attention(lp["attn"], h, c, pos, cfg)
+        x = x + a
+        x = x + L.mlp(lp["mlp"], _norm(lp["mlp_norm"], x, cfg),
+                      cfg.activation)
+        return x, c
+
+    x, cache = L.xscan(scan_fn, x, (p["layers"], cache))
+    return logits_head(p, x, cfg)[:, 0], cache

@@ -1,0 +1,170 @@
+"""Llama-3.2-Vision-style VLM backbone: dense decoder + cross-attention
+layers every ``cross_attn_period`` layers.  The vision frontend is a STUB —
+``input_specs`` supplies precomputed patch embeddings [B, n_img, H] (already
+projected to d_model), per the brief.
+
+Layout: groups of (period − 1) self-attn blocks + 1 cross-attn block.
+40 layers, period 5 → 8 × (4 self + 1 cross).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import transformer as T
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def _layout(cfg) -> Tuple[int, int]:
+    per = cfg.cross_attn_period
+    groups = cfg.num_layers // per
+    assert groups * per == cfg.num_layers, "vlm layout must tile evenly"
+    return groups, per - 1
+
+
+def init_cross_block(key, cfg) -> Params:
+    ks = jax.random.split(key, 2)
+    dt = cfg.jax_dtype
+    return {
+        "attn_norm": L.norm_init(cfg.d_model, dt),
+        "xattn": L.attention_init(ks[0], cfg.d_model, cfg.num_heads,
+                                  cfg.num_kv_heads, cfg.resolved_head_dim, dt),
+        "gate_attn": jnp.zeros((), jnp.float32),      # tanh-gated (llama 3.2)
+        "mlp_norm": L.norm_init(cfg.d_model, dt),
+        "mlp": L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, dt, cfg.gated_mlp),
+        "gate_mlp": jnp.zeros((), jnp.float32),
+    }
+
+
+def init(key, cfg) -> Params:
+    ks = jax.random.split(key, 5)
+    dt = cfg.jax_dtype
+    groups, spg = _layout(cfg)
+    return {
+        "embed": L.embed_init(ks[0], cfg.padded_vocab, cfg.d_model, dt),
+        "self": jax.vmap(jax.vmap(lambda k: T.init_block(k, cfg)))(
+            jax.random.split(ks[1], groups * spg).reshape(groups, spg, 2)),
+        "cross": jax.vmap(lambda k: init_cross_block(k, cfg))(
+            jax.random.split(ks[2], groups)),
+        "final_norm": L.norm_init(cfg.d_model, dt),
+        "lm_head": L.dense_init(ks[3], cfg.d_model, cfg.padded_vocab, dt),
+    }
+
+
+def cross_block(cp: Params, x: Array, image_embeds: Array, cfg) -> Array:
+    kv = L.memory_kv(cp["xattn"], image_embeds, cfg.num_kv_heads)
+    h = L.cross_attention(cp["xattn"],
+                          L.rmsnorm(cp["attn_norm"], x, cfg.norm_eps), kv, cfg)
+    x = x + jnp.tanh(cp["gate_attn"]).astype(x.dtype) * h
+    m = L.mlp(cp["mlp"], L.rmsnorm(cp["mlp_norm"], x, cfg.norm_eps),
+              cfg.activation)
+    return x + jnp.tanh(cp["gate_mlp"]).astype(x.dtype) * m
+
+
+def forward(p: Params, cfg, tokens: Array, image_embeds: Array) -> Array:
+    """tokens [B, S]; image_embeds [B, n_img, H] (stub frontend output)."""
+    x = p["embed"]["w"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(tokens.shape[1]), tokens.shape)
+    sblock = L.ckpt(T.block, cfg, static_argnums=(3,))
+    xblock = L.ckpt(cross_block, cfg, static_argnums=(3,))
+
+    def group_fn(x, gp):
+        sp, cp = gp
+        x, _ = L.xscan(
+            lambda x, lp: (sblock(lp, x, positions, cfg), None), x, sp)
+        x = xblock(cp, x, image_embeds, cfg)
+        return x, None
+
+    x, _ = L.xscan(group_fn, x, (p["self"], p["cross"]))
+    return T.logits_head(p, x, cfg)
+
+
+def loss_fn(p: Params, cfg, batch: Dict[str, Array]) -> Array:
+    logits = forward(p, cfg, batch["tokens"], batch["image_embeds"])
+    return L.cross_entropy(logits, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int) -> Params:
+    groups, spg = _layout(cfg)
+    kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "self": {"k": jnp.zeros((groups, spg, batch, max_len, kvh, hd),
+                                cfg.jax_dtype),
+                 "v": jnp.zeros((groups, spg, batch, max_len, kvh, hd),
+                                cfg.jax_dtype)},
+        # cross KV is computed once from the image and reused every step
+        "cross": {"k": jnp.zeros((groups, batch, cfg.num_image_tokens, kvh,
+                                  hd), cfg.jax_dtype),
+                  "v": jnp.zeros((groups, batch, cfg.num_image_tokens, kvh,
+                                  hd), cfg.jax_dtype)},
+    }
+
+
+def prefill(p: Params, cfg, tokens: Array, image_embeds: Array,
+            max_len: Optional[int] = None) -> Tuple[Array, Params]:
+    b, s = tokens.shape
+    t = max_len or s
+    x = p["embed"]["w"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(s), tokens.shape)
+    pad = [(0, 0), (0, t - s), (0, 0), (0, 0)]
+
+    def self_scan(x, lp):
+        h = L.rmsnorm(lp["attn_norm"], x, cfg.norm_eps)
+        k = L.apply_rope(L._split_heads(L.dense(lp["attn"]["wk"], h),
+                                        cfg.num_kv_heads), positions,
+                         cfg.rope_theta)
+        v = L._split_heads(L.dense(lp["attn"]["wv"], h), cfg.num_kv_heads)
+        kv = {"k": jnp.pad(k.astype(cfg.jax_dtype), pad),
+              "v": jnp.pad(v.astype(cfg.jax_dtype), pad)}
+        return T.block(lp, x, positions, cfg), kv
+
+    def group_fn(x, gp):
+        sp, cp = gp
+        x, kv = L.xscan(self_scan, x, sp)
+        ck, cv = L.memory_kv(cp["xattn"], image_embeds, cfg.num_kv_heads)
+        x = cross_block(cp, x, image_embeds, cfg)
+        return x, (kv, {"k": ck.astype(cfg.jax_dtype),
+                        "v": cv.astype(cfg.jax_dtype)})
+
+    x, (kv, ckv) = L.xscan(group_fn, x, (p["self"], p["cross"]))
+    logits = T.logits_head(p, x[:, -1:, :], cfg)[:, 0]
+    return logits, {"self": kv, "cross": ckv}
+
+
+def decode_step(p: Params, cfg, token: Array, cache: Params, pos: Array
+                ) -> Tuple[Array, Params]:
+    x = p["embed"]["w"][token][:, None, :]
+
+    def self_step(x, inp):
+        lp, c = inp
+        h = L.rmsnorm(lp["attn_norm"], x, cfg.norm_eps)
+        a, c = L.decode_attention(lp["attn"], h, c, pos, cfg)
+        x = x + a
+        x = x + L.mlp(lp["mlp"], L.rmsnorm(lp["mlp_norm"], x, cfg.norm_eps),
+                      cfg.activation)
+        return x, c
+
+    def group_fn(x, inp):
+        sp, cp, kv, ckv = inp
+        x, kv = L.xscan(self_step, x, (sp, kv))
+        h = L.rmsnorm(cp["attn_norm"], x, cfg.norm_eps)
+        a = L.cross_attention(cp["xattn"], h, (ckv["k"], ckv["v"]), cfg)
+        x = x + jnp.tanh(cp["gate_attn"]).astype(x.dtype) * a
+        m = L.mlp(cp["mlp"], L.rmsnorm(cp["mlp_norm"], x, cfg.norm_eps),
+                  cfg.activation)
+        x = x + jnp.tanh(cp["gate_mlp"]).astype(x.dtype) * m
+        return x, kv
+
+    x, kv = L.xscan(group_fn, x, (p["self"], p["cross"],
+                                       cache["self"], cache["cross"]))
+    return T.logits_head(p, x, cfg)[:, 0], {"self": kv,
+                                            "cross": cache["cross"]}

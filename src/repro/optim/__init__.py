@@ -1,0 +1,157 @@
+"""Optimizers (dependency-free): AdamW, Adafactor, schedules, clipping.
+
+AdamW keeps fp32 m/v (ZeRO-1-shardable — see distributed.sharding);
+Adafactor keeps factored row/col second moments (the 1T-MoE choice: state is
+~(r+c)/(r·c) of param size).  Gradient accumulation is a microbatch scan in
+``runtime.steps``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+def cosine_schedule(base_lr: float, warmup: int, total: int
+                    ) -> Callable[[Array], Array]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float
+                        ) -> Tuple[Pytree, Array]:
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[Array], Array]
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+    def init(self, params: Pytree) -> Dict[str, Pytree]:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree_util.tree_map(zeros, params),
+                "v": jax.tree_util.tree_map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads: Pytree, state: Dict[str, Pytree],
+               params: Pytree) -> Tuple[Pytree, Dict[str, Pytree]]:
+        step = state["step"] + 1
+        lr = self.lr(step)
+        b1c = 1.0 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m = self.b1 * m + (1 - self.b1) * g32
+            v = self.b2 * v + (1 - self.b2) * g32 * g32
+            u = (m / b1c) / (jnp.sqrt(v / b2c) + self.eps)
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state["m"])
+        flat_v = tdef.flatten_up_to(state["v"])
+        out = [upd(g, m, v, p)
+               for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments; for the 1T MoE)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    lr: Callable[[Array], Array]
+    decay: float = 0.8          # beta2_t = 1 - step**-decay
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+
+    def _factored(self, shape) -> bool:
+        return len(shape) >= 2
+
+    def init(self, params: Pytree) -> Dict[str, Pytree]:
+        def st(p):
+            if self._factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"fac": jax.tree_util.tree_map(st, params,
+                                              is_leaf=lambda x: hasattr(
+                                                  x, "shape")),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads: Pytree, state: Dict[str, Pytree],
+               params: Pytree) -> Tuple[Pytree, Dict[str, Pytree]]:
+        step = state["step"] + 1
+        lr = self.lr(step)
+        beta2 = 1.0 - step.astype(jnp.float32) ** (-self.decay)
+
+        def upd(g, st, p):
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + self.eps
+            if self._factored(p.shape):
+                vr = beta2 * st["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * st["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                rfac = vr / jnp.maximum(
+                    jnp.mean(vr, axis=-1, keepdims=True), self.eps)
+                u = g32 / (jnp.sqrt(rfac)[..., None] * jnp.sqrt(vc)[..., None, :]
+                           + 1e-12)
+                new_st = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * st["v"] + (1 - beta2) * g2
+                u = g32 / (jnp.sqrt(v) + 1e-12)
+                new_st = {"v": v}
+            rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+            u = u / jnp.maximum(1.0, rms_u / self.clip_threshold)
+            if self.weight_decay:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_st
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state["fac"])
+        out = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_s = tdef.unflatten([o[1] for o in out])
+        return new_p, {"fac": new_s, "step": step}
+
+
+def make_optimizer(cfg, base_lr: float = 3e-4, warmup: int = 100,
+                   total: int = 10_000):
+    sched = cosine_schedule(base_lr, warmup, total)
+    if cfg.optimizer == "adafactor":
+        return Adafactor(lr=sched)
+    return AdamW(lr=sched)

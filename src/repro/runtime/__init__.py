@@ -1,0 +1,2 @@
+"""Fault-tolerant runtime: step functions, training driver, watchdogs."""
+from . import steps

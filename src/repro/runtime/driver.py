@@ -1,0 +1,155 @@
+"""Fault-tolerant training driver.
+
+* checkpoint/restart: atomic versioned saves every ``ckpt_every`` steps via
+  the async checkpointer; on (re)start the driver restores the LATEST
+  checkpoint and the data pipeline replays from the restored step (data is
+  a pure function of step — see ``repro.data``).
+* failure injection: ``failure_hook(step)`` raising ``SimulatedFailure``
+  exercises the restart path in-process (tests/test_runtime.py).
+* straggler watchdog: per-step wall time EWMA; steps slower than
+  ``k·ewma`` are flagged and counted (on real multi-host deployments the
+  flag feeds the re-shard decision; here it feeds metrics + logs).
+* elastic re-mesh: ``restore_for_mesh`` re-shards any checkpoint onto a new
+  mesh via checkpoint.restore(shardings=...).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from .. import checkpoint as ckpt
+from ..configs.base import ArchConfig, ShapeSpec
+from ..data import DataConfig, Prefetcher, SyntheticLM
+from ..optim import make_optimizer
+from . import steps as steps_mod
+
+Pytree = Any
+
+
+class SimulatedFailure(RuntimeError):
+    """Raised by failure hooks to exercise checkpoint/restart."""
+
+
+@dataclasses.dataclass
+class StragglerWatchdog:
+    """EWMA step-time monitor: flags steps slower than ``threshold × ewma``."""
+    alpha: float = 0.1
+    threshold: float = 2.5
+    ewma: Optional[float] = None
+    flagged: int = 0
+    history: List[float] = dataclasses.field(default_factory=list)
+
+    def observe(self, dt: float) -> bool:
+        self.history.append(dt)
+        slow = self.ewma is not None and dt > self.threshold * self.ewma
+        self.ewma = dt if self.ewma is None else \
+            (1 - self.alpha) * self.ewma + self.alpha * dt
+        if slow:
+            self.flagged += 1
+        return slow
+
+
+@dataclasses.dataclass
+class TrainLoopResult:
+    step: int
+    losses: List[float]
+    restarts: int
+    straggler_flags: int
+
+
+def train_loop(cfg: ArchConfig, shape: ShapeSpec, *, total_steps: int,
+               ckpt_dir: str, ckpt_every: int = 20, keep: int = 2,
+               seed: int = 0, log_every: int = 10,
+               failure_hook: Optional[Callable[[int], None]] = None,
+               max_restarts: int = 3,
+               print_fn: Callable[[str], None] = print) -> TrainLoopResult:
+    """Run (or resume) training with checkpoint/restart until total_steps."""
+    opt = make_optimizer(cfg)
+    train_step = jax.jit(steps_mod.make_train_step(cfg, opt))
+    restarts = 0
+    losses: List[float] = []
+    watchdog = StragglerWatchdog()
+
+    while True:
+        try:
+            # ---- (re)start: restore latest or init fresh ----------------
+            t_params, t_opt = jax.eval_shape(
+                lambda k: steps_mod.init_train_state(cfg, k, opt),
+                jax.random.PRNGKey(seed))
+            template = {"params": t_params, "opt": t_opt}
+            start = ckpt.latest_step(ckpt_dir)
+            if start is not None:
+                state = ckpt.restore(template, ckpt_dir)
+                params, opt_state = state["params"], state["opt"]
+                start += 1
+                print_fn(f"[driver] restored step {start - 1}; resuming")
+            else:
+                params, opt_state = steps_mod.init_train_state(
+                    cfg, jax.random.PRNGKey(seed), opt)
+                start = 0
+
+            source = SyntheticLM(cfg, shape, DataConfig(seed=seed))
+            prefetch = Prefetcher(source, start_step=start)
+            saver = ckpt.AsyncCheckpointer(ckpt_dir, keep=keep)
+
+            for step, batch in prefetch:
+                if step >= total_steps:
+                    prefetch.stop()
+                    saver.wait()
+                    ckpt.save({"params": params, "opt": opt_state},
+                              ckpt_dir, step - 1)
+                    return TrainLoopResult(step, losses, restarts,
+                                           watchdog.flagged)
+                if failure_hook is not None:
+                    failure_hook(step)
+                t0 = time.time()
+                batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+                params, opt_state, metrics = train_step(params, opt_state,
+                                                        batch)
+                loss = float(metrics["loss"])
+                dt = time.time() - t0
+                if watchdog.observe(dt):
+                    print_fn(f"[watchdog] straggler step {step}: "
+                             f"{dt:.2f}s vs ewma {watchdog.ewma:.2f}s")
+                losses.append(loss)
+                if step % log_every == 0:
+                    print_fn(f"[train] step {step} loss {loss:.4f} "
+                             f"({dt * 1e3:.0f} ms)")
+                if step % ckpt_every == ckpt_every - 1:
+                    saver.save({"params": params, "opt": opt_state}, step)
+
+        except SimulatedFailure as e:
+            restarts += 1
+            print_fn(f"[driver] failure at restart #{restarts}: {e}")
+            try:
+                prefetch.stop()
+            except Exception:
+                pass
+            if restarts > max_restarts:
+                raise
+            continue
+
+
+def restore_for_mesh(cfg: ArchConfig, ckpt_dir: str, mesh, *,
+                     optimizer=None) -> Pytree:
+    """Elastic restore: load the latest checkpoint RE-SHARDED for ``mesh``.
+
+    The saved mesh is irrelevant — shards are rebuilt from the host copy via
+    make_array_from_callback against the new sharding rules.
+    """
+    from ..distributed import sharding as sh
+    opt = optimizer or make_optimizer(cfg)
+    template = jax.eval_shape(
+        lambda k: steps_mod.init_train_state(cfg, k, opt),
+        jax.random.PRNGKey(0))
+    params_abs, opt_abs = template
+    shardings = {
+        "params": sh.params_sharding(params_abs, mesh, cfg),
+        "opt": sh.opt_state_sharding(opt_abs, mesh, cfg),
+    }
+    template_tree = {"params": params_abs, "opt": opt_abs}
+    return ckpt.restore(template_tree, ckpt_dir, shardings=shardings)

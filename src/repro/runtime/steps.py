@@ -1,0 +1,110 @@
+"""Jit-able step functions: train_step (grad + clip + optimizer [+ optional
+low-rank gradient compression]), prefill_step, decode_step.
+
+These are the functions the dry-run lowers and the drivers execute; they are
+pure (params/opt_state in → out) so checkpoint/restart and elastic re-mesh
+are trivial.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models import api
+from ..optim import clip_by_global_norm, make_optimizer
+
+Pytree = Any
+
+
+def make_train_step(cfg: ArchConfig, optimizer=None, max_grad_norm: float = 1.0,
+                    microbatches: int = 1,
+                    grad_transform: Optional[Callable] = None) -> Callable:
+    """Returns train_step(params, opt_state, batch) → (params, opt_state,
+    metrics).
+
+    ``microbatches`` > 1 accumulates gradients with a scan over batch shards
+    (memory knob); ``grad_transform`` hooks gradient compression
+    (distributed.compression) between backward and optimizer.
+    """
+    fns = api.model_fns(cfg)
+    opt = optimizer or make_optimizer(cfg)
+
+    def loss_of(params, batch):
+        return fns.loss_fn(params, cfg, batch)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+        else:
+            def reshape(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+            mb = jax.tree_util.tree_map(reshape, batch)
+            zero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def acc_fn(carry, mbatch):
+                loss_acc, g_acc = carry
+                loss, g = jax.value_and_grad(loss_of)(params, mbatch)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (loss_acc + loss, g_acc), None
+
+            (loss, grads), _ = jax.lax.scan(acc_fn, (jnp.zeros(()), zero), mb)
+            loss = loss / microbatches
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_eval_step(cfg: ArchConfig) -> Callable:
+    fns = api.model_fns(cfg)
+
+    def eval_step(params, batch):
+        return {"loss": fns.loss_fn(params, cfg, batch)}
+    return eval_step
+
+
+def make_prefill_step(cfg: ArchConfig) -> Callable:
+    fns = api.model_fns(cfg)
+
+    def prefill_step(params, *inputs):
+        return fns.prefill(params, cfg, *inputs)
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig) -> Callable:
+    fns = api.model_fns(cfg)
+
+    def decode_step(params, token, cache, pos):
+        return fns.decode_step(params, cfg, token, cache, pos)
+    return decode_step
+
+
+def init_train_state(cfg: ArchConfig, key, optimizer=None
+                     ) -> Tuple[Pytree, Pytree]:
+    fns = api.model_fns(cfg)
+    opt = optimizer or make_optimizer(cfg)
+    params = fns.init(key, cfg)
+    return params, opt.init(params)
+
+
+def abstract_train_state(cfg: ArchConfig, optimizer=None):
+    """(params, opt_state) ShapeDtypeStructs — dry-run state, no allocation."""
+    fns = api.model_fns(cfg)
+    opt = optimizer or make_optimizer(cfg)
+
+    def mk(key):
+        params = fns.init(key, cfg)
+        return params, opt.init(params)
+    return jax.eval_shape(mk, jax.random.PRNGKey(0))

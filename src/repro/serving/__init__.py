@@ -1,0 +1,189 @@
+"""Serving engine: batched prefill/decode with continuous batching.
+
+A slot-based engine (vLLM-style, sized for the dry-run meshes): ``slots``
+concurrent sequences share one static KV cache; finished sequences free
+their slot; queued requests prefill into free slots.
+
+Admission with LIVE sequences present re-prefills the slot batch, so the
+fresh cache rows are SPLICED into the live cache along the batch axis
+(dense family; other families gang-admit when all slots are free —
+documented limitation).  ``decompose_kv_rank`` serves the dense family on
+the paper's low-rank KV cache (models.decomposed_kv): prefill decomposes
+K/V, decode contracts through the factors, and the dense tail is folded
+back (compress_tail) whenever it fills.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..models import api
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray               # [S] int32
+    max_new_tokens: int = 16
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class EngineStats:
+    prefills: int = 0
+    decode_steps: int = 0
+    tokens_out: int = 0
+    wall_s: float = 0.0
+
+
+class Engine:
+    """Continuous-batching engine over the unified model API.
+
+    All sequences in a batch prefill together (same padded length); decode
+    advances every live slot one token per step.
+    """
+
+    def __init__(self, cfg: ArchConfig, params, *, slots: int = 4,
+                 max_len: int = 256, sampler: Optional[Callable] = None,
+                 decompose_kv_rank: int = 0, dkv_tail: int = 16):
+        self.cfg, self.params = cfg, params
+        self.slots, self.max_len = slots, max_len
+        self.fns = api.model_fns(cfg)
+        self.sampler = sampler or (lambda lg, k: jnp.argmax(lg, -1)
+                                   .astype(jnp.int32))
+        self.dkv_rank = decompose_kv_rank
+        self.dkv_tail = dkv_tail
+        self.frozen_len = 0
+        if decompose_kv_rank:
+            assert cfg.family == "dense", "decomposed KV: dense family"
+            self.cache = None            # built at first prefill
+        else:
+            self.cache = self.fns.init_cache(cfg, slots, max_len)
+        self.pos = np.zeros((slots,), np.int32)
+        self.live: List[Optional[Request]] = [None] * slots
+        self.queue: List[Request] = []
+        self.stats = EngineStats()
+
+        self._decode = jax.jit(
+            lambda p, t, c, pos: self.fns.decode_step(p, cfg, t, c, pos))
+
+    # -- public API ------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        t0 = time.time()
+        finished: List[Request] = []
+        for _ in range(max_steps):
+            self._admit()
+            if not any(self.live):
+                if not self.queue:
+                    break
+                continue
+            finished.extend(self._decode_round())
+        self.stats.wall_s += time.time() - t0
+        return finished
+
+    # -- internals ---------------------------------------------------------
+    def _admit(self) -> None:
+        free = [i for i, r in enumerate(self.live) if r is None]
+        if not free or not self.queue:
+            return
+        has_live = any(r is not None for r in self.live)
+        if has_live and (self.dkv_rank or self.cfg.family != "dense"):
+            # gang admission: splice-merge is implemented for the dense
+            # dense-cache path only (documented limitation)
+            return
+        batch = [self.queue.pop(0) for _ in free[:len(self.queue)]]
+        plen = max(len(r.prompt) for r in batch)
+        toks = np.zeros((self.slots, plen), np.int32)
+        new_mask = np.zeros((self.slots,), bool)
+        for slot, req in zip(free, batch):
+            toks[slot, plen - len(req.prompt):] = req.prompt   # left-pad
+            self.live[slot] = req
+            new_mask[slot] = True
+        # Prefill the WHOLE slot batch (idle slots compute padding — the
+        # static-shape trade; per-slot prefill would re-jit per length).
+        if self.dkv_rank:
+            from ..models import decomposed_kv as DK
+            logits, cache = DK.prefill_dkv(self.params, self.cfg,
+                                           jnp.asarray(toks), self.dkv_rank,
+                                           tail=self.dkv_tail)
+            self.frozen_len = plen
+            self.cache = cache
+        else:
+            args = self._prefill_args(jnp.asarray(toks))
+            logits, cache = jax.jit(
+                lambda p, *a: self.fns.prefill(p, self.cfg, *a,
+                                               self.max_len))(self.params,
+                                                              *args)
+            if has_live:
+                # splice fresh rows into the live cache (batch axis = 1 on
+                # every dense-cache leaf [L, B, T, kvh, hd])
+                m = jnp.asarray(new_mask)
+
+                def splice(old, new):
+                    mm = m.reshape((1, -1) + (1,) * (old.ndim - 2))
+                    return jnp.where(mm, new, old)
+                cache = jax.tree_util.tree_map(splice, self.cache, cache)
+            self.cache = cache
+        self.stats.prefills += 1
+        for slot, req in zip(free, batch):
+            self.pos[slot] = plen
+            nxt = int(np.asarray(self.sampler(logits, 1))[slot])
+            req.out_tokens.append(nxt)
+
+    def _prefill_args(self, toks: Array):
+        b, s = toks.shape
+        if self.cfg.family == "vlm":
+            img = jnp.zeros((b, self.cfg.num_image_tokens, self.cfg.d_model),
+                            self.cfg.jax_dtype)
+            return (toks, img)
+        if self.cfg.family == "audio":
+            frames = jnp.zeros((b, s, self.cfg.d_model), self.cfg.jax_dtype)
+            return (frames, toks)
+        return (toks,)
+
+    def _decode_round(self) -> List[Request]:
+        tok = np.zeros((self.slots,), np.int32)
+        for i, req in enumerate(self.live):
+            if req is not None and req.out_tokens:
+                tok[i] = req.out_tokens[-1]
+        if self.dkv_rank:
+            from ..models import decomposed_kv as DK
+            if int(self.pos.max()) - self.frozen_len >= self.dkv_tail:
+                # tail full: fold into the low-rank prefix (amortized)
+                self.cache = DK.compress_tail(self.cache, self.cfg,
+                                              self.dkv_rank)
+                self.frozen_len += self.dkv_tail
+            logits, self.cache = DK.decode_step_dkv(
+                self.params, self.cfg, jnp.asarray(tok), self.cache,
+                jnp.asarray(self.pos), frozen_len=self.frozen_len)
+        else:
+            logits, self.cache = self._decode(self.params, jnp.asarray(tok),
+                                              self.cache,
+                                              jnp.asarray(self.pos))
+        nxt = np.asarray(self.sampler(logits, 1))
+        self.stats.decode_steps += 1
+        done: List[Request] = []
+        for i, req in enumerate(self.live):
+            if req is None:
+                continue
+            self.pos[i] += 1
+            req.out_tokens.append(int(nxt[i]))
+            self.stats.tokens_out += 1
+            if (len(req.out_tokens) >= req.max_new_tokens
+                    or self.pos[i] >= self.max_len - 1):
+                req.done = True
+                done.append(req)
+                self.live[i] = None
+        return done

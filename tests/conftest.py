@@ -1,0 +1,9 @@
+# NOTE: no XLA_FLAGS here — smoke tests must see exactly 1 device (the
+# 512-device forcing lives only at the top of launch/dryrun.py).
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.RandomState(0)

@@ -1,0 +1,72 @@
+"""Lanczos bidiagonalization vs the LAPACK oracle + properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (decompose, from_dense_svd, lanczos_svd,
+                        relative_error)
+
+
+def lowrank_matrix(key, s, h, r, noise=0.0):
+    a = jax.random.normal(key, (s, r)) @ \
+        jax.random.normal(jax.random.PRNGKey(99), (r, h))
+    if noise:
+        a = a + noise * jax.random.normal(jax.random.PRNGKey(7), (s, h))
+    return a
+
+
+def test_exact_on_lowrank():
+    a = lowrank_matrix(jax.random.PRNGKey(0), 128, 96, 6)
+    u, s, vt = lanczos_svd(a, rank=6, iters=10)
+    rec = (u * s) @ vt
+    assert float(jnp.linalg.norm(rec - a) / jnp.linalg.norm(a)) < 1e-4
+
+
+def test_matches_oracle_singular_values():
+    a = lowrank_matrix(jax.random.PRNGKey(1), 96, 80, 10, noise=0.01)
+    _, s_l, _ = lanczos_svd(a, rank=5, iters=14)
+    s_o = jnp.linalg.svd(a, compute_uv=False)[:5]
+    np.testing.assert_allclose(np.asarray(s_l), np.asarray(s_o), rtol=1e-3)
+
+
+def test_error_decreases_with_rank():
+    a = jax.random.normal(jax.random.PRNGKey(2), (64, 48))
+    errs = []
+    for r in (2, 8, 24):
+        lr = decompose(a, rank=r, iters=r + 8)
+        errs.append(float(relative_error(lr, a)))
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_batched_decompose_matches_loop():
+    x = jax.random.normal(jax.random.PRNGKey(3), (3, 40, 32))
+    lr = decompose(x, rank=4, iters=8)
+    for i in range(3):
+        li = decompose(x[i], rank=4, iters=8)
+        np.testing.assert_allclose(np.asarray(lr.reconstruct()[i]),
+                                   np.asarray(li.reconstruct()),
+                                   rtol=2e-2, atol=2e-2)
+
+
+def test_orthonormal_factors():
+    a = lowrank_matrix(jax.random.PRNGKey(4), 80, 60, 8, noise=0.01)
+    u, s, vt = lanczos_svd(a, rank=8, iters=12)
+    np.testing.assert_allclose(np.asarray(u.T @ u), np.eye(8), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(vt @ vt.T), np.eye(8), atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(s=st.integers(12, 48), h=st.integers(12, 48), r=st.integers(1, 6))
+def test_property_reconstruction_bounded(s, h, r):
+    """‖X − X̂_r‖ ≤ ‖X‖ and ε decreases vs the oracle's tail energy."""
+    a = jax.random.normal(jax.random.PRNGKey(s * 1000 + h), (s, h))
+    lr = decompose(a, rank=r, iters=min(r + 6, min(s, h)))
+    err = float(relative_error(lr, a))
+    assert 0.0 <= err <= 1.0 + 1e-3
+    # oracle tail: optimal error for the same rank (Eckart–Young)
+    sv = np.linalg.svd(np.asarray(a), compute_uv=False)
+    opt = float(np.sqrt((sv[r:] ** 2).sum() / (sv ** 2).sum()))
+    assert err >= opt - 1e-3            # can't beat optimal
+    assert err <= opt + 0.35            # near-optimal for random matrices

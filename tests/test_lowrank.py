@@ -1,0 +1,58 @@
+"""LowRank pytree: reconstruction identities and rank algebra."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import from_dense_svd, rank_concat, relative_error, retruncate
+from repro.core.lowrank import LowRank, add_bias_rank
+
+
+def test_from_dense_roundtrip_fullrank():
+    a = jax.random.normal(jax.random.PRNGKey(0), (32, 24))
+    lr = from_dense_svd(a, rank=24)
+    np.testing.assert_allclose(np.asarray(lr.reconstruct()), np.asarray(a),
+                               atol=1e-4)
+
+
+def test_pytree_flatten_roundtrip():
+    a = jax.random.normal(jax.random.PRNGKey(1), (16, 12))
+    lr = from_dense_svd(a, 4)
+    leaves, treedef = jax.tree_util.tree_flatten(lr)
+    lr2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    np.testing.assert_array_equal(np.asarray(lr.u), np.asarray(lr2.u))
+
+
+def test_rank_concat_is_exact_sum():
+    a = jax.random.normal(jax.random.PRNGKey(2), (20, 16))
+    b = jax.random.normal(jax.random.PRNGKey(3), (20, 16))
+    la, lb = from_dense_svd(a, 5), from_dense_svd(b, 7)
+    cc = rank_concat(la, lb)
+    assert cc.rank == 12
+    np.testing.assert_allclose(
+        np.asarray(cc.reconstruct()),
+        np.asarray(la.reconstruct() + lb.reconstruct()), atol=1e-4)
+
+
+def test_retruncate_matches_svd():
+    a = jax.random.normal(jax.random.PRNGKey(4), (24, 18))
+    big = rank_concat(from_dense_svd(a, 9), from_dense_svd(a * 0.5, 9))
+    tr = retruncate(big, 6)
+    oracle = from_dense_svd(big.reconstruct(), 6)
+    assert float(relative_error(tr, big.reconstruct())) <= \
+        float(relative_error(oracle, big.reconstruct())) + 1e-4
+
+
+def test_add_bias_rank():
+    a = jax.random.normal(jax.random.PRNGKey(5), (10, 8))
+    bias = jax.random.normal(jax.random.PRNGKey(6), (8,))
+    lr = from_dense_svd(a, 8)
+    lb = add_bias_rank(lr, bias)
+    np.testing.assert_allclose(np.asarray(lb.reconstruct()),
+                               np.asarray(a + bias), atol=1e-4)
+
+
+def test_param_count_and_compression():
+    a = jax.random.normal(jax.random.PRNGKey(7), (256, 128))
+    lr = from_dense_svd(a, 4)
+    assert lr.param_count() == 256 * 4 + 4 + 4 * 128
+    assert lr.param_count() < a.size

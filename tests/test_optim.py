@@ -1,0 +1,48 @@
+"""Optimizers: convergence on a quadratic + clipping behavior."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import AdamW, Adafactor, clip_by_global_norm, \
+    cosine_schedule
+
+
+def _run(opt, steps=200):
+    target = jnp.asarray([1.5, -2.0, 0.5])
+    params = {"w": jnp.zeros((3,)), "m": jnp.zeros((4, 5))}
+    state = opt.init(params)
+
+    def loss_fn(p):
+        return jnp.sum((p["w"] - target) ** 2) + jnp.sum(p["m"] ** 2)
+
+    for _ in range(steps):
+        g = jax.grad(loss_fn)(params)
+        params, state = opt.update(g, state, params)
+    return float(loss_fn(params))
+
+
+def test_adamw_converges():
+    opt = AdamW(lr=lambda s: 0.05, weight_decay=0.0)
+    assert _run(opt) < 1e-2
+
+
+def test_adafactor_converges():
+    opt = Adafactor(lr=lambda s: 0.1)
+    assert _run(opt, 400) < 5e-2
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) > 30
+    total = jnp.sqrt(sum(jnp.sum(l ** 2)
+                         for l in jax.tree_util.tree_leaves(clipped)))
+    np.testing.assert_allclose(float(total), 1.0, rtol=1e-5)
+
+
+def test_cosine_schedule():
+    lr = cosine_schedule(1e-3, warmup=10, total=100)
+    assert float(lr(jnp.asarray(0))) == 0.0
+    assert abs(float(lr(jnp.asarray(10))) - 1e-3) < 1e-9
+    assert float(lr(jnp.asarray(100))) < 1e-5
+    assert abs(float(lr(jnp.asarray(5))) - 5e-4) < 1e-9

@@ -1,0 +1,68 @@
+"""Channel-wise outlier extraction (paper §4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (ThresholdTable, calibrate_threshold, extract,
+                        measured_extraction_frac, select_outlier_channels,
+                        split_outliers)
+from repro.core.lowrank import gather_channels, zero_channels
+
+
+def spiky_matrix(key, s=64, h=96, channels=(3, 40, 77), scale=25.0):
+    a = jax.random.normal(key, (s, h))
+    return a.at[:, list(channels)].mul(scale)
+
+
+def test_selects_spiky_channels():
+    a = spiky_matrix(jax.random.PRNGKey(0))
+    idx = select_outlier_channels(a, jnp.asarray(5.0), 3)
+    assert set(np.asarray(idx).tolist()) == {3, 40, 77}
+
+
+def test_split_roundtrip():
+    a = spiky_matrix(jax.random.PRNGKey(1))
+    base, vals, idx = extract(a, jnp.asarray(5.0), 3)
+    rebuilt = np.array(base)
+    rebuilt[:, np.asarray(idx)] += np.asarray(vals)
+    np.testing.assert_allclose(rebuilt, np.asarray(a), atol=1e-6)
+    assert float(jnp.abs(gather_channels(base, idx)).max()) == 0.0
+
+
+def test_outliers_help_lowrank_error():
+    """Removing outlier channels must reduce truncation error (the paper's
+    whole point)."""
+    from repro.core import decompose, relative_error, attach_dense_outliers
+    a = spiky_matrix(jax.random.PRNGKey(2), scale=50.0)
+    plain = decompose(a, rank=4, iters=10)
+    base, vals, idx = extract(a, jnp.asarray(5.0), 3)
+    multi = attach_dense_outliers(decompose(base, rank=4, iters=10),
+                                  vals, idx)
+    assert float(relative_error(multi, a)) < float(relative_error(plain, a))
+
+
+def test_calibrate_threshold_targets_fraction():
+    rng = np.random.RandomState(0)
+    samples = rng.randn(4, 128, 256).astype(np.float32)
+    samples[:, :, :8] *= 20.0          # 8/256 ≈ 3.1% outlier channels
+    t = calibrate_threshold(samples, target_channel_frac=8 / 256)
+    per_tail = np.quantile(np.abs(samples).reshape(-1, 256), 0.999, axis=0)
+    frac = (per_tail > t).mean()
+    assert 0.02 <= frac <= 0.05
+
+
+def test_threshold_table_roundtrip(tmp_path):
+    tt = ThresholdTable()
+    tt.set(3, 4.5)
+    tt.set(10, 2.25)
+    path = str(tmp_path / "t.json")
+    tt.save(path)
+    tt2 = ThresholdTable.load(path)
+    assert tt2.get(3) == 4.5 and tt2.get(10) == 2.25
+    assert tt2.get(99) == tt.default
+
+
+def test_measured_extraction_energy():
+    a = spiky_matrix(jax.random.PRNGKey(3), scale=50.0)
+    frac = measured_extraction_frac(a, 5.0, 3)
+    assert float(frac) > 0.9           # spiky channels carry the energy

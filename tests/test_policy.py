@@ -1,0 +1,45 @@
+"""DecompositionPolicy + paper Table-2 configurations."""
+from repro.core.policy import (PAPER_BEST_CONFIG, PAPER_LAYER_CONFIGS,
+                               DecompositionPolicy, LayerPolicy)
+
+
+def test_paper_configs_shapes():
+    assert len(PAPER_LAYER_CONFIGS["4layer"]) == 4
+    assert len(PAPER_LAYER_CONFIGS["10layer"]) == 10
+    assert PAPER_BEST_CONFIG == ("10layer", 20)
+
+
+def test_from_layer_list():
+    pol = DecompositionPolicy.from_layer_list(
+        32, PAPER_LAYER_CONFIGS["4layer"], rank=20)
+    assert pol.decomposed_layers() == [10, 15, 20, 25]
+    assert pol.layer(10).rank == 20
+    assert not pol.layer(11).decompose
+    assert not pol.has_adjacent_decomposed()
+
+
+def test_adjacency_detection():
+    pol = DecompositionPolicy.from_layer_list(
+        32, PAPER_LAYER_CONFIGS["10layer"])
+    assert pol.has_adjacent_decomposed()   # [9,10,...] are adjacent
+
+
+def test_all_layers():
+    pol = DecompositionPolicy.all_layers(32, rank=1)
+    assert len(pol.decomposed_layers()) == 32
+
+
+def test_json_roundtrip():
+    pol = DecompositionPolicy.from_layer_list(32, [1, 5], rank=10,
+                                              decompose_weights=True)
+    pol.thresholds.set(1, 3.5)
+    s = pol.to_json()
+    pol2 = DecompositionPolicy.from_json(s)
+    assert pol2.decomposed_layers() == [1, 5]
+    assert pol2.layer(1).decompose_weights
+    assert pol2.thresholds.get(1) == 3.5
+
+
+def test_effective_iters():
+    assert LayerPolicy(rank=7).effective_iters == 7
+    assert LayerPolicy(rank=7, iters=12).effective_iters == 12

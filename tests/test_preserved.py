@@ -1,0 +1,143 @@
+"""Decomposition-preserved computation (paper Eq. 4-12) equivalences."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (activation_compression_ratio, chain_flops,
+                        compute_reduction_ratio_input_only,
+                        compute_reduction_ratio_input_weight, decompose,
+                        decompose_weight, extract, attach_dense_outliers,
+                        from_dense_svd, lowrank_matmul,
+                        lowrank_x_lowrank_weight, plan_chain,
+                        preserved_pv, preserved_qk_scores,
+                        weight_compression_ratio, weight_rank_break_even)
+
+
+@pytest.fixture
+def lr_with_outliers():
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (48, 8)) @ \
+        jax.random.normal(jax.random.PRNGKey(1), (8, 64))
+    base, vals, idx = extract(a, jnp.asarray(1.0), 4)
+    lr = decompose(base, rank=8, iters=16)
+    return attach_dense_outliers(lr, vals, idx), a
+
+
+def test_eq6_preserved_matmul(lr_with_outliers):
+    lr, a = lr_with_outliers
+    w = jax.random.normal(jax.random.PRNGKey(2), (64, 40)) * 0.1
+    y = lowrank_matmul(lr, w)
+    np.testing.assert_allclose(np.asarray(y.reconstruct()),
+                               np.asarray(lr.reconstruct() @ w),
+                               rtol=1e-3, atol=1e-3)
+    # S never contracts: Vt* has shape [k, N]
+    assert y.vt.shape == (8, 40)
+
+
+def test_eq7_input_weight(lr_with_outliers):
+    lr, a = lr_with_outliers
+    w = jax.random.normal(jax.random.PRNGKey(3), (64, 40)) * 0.1
+    w_lr = decompose_weight(w, rank=32)
+    y = lowrank_x_lowrank_weight(lr, w_lr)
+    np.testing.assert_allclose(np.asarray(y.reconstruct()),
+                               np.asarray(lr.reconstruct()
+                                          @ w_lr.reconstruct()),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_eq4_optimal_chain_order():
+    """Paper's claimed order: multiply right-to-left when r << S,H."""
+    s, r, h, n = 4096, 10, 4096, 4096
+    order, flops = plan_chain((s, r, r, h, n))
+    # optimal must beat the naive left-to-right reconstruction order
+    naive = chain_flops((s, r, r, h, n), [0, 0, 0])
+    assert flops < naive
+    # and cost must be the Eq. 4 arithmetic: r*h*n + r*r*n + s*r*n ~ order
+    assert flops <= 2 * (r * r * h + r * h * n + s * r * n)
+
+
+def test_eq8_ratio():
+    assert compute_reduction_ratio_input_only(4096, 10) == pytest.approx(409.6)
+
+
+def test_eq9_ratio_positive():
+    r = compute_reduction_ratio_input_weight(4096, 4096, 4096, 10, 10, 8, 8)
+    assert r > 100
+
+
+def test_eq10_eq12_compression():
+    assert activation_compression_ratio(4096, 4096, 10, 10) > 100
+    assert weight_compression_ratio(4096, 4096, 10, 10) > 100
+    # Eq. 11 break-even: at p == bound the ratio is ~1
+    p = weight_rank_break_even(4096, 4096)
+    assert weight_compression_ratio(4096, 4096, int(p), int(p)) == \
+        pytest.approx(1.0, rel=0.01)
+
+
+@pytest.mark.parametrize("nh,kvh", [(4, 4), (4, 2), (8, 1)])
+def test_preserved_attention_gqa(nh, kvh):
+    S, H = 32, 64
+    dh = H // nh
+    kv_width = kvh * dh
+    q = from_dense_svd(jax.random.normal(jax.random.PRNGKey(0), (S, H)), 6)
+    k = from_dense_svd(jax.random.normal(jax.random.PRNGKey(1),
+                                         (S, kv_width)), 6)
+    v = from_dense_svd(jax.random.normal(jax.random.PRNGKey(2),
+                                         (S, kv_width)), 6)
+    sc = preserved_qk_scores(q, k, nh, 0.3, kvh)
+    qh = q.reconstruct().reshape(S, nh, dh)
+    kh = k.reconstruct().reshape(S, kvh, dh)
+    g = nh // kvh
+    sc_ref = 0.3 * jnp.einsum("skgd,tkd->kgst",
+                              qh.reshape(S, kvh, g, dh), kh)
+    sc_ref = sc_ref.reshape(nh, S, S)
+    np.testing.assert_allclose(np.asarray(sc), np.asarray(sc_ref),
+                               rtol=1e-3, atol=1e-3)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = preserved_pv(p, v, nh, kvh)
+    vh = v.reconstruct().reshape(S, kvh, dh)
+    pv_ref = jnp.einsum("kgst,tkd->skgd",
+                        p.reshape(kvh, g, S, S), vh).reshape(S, nh * dh)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(pv_ref),
+                               rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Property-based invariants (hypothesis)
+# ---------------------------------------------------------------------------
+from hypothesis import given, settings, strategies as st
+
+
+@settings(max_examples=12, deadline=None)
+@given(s=st.integers(8, 40), h=st.sampled_from([16, 32, 48]),
+       n=st.sampled_from([16, 24, 40]), r=st.integers(1, 8),
+       bias=st.booleans())
+def test_property_eq6_exactness(s, h, n, r, bias):
+    """lowrank_matmul(lr, W) reconstructs to lr.reconstruct() @ W (+b) for
+    arbitrary shapes/ranks/bias — the Eq. 6 invariant."""
+    key = jax.random.PRNGKey(s * 10007 + h * 101 + n)
+    lr = from_dense_svd(jax.random.normal(key, (s, h)), r)
+    w = jax.random.normal(jax.random.PRNGKey(7), (h, n)) * 0.2
+    b = jax.random.normal(jax.random.PRNGKey(8), (n,)) if bias else None
+    y = lowrank_matmul(lr, w, bias=b)
+    want = lr.reconstruct() @ w + (b if bias else 0.0)
+    np.testing.assert_allclose(np.asarray(y.reconstruct()),
+                               np.asarray(want), rtol=2e-3, atol=2e-3)
+    assert y.vt.shape[-1] == n                     # output stays factored
+    assert y.u.shape[-2] == s
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.integers(8, 32), h=st.sampled_from([16, 32]),
+       r=st.integers(1, 6), p=st.integers(2, 8))
+def test_property_eq7_exactness(s, h, r, p):
+    """Input+weight preserved product equals the dense double product."""
+    key = jax.random.PRNGKey(s * 31 + h * 7 + r)
+    lr = from_dense_svd(jax.random.normal(key, (s, h)), r)
+    w = jax.random.normal(jax.random.PRNGKey(5), (h, h)) * 0.2
+    w_lr = decompose_weight(w, min(p, h))
+    y = lowrank_x_lowrank_weight(lr, w_lr)
+    want = lr.reconstruct() @ w_lr.reconstruct()
+    np.testing.assert_allclose(np.asarray(y.reconstruct()),
+                               np.asarray(want), rtol=2e-3, atol=2e-3)

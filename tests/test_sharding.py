@@ -1,0 +1,108 @@
+"""Sharding rule tables (pure: evaluated against an AbstractMesh)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import all_archs
+from repro.distributed import sharding as sh
+
+MESH = AbstractMesh((16, 16), ("data", "model"))
+MESH_POD = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_dp_axes():
+    assert sh.dp_axes(MESH) == ("data",)
+    assert sh.dp_axes(MESH_POD) == ("pod", "data")
+
+
+def test_col_row_parallel_rules():
+    cfg = all_archs()["deepseek-7b"]
+    assert sh.param_spec("layers/attn/wq/w", (30, 4096, 4096), MESH, cfg) \
+        == P(None, None, "model")
+    assert sh.param_spec("layers/attn/wo/w", (30, 4096, 4096), MESH, cfg) \
+        == P(None, "model", None)
+    assert sh.param_spec("layers/mlp/down/w", (30, 11008, 4096), MESH, cfg) \
+        == P(None, "model", None)
+    assert sh.param_spec("embed/w", (102400, 4096), MESH, cfg) \
+        == P("model", None)
+
+
+def test_indivisible_dims_fall_back_to_replication():
+    cfg = all_archs()["granite-3-2b"]
+    # granite vocab 49155 is not 16-divisible *unpadded*; rule must not shard
+    assert sh.param_spec("embed/w", (49155, 2048), MESH, cfg) == P(None, None)
+    # but the PADDED table (49280) shards fine
+    assert sh.param_spec("embed/w", (49280, 2048), MESH, cfg) \
+        == P("model", None)
+
+
+def test_moe_expert_sharding():
+    olmoe = all_archs()["olmoe-1b-7b"]
+    kimi = all_archs()["kimi-k2-1t-a32b"]
+    assert sh.param_spec("layers/moe/w_gate", (16, 64, 2048, 1024), MESH,
+                         olmoe) == P(None, "model", None, None)
+    assert sh.param_spec("layers/moe/w_gate", (60, 384, 7168, 2048), MESH,
+                         kimi) == P(None, "model", None, "data")
+    assert sh.param_spec("layers/moe/w_down", (60, 384, 2048, 7168), MESH,
+                         kimi) == P(None, "model", "data", None)
+
+
+def test_zero1_adds_dp_axis():
+    cfg = all_archs()["deepseek-7b"]
+    spec = sh._zero1(P(None, None, "model"), (30, 4096, 4096), MESH)
+    assert spec == P(None, "data", "model")
+
+
+def test_cache_rules_batch_vs_sequence():
+    cfg = all_archs()["deepseek-7b"]
+    # decode_32k-style cache: batch 128 → DP on batch, kvh on model
+    cache = {"k": jax.ShapeDtypeStruct((30, 128, 32768, 32, 128),
+                                       jnp.bfloat16)}
+    shd = sh.cache_sharding(cache, MESH, cfg)
+    assert shd["k"].spec == P(None, "data", None, "model", None)
+    # long_500k-style (batch 1) → sequence-sharded KV
+    cache1 = {"k": jax.ShapeDtypeStruct((30, 1, 524288, 32, 128),
+                                        jnp.bfloat16)}
+    shd1 = sh.cache_sharding(cache1, MESH, cfg)
+    assert shd1["k"].spec == P(None, None, "data", "model", None)
+
+
+def test_mqa_head_dim_fallback():
+    cfg = all_archs()["gemma-2b"]
+    # kv heads == 1 -> shard head_dim (256) instead
+    cache = {"k": jax.ShapeDtypeStruct((18, 128, 32768, 1, 256),
+                                       jnp.bfloat16)}
+    shd = sh.cache_sharding(cache, MESH, cfg)
+    assert shd["k"].spec == P(None, "data", None, None, "model")
+
+
+def test_ssm_cache_rules():
+    cfg = all_archs()["mamba2-780m"]
+    st = {"ssm": jax.ShapeDtypeStruct((48, 128, 48, 64, 128), jnp.float32),
+          "conv": jax.ShapeDtypeStruct((48, 128, 3, 3328), jnp.bfloat16)}
+    shd = sh.cache_sharding(st, MESH, cfg)
+    assert shd["ssm"].spec == P(None, "data", "model", None, None)
+    assert shd["conv"].spec == P(None, "data", None, "model")
+
+
+def test_params_sharding_full_tree():
+    """Every leaf of every arch gets a spec whose sharded dims divide."""
+    for name, cfg in all_archs().items():
+        shapes = jax.eval_shape(
+            lambda: __import__("repro.models.api", fromlist=["api"])
+            .abstract_params(cfg))
+        tree = sh.params_sharding(
+            __import__("repro.models.api", fromlist=["api"])
+            .abstract_params(cfg), MESH, cfg)
+        flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+        shapes_flat, _ = jax.tree_util.tree_flatten_with_path(
+            __import__("repro.models.api", fromlist=["api"])
+            .abstract_params(cfg))
+        for (pth, shd), (_, leaf) in zip(flat, shapes_flat):
+            for dim, axis in zip(leaf.shape, shd.spec + (None,) * 8):
+                if axis is not None:
+                    sz = MESH.shape[axis] if isinstance(axis, str) else \
+                        int(jnp.prod(jnp.asarray([MESH.shape[a]
+                                                  for a in axis])))
+                    assert dim % sz == 0, (name, pth, leaf.shape, shd.spec)
