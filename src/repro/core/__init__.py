@@ -9,8 +9,11 @@ Public surface:
 """
 from .lowrank import (LowRank, from_dense_svd, gather_channels, rank_concat,
                       relative_error, retruncate, zero_channels)
-from .lanczos import (DEFAULT_HOOKS, BidiagResult, LanczosHooks, bidiag_to_svd,
-                      decompose, lanczos_bidiag, lanczos_svd)
+from .lanczos import (DEFAULT_BATCHED_HOOKS, DEFAULT_HOOKS,
+                      BatchedLanczosHooks, BidiagResult, LanczosHooks,
+                      batch_hooks, bidiag_to_svd, bidiag_to_svd_batched,
+                      decompose, lanczos_bidiag, lanczos_bidiag_batched,
+                      lanczos_svd)
 from .outlier import (ThresholdTable, attach_dense_outliers,
                       calibrate_threshold, channel_outlier_counts, extract,
                       measured_extraction_frac, select_outlier_channels,

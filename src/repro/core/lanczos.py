@@ -23,7 +23,7 @@ Implementation notes
 """
 from __future__ import annotations
 
-from functools import partial
+from functools import lru_cache, partial
 from typing import Callable, NamedTuple, Optional
 
 import jax
@@ -48,6 +48,18 @@ class LanczosHooks(NamedTuple):
     left_step: Callable[[Array, Array, Array], Array]   # (A, v[H], U[S,k]) -> u[S]
 
 
+class BatchedLanczosHooks(NamedTuple):
+    """Batched variant of :class:`LanczosHooks` — one call covers the whole
+    prompt batch, so a Pallas backend launches ONE fused kernel per Lanczos
+    pass (batch axis in the grid) instead of vmap-of-scalar-kernel per
+    prompt.  ``repro.kernels.ops.make_batched_pallas_hooks`` builds the
+    kernel-backed instance; :func:`batch_hooks` lifts any scalar hooks via
+    ``jax.vmap`` (the compatibility fallback).
+    """
+    right_step: Callable[[Array, Array, Array], Array]  # (A[B,S,H], u[B,S], V[B,H,k]) -> z[B,H]
+    left_step: Callable[[Array, Array, Array], Array]   # (A[B,S,H], v[B,H], U[B,S,k]) -> u[B,S]
+
+
 def _reorth_cgs2(z: Array, q: Array) -> Array:
     """Twice-is-enough classical Gram–Schmidt: z ← z − Q(Qᵀz), twice."""
     z = z - q @ (q.T @ z)
@@ -55,10 +67,39 @@ def _reorth_cgs2(z: Array, q: Array) -> Array:
     return z
 
 
+def _reorth_cgs2_batched(z: Array, q: Array) -> Array:
+    """Batched CGS2: z [B, N], q [B, N, k] → z − Q(Qᵀz), twice."""
+    for _ in range(2):
+        p = jnp.einsum("bnk,bn->bk", q, z)
+        z = z - jnp.einsum("bnk,bk->bn", q, p)
+    return z
+
+
 DEFAULT_HOOKS = LanczosHooks(
     right_step=lambda a, u, vbuf: _reorth_cgs2(a.T @ u, vbuf),
     left_step=lambda a, v, ubuf: _reorth_cgs2(a @ v, ubuf),
 )
+
+DEFAULT_BATCHED_HOOKS = BatchedLanczosHooks(
+    right_step=lambda a, u, vbuf: _reorth_cgs2_batched(
+        jnp.einsum("bsh,bs->bh", a, u), vbuf),
+    left_step=lambda a, v, ubuf: _reorth_cgs2_batched(
+        jnp.einsum("bsh,bh->bs", a, v), ubuf),
+)
+
+
+@lru_cache(maxsize=64)
+def batch_hooks(hooks: LanczosHooks) -> BatchedLanczosHooks:
+    """Lift scalar hooks to the batched protocol via ``jax.vmap``.
+
+    This is the compatibility fallback (one kernel trace per prompt under
+    vmap); native batched backends skip it entirely.  Cached per scalar
+    hooks so the lifted functions hash stably as static jit arguments —
+    BOUNDED, because callers may construct hooks from fresh closures and an
+    unbounded cache would pin them for the process lifetime.
+    """
+    return BatchedLanczosHooks(right_step=jax.vmap(hooks.right_step),
+                               left_step=jax.vmap(hooks.left_step))
 
 
 class BidiagResult(NamedTuple):
@@ -75,6 +116,14 @@ def _safe_normalize(x: Array):
     return x * inv, jnp.where(ok, n, 0.0)
 
 
+def _safe_normalize_batched(x: Array):
+    """Row-wise safe normalize: x [B, N] → (unit rows, norms [B])."""
+    n = jnp.linalg.norm(x, axis=-1)
+    ok = n > EPS
+    inv = jnp.where(ok, 1.0 / jnp.maximum(n, EPS), 0.0)
+    return x * inv[:, None], jnp.where(ok, n, 0.0)
+
+
 @partial(jax.jit, static_argnames=("iters", "hooks"))
 def lanczos_bidiag(a: Array, iters: int,
                    z0: Optional[Array] = None,
@@ -82,46 +131,12 @@ def lanczos_bidiag(a: Array, iters: int,
     """Golub–Kahan bidiagonalization of ``a [S, H]`` with ``iters`` steps.
 
     Produces A ≈ U B Vᵀ with B upper-bidiagonal (diag=alpha, superdiag=beta).
+    The scalar path IS the B=1 slice of :func:`lanczos_bidiag_batched` —
+    there is exactly one copy of the iteration math in this module.
     """
-    s_dim, h_dim = a.shape
-    a32 = a.astype(jnp.float32)
-    if z0 is None:
-        # Deterministic start vector; any non-degenerate direction works and
-        # a fixed one keeps runs reproducible (the paper does not specify).
-        key = jax.random.PRNGKey(0)
-        z0 = jax.random.normal(key, (h_dim,), jnp.float32)
-    z0 = z0.astype(jnp.float32)
-
-    u_buf = jnp.zeros((s_dim, iters), jnp.float32)
-    v_buf = jnp.zeros((h_dim, iters), jnp.float32)
-    alpha = jnp.zeros((iters,), jnp.float32)
-    beta = jnp.zeros((max(iters - 1, 1),), jnp.float32)
-
-    v0, _ = _safe_normalize(z0)
-    u0 = hooks.left_step(a32, v0, u_buf)   # U buffer all-zero ⇒ pure matvec
-    u0, a0 = _safe_normalize(u0)
-    u_buf = u_buf.at[:, 0].set(u0)
-    v_buf = v_buf.at[:, 0].set(v0)
-    alpha = alpha.at[0].set(a0)
-
-    def body(j, carry):
-        u_buf, v_buf, alpha, beta = carry
-        u_prev = u_buf[:, j - 1]
-        # --- right step: z = Aᵀ u_{j-1}, re-orthogonalized against V -----
-        z = hooks.right_step(a32, u_prev, v_buf)
-        z, b = _safe_normalize(z)
-        v_buf = v_buf.at[:, j].set(z)
-        beta = beta.at[j - 1].set(b)
-        # --- left step: u = A v_j, re-orthogonalized against U ----------
-        u = hooks.left_step(a32, z, u_buf)
-        u, al = _safe_normalize(u)
-        u_buf = u_buf.at[:, j].set(u)
-        alpha = alpha.at[j].set(al)
-        return u_buf, v_buf, alpha, beta
-
-    u_buf, v_buf, alpha, beta = jax.lax.fori_loop(
-        1, iters, body, (u_buf, v_buf, alpha, beta))
-    return BidiagResult(u_buf, v_buf, alpha, beta)
+    res = lanczos_bidiag_batched(a[None], iters, z0=z0,
+                                 hooks=batch_hooks(hooks))
+    return BidiagResult(res.u[0], res.v[0], res.alpha[0], res.beta[0])
 
 
 def bidiag_to_svd(res: BidiagResult, rank: int):
@@ -129,14 +144,10 @@ def bidiag_to_svd(res: BidiagResult, rank: int):
 
     Returns (U [S, rank], s [rank], Vt [rank, H]).
     """
-    k = res.alpha.shape[0]
-    b = jnp.diag(res.alpha)
-    if k > 1:
-        b = b + jnp.diag(res.beta[:k - 1], k=1)
-    p, s, qt = jnp.linalg.svd(b)               # k×k each
-    u = res.u @ p[:, :rank]                     # [S, rank]
-    vt = qt[:rank, :] @ res.v.T                 # [rank, H]
-    return u, s[:rank], vt
+    u, s, vt = bidiag_to_svd_batched(
+        BidiagResult(res.u[None], res.v[None], res.alpha[None],
+                     res.beta[None]), rank)
+    return u[0], s[0], vt[0]
 
 
 @partial(jax.jit, static_argnames=("rank", "iters", "hooks"))
@@ -154,22 +165,100 @@ def lanczos_svd(a: Array, rank: int, iters: Optional[int] = None,
     return bidiag_to_svd(res, rank)
 
 
-@partial(jax.jit, static_argnames=("rank", "iters", "hooks"))
+# ---------------------------------------------------------------------------
+# Natively batched pipeline — one fused step per Lanczos pass for the WHOLE
+# prompt batch (the batch axis lives in the hook / Pallas grid, never in a
+# Python-level vmap over pallas_call).
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("iters", "hooks"))
+def lanczos_bidiag_batched(a: Array, iters: int,
+                           z0: Optional[Array] = None,
+                           hooks: BatchedLanczosHooks = DEFAULT_BATCHED_HOOKS
+                           ) -> BidiagResult:
+    """Golub–Kahan bidiagonalization of a batch ``a [B, S, H]``.
+
+    Identical math to :func:`lanczos_bidiag` per batch element (same start
+    vector when ``z0`` is None), but every inner step is ONE batched hook
+    call, so kernel backends see the full batch per pass.  ``z0`` may be
+    [H] (broadcast over the batch) or [B, H].
+    """
+    b_dim, s_dim, h_dim = a.shape
+    a32 = a.astype(jnp.float32)
+    if z0 is None:
+        key = jax.random.PRNGKey(0)
+        z0 = jax.random.normal(key, (h_dim,), jnp.float32)
+    z0 = jnp.broadcast_to(z0.astype(jnp.float32), (b_dim, h_dim))
+
+    u_buf = jnp.zeros((b_dim, s_dim, iters), jnp.float32)
+    v_buf = jnp.zeros((b_dim, h_dim, iters), jnp.float32)
+    alpha = jnp.zeros((b_dim, iters), jnp.float32)
+    beta = jnp.zeros((b_dim, max(iters - 1, 1)), jnp.float32)
+
+    v0, _ = _safe_normalize_batched(z0)
+    u0 = hooks.left_step(a32, v0, u_buf)   # U buffer all-zero ⇒ pure matvec
+    u0, a0 = _safe_normalize_batched(u0)
+    u_buf = u_buf.at[..., 0].set(u0)
+    v_buf = v_buf.at[..., 0].set(v0)
+    alpha = alpha.at[..., 0].set(a0)
+
+    def body(j, carry):
+        u_buf, v_buf, alpha, beta = carry
+        u_prev = u_buf[..., j - 1]
+        z = hooks.right_step(a32, u_prev, v_buf)
+        z, b = _safe_normalize_batched(z)
+        v_buf = v_buf.at[..., j].set(z)
+        beta = beta.at[..., j - 1].set(b)
+        u = hooks.left_step(a32, z, u_buf)
+        u, al = _safe_normalize_batched(u)
+        u_buf = u_buf.at[..., j].set(u)
+        alpha = alpha.at[..., j].set(al)
+        return u_buf, v_buf, alpha, beta
+
+    u_buf, v_buf, alpha, beta = jax.lax.fori_loop(
+        1, iters, body, (u_buf, v_buf, alpha, beta))
+    return BidiagResult(u_buf, v_buf, alpha, beta)
+
+
+def bidiag_to_svd_batched(res: BidiagResult, rank: int):
+    """Batched SVD of the tiny k×k bidiagonal B; rotate the Lanczos bases.
+
+    Returns (U [B, S, rank], s [B, rank], Vt [B, rank, H]).
+    """
+    k = res.alpha.shape[-1]
+    b = jax.vmap(jnp.diag)(res.alpha)
+    if k > 1:
+        b = b + jax.vmap(partial(jnp.diag, k=1))(res.beta[..., :k - 1])
+    p, s, qt = jnp.linalg.svd(b)
+    u = jnp.einsum("bsk,bkr->bsr", res.u, p[..., :, :rank])
+    vt = jnp.einsum("brk,bhk->brh", qt[..., :rank, :], res.v)
+    return u, s[..., :rank], vt
+
+
+@partial(jax.jit, static_argnames=("rank", "iters", "hooks", "batched_hooks"))
 def decompose(x: Array, rank: int, iters: Optional[int] = None,
-              hooks: LanczosHooks = DEFAULT_HOOKS) -> LowRank:
+              hooks: Optional[LanczosHooks] = None,
+              batched_hooks: Optional[BatchedLanczosHooks] = None,
+              z0: Optional[Array] = None) -> LowRank:
     """Batched activation decomposition: x [..., S, H] → LowRank.
 
     Each prompt's [S, H] slice is decomposed independently (paper §3.1:
-    "we apply the decomposition on each prompt separately").
+    "we apply the decomposition on each prompt separately"), but the whole
+    batch runs through ONE natively batched Lanczos pipeline: a kernel
+    backend (``batched_hooks``) sees one fused launch per pass.  Scalar
+    ``hooks`` are still accepted and lifted via :func:`batch_hooks` (the
+    vmap fallback).  Prefer constructing a ``repro.engine.DecomposeEngine``,
+    which also handles padding, outlier tracks, and backend selection.
     """
+    iters = rank if iters is None else iters
+    assert iters >= rank, "need at least `rank` Lanczos iterations"
+    if batched_hooks is None:
+        batched_hooks = (DEFAULT_BATCHED_HOOKS if hooks is None
+                         else batch_hooks(hooks))
     batch_shape = x.shape[:-2]
     flat = x.reshape((-1,) + x.shape[-2:])
-
-    def one(m):
-        u, s, vt = lanczos_svd(m, rank, iters=iters, hooks=hooks)
-        return u, s, vt
-
-    u, s, vt = jax.vmap(one)(flat)
+    res = lanczos_bidiag_batched(flat, iters, z0=z0, hooks=batched_hooks)
+    u, s, vt = bidiag_to_svd_batched(res, rank)
     u = u.reshape(batch_shape + u.shape[1:])
     s = s.reshape(batch_shape + s.shape[1:])
     vt = vt.reshape(batch_shape + vt.shape[1:])

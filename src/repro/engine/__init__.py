@@ -1,0 +1,16 @@
+"""Unified batched decomposition engine (see DESIGN.md §3).
+
+One :class:`DecomposeEngine` owns the full activation-decomposition
+pipeline — batched Lanczos, backend dispatch, outlier multi-track,
+preserved-form consumption — and is the single entry point for
+``models/decomposed*.py``, ``runtime/steps.py``, ``serving``, and
+``launch/serve.py``.
+"""
+from .backends import (Backend, available_backends, get_backend,
+                       register_backend)
+from .config import EngineConfig
+from .engine import DecomposeEngine, make_engine
+
+__all__ = ["Backend", "DecomposeEngine", "EngineConfig",
+           "available_backends", "get_backend", "make_engine",
+           "register_backend"]

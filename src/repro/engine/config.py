@@ -1,0 +1,58 @@
+"""EngineConfig — the single configuration surface of the decomposition
+pipeline.
+
+The paper's thesis is that activation decomposition only pays off when the
+whole pipeline (progressive Lanczos + compute expansion + shape-preserving
+consumption + multi-track outliers) is co-designed.  EngineConfig therefore
+folds every axis that used to be wired per-callsite — per-layer policy
+(``core.policy``), outlier thresholds (``core.outlier``), preserved-form
+consumption (``core.preserved``), kernel backend and expansion factor —
+into one frozen value from which a :class:`~repro.engine.DecomposeEngine`
+is built exactly once and then threaded through models/runtime/serving.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from ..core.outlier import ThresholdTable
+from ..core.policy import DecompositionPolicy, LayerPolicy
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Everything a DecomposeEngine needs, chosen once.
+
+    * ``policy``      — per-layer decomposition directives (§6.2); None means
+                        "no layer policy" (raw / KV-only use, e.g. serving).
+    * ``backend``     — registry key: ``"reference"`` (pure jnp),
+                        ``"pallas_interpret"`` (batched fused kernels,
+                        interpreter), ``"pallas"`` (compiled, TPU),
+                        ``"pallas_vmap"`` (vmap-of-scalar fallback).
+    * ``expansion``   — the D-com compute-expansion factor f (Pallas grid
+                        size along the reduced axis).
+    * ``attn_mode``   — ``"dense"`` | ``"preserved"`` consumption of the
+                        decomposed QKV inputs (paper §3.2).
+    * ``kv_rank`` / ``kv_tail`` / ``kv_iters_extra`` — decomposed-KV-cache
+                        serving knobs (rank 0 disables).
+    """
+    policy: Optional[DecompositionPolicy] = None
+    backend: str = "reference"
+    expansion: int = 8
+    attn_mode: str = "dense"            # "dense" | "preserved"
+    kv_rank: int = 0
+    kv_tail: int = 128
+    kv_iters_extra: int = 8
+
+    def layer(self, idx: int) -> LayerPolicy:
+        if self.policy is None:
+            return LayerPolicy(decompose=False)
+        return self.policy.layer(idx)
+
+    def threshold(self, idx: int) -> float:
+        if self.policy is None:
+            return ThresholdTable().default
+        return self.policy.thresholds.get(idx)
+
+    def with_policy(self, policy: DecompositionPolicy) -> "EngineConfig":
+        return dataclasses.replace(self, policy=policy)

@@ -125,6 +125,172 @@ def _reorth_left_kernel(a_ref, v_ref, q_ref, z_out, nrm_out,
         nrm_out[...] = nrm[...]
 
 
+def _reorth_right_batched_kernel(a_ref, u_ref, q_ref, z_out, nrm_out,
+                                 z_buf, p1, p2, nrm, *, f: int, blk: int):
+    """grid = (B, 3 passes, f column-blocks) — batch is the OUTERMOST grid
+    dim, so one launch covers every prompt and the per-pass scratch
+    (z_buf/p1/p2/nrm) is simply re-initialized as each batch element's
+    pass 0 begins."""
+    p = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when((p == 0) & (j == 0))
+    def _init():
+        p1[...] = jnp.zeros_like(p1)
+        p2[...] = jnp.zeros_like(p2)
+        nrm[...] = jnp.zeros_like(nrm)
+
+    q = q_ref[0].astype(jnp.float32)              # (blk, k)
+
+    @pl.when(p == 0)
+    def _pass0():
+        a = a_ref[0].astype(jnp.float32)          # (S, blk)
+        u = u_ref[0].astype(jnp.float32)          # (S, 1)
+        z = jnp.sum(a * u, axis=0)[None, :]       # (1, blk) — local reduce
+        pl.store(z_buf, (pl.dslice(0, 1), pl.dslice(j * blk, blk)), z)
+        p1[...] += jnp.dot(z, q, preferred_element_type=jnp.float32)
+
+    @pl.when(p == 1)
+    def _pass1():
+        z = pl.load(z_buf, (pl.dslice(0, 1), pl.dslice(j * blk, blk)))
+        z = z - jnp.dot(p1[...], q.T, preferred_element_type=jnp.float32)
+        pl.store(z_buf, (pl.dslice(0, 1), pl.dslice(j * blk, blk)), z)
+        p2[...] += jnp.dot(z, q, preferred_element_type=jnp.float32)
+
+    @pl.when(p == 2)
+    def _pass2():
+        z = pl.load(z_buf, (pl.dslice(0, 1), pl.dslice(j * blk, blk)))
+        z = z - jnp.dot(p2[...], q.T, preferred_element_type=jnp.float32)
+        z_out[0] = z
+        nrm[...] += jnp.sum(z * z)
+
+    @pl.when((p == 2) & (j == f - 1))
+    def _fin():
+        nrm_out[0] = nrm[...]
+
+
+def _reorth_left_batched_kernel(a_ref, v_ref, q_ref, z_out, nrm_out,
+                                z_buf, p1, p2, nrm, *, f: int, blk: int):
+    """grid = (B, 3 passes, f row-blocks) — batched twin of the left step."""
+    p = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when((p == 0) & (j == 0))
+    def _init():
+        p1[...] = jnp.zeros_like(p1)
+        p2[...] = jnp.zeros_like(p2)
+        nrm[...] = jnp.zeros_like(nrm)
+
+    q = q_ref[0].astype(jnp.float32)              # (blk, k)
+
+    @pl.when(p == 0)
+    def _pass0():
+        a = a_ref[0].astype(jnp.float32)          # (blk, H)
+        v = v_ref[0].astype(jnp.float32)          # (1, H)
+        z = jnp.sum(a * v, axis=1)[:, None]       # (blk, 1) — local reduce
+        pl.store(z_buf, (pl.dslice(j * blk, blk), pl.dslice(0, 1)), z)
+        p1[...] += jnp.dot(z.T, q, preferred_element_type=jnp.float32)
+
+    @pl.when(p == 1)
+    def _pass1():
+        z = pl.load(z_buf, (pl.dslice(j * blk, blk), pl.dslice(0, 1)))
+        z = z - jnp.dot(q, p1[...].T, preferred_element_type=jnp.float32)
+        pl.store(z_buf, (pl.dslice(j * blk, blk), pl.dslice(0, 1)), z)
+        p2[...] += jnp.dot(z.T, q, preferred_element_type=jnp.float32)
+
+    @pl.when(p == 2)
+    def _pass2():
+        z = pl.load(z_buf, (pl.dslice(j * blk, blk), pl.dslice(0, 1)))
+        z = z - jnp.dot(q, p2[...].T, preferred_element_type=jnp.float32)
+        z_out[0] = z
+        nrm[...] += jnp.sum(z * z)
+
+    @pl.when((p == 2) & (j == f - 1))
+    def _fin():
+        nrm_out[0] = nrm[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("expansion", "interpret"))
+def reorth_right_batched(a: jax.Array, u: jax.Array, v_buf: jax.Array,
+                         *, expansion: int = 8, interpret: bool = True):
+    """Batched fused  z_b = CGS2(A_bᵀ·u_b, V_b)  → (z [B, H], ‖z‖² [B]).
+
+    ONE pallas_call for the whole batch: grid (B, 3, f).  H must divide by
+    ``expansion``.
+    """
+    b_dim, s_dim, h_dim = a.shape
+    k = v_buf.shape[-1]
+    assert h_dim % expansion == 0, (h_dim, expansion)
+    blk = h_dim // expansion
+    f = expansion
+
+    z, nrm = pl.pallas_call(
+        functools.partial(_reorth_right_batched_kernel, f=f, blk=blk),
+        grid=(b_dim, 3, f),
+        in_specs=[
+            pl.BlockSpec((1, s_dim, blk), lambda b, p, j: (b, 0, j)),
+            pl.BlockSpec((1, s_dim, 1), lambda b, p, j: (b, 0, 0)),
+            pl.BlockSpec((1, blk, k), lambda b, p, j: (b, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, blk), lambda b, p, j: (b, 0, j)),
+            pl.BlockSpec((1, 1, 1), lambda b, p, j: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b_dim, 1, h_dim), jnp.float32),
+            jax.ShapeDtypeStruct((b_dim, 1, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, h_dim), jnp.float32),
+            pltpu.VMEM((1, k), jnp.float32),
+            pltpu.VMEM((1, k), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a, u[..., None], v_buf)
+    return z[:, 0], nrm[:, 0, 0]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("expansion", "interpret"))
+def reorth_left_batched(a: jax.Array, v: jax.Array, u_buf: jax.Array,
+                        *, expansion: int = 8, interpret: bool = True):
+    """Batched fused  w_b = CGS2(A_b·v_b, U_b)  → (w [B, S], ‖w‖² [B]).
+    S % expansion == 0."""
+    b_dim, s_dim, h_dim = a.shape
+    k = u_buf.shape[-1]
+    assert s_dim % expansion == 0, (s_dim, expansion)
+    blk = s_dim // expansion
+    f = expansion
+
+    z, nrm = pl.pallas_call(
+        functools.partial(_reorth_left_batched_kernel, f=f, blk=blk),
+        grid=(b_dim, 3, f),
+        in_specs=[
+            pl.BlockSpec((1, blk, h_dim), lambda b, p, j: (b, j, 0)),
+            pl.BlockSpec((1, 1, h_dim), lambda b, p, j: (b, 0, 0)),
+            pl.BlockSpec((1, blk, k), lambda b, p, j: (b, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, blk, 1), lambda b, p, j: (b, j, 0)),
+            pl.BlockSpec((1, 1, 1), lambda b, p, j: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b_dim, s_dim, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b_dim, 1, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((s_dim, 1), jnp.float32),
+            pltpu.VMEM((1, k), jnp.float32),
+            pltpu.VMEM((1, k), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a, v[:, None, :], u_buf)
+    return z[..., 0], nrm[:, 0, 0]
+
+
 @functools.partial(jax.jit,
                    static_argnames=("expansion", "interpret"))
 def reorth_right(a: jax.Array, u: jax.Array, v_buf: jax.Array,

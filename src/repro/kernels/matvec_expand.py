@@ -72,6 +72,85 @@ def matvec(a: jax.Array, v: jax.Array, *, expansion: int = 8,
     return y[:, 0]
 
 
+def _block_divisor(n: int, cap: int) -> int:
+    """Largest divisor of ``n`` that is ≤ cap (trace-time; n is static)."""
+    return max(d for d in range(1, min(cap, n) + 1) if n % d == 0)
+
+
+def _matvec_batched_kernel(a_ref, v_ref, y_ref):
+    """grid = (B, S-blocks, f) — batch outermost, reduction innermost."""
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    a = a_ref[0].astype(jnp.float32)               # (Sb, Hb)
+    v = v_ref[0].astype(jnp.float32)               # (1, Hb)
+    y_ref[0] += jnp.sum(a * v, axis=1)[:, None]
+
+
+def _rmatvec_batched_kernel(a_ref, u_ref, z_ref):
+    """grid = (B, H-blocks, f) — batch outermost, reduction innermost."""
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _():
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    a = a_ref[0].astype(jnp.float32)               # (Sb, Hb)
+    u = u_ref[0].astype(jnp.float32)               # (Sb, 1)
+    z_ref[0] += jnp.sum(a * u, axis=0)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("expansion", "row_block",
+                                             "interpret"))
+def matvec_batched(a: jax.Array, v: jax.Array, *, expansion: int = 8,
+                   row_block: int = 512, interpret: bool = True) -> jax.Array:
+    """y[B,S] = A[B,S,H] @ v[B,H] — one launch for the whole batch."""
+    b_dim, s_dim, h_dim = a.shape
+    assert h_dim % expansion == 0
+    blk = h_dim // expansion
+    rb = _block_divisor(s_dim, row_block)
+
+    y = pl.pallas_call(
+        _matvec_batched_kernel,
+        grid=(b_dim, s_dim // rb, expansion),
+        in_specs=[
+            pl.BlockSpec((1, rb, blk), lambda b, i, j: (b, i, j)),
+            pl.BlockSpec((1, 1, blk), lambda b, i, j: (b, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, rb, 1), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b_dim, s_dim, 1), jnp.float32),
+        interpret=interpret,
+    )(a, v[:, None, :])
+    return y[..., 0]
+
+
+@functools.partial(jax.jit, static_argnames=("expansion", "col_block",
+                                             "interpret"))
+def rmatvec_batched(a: jax.Array, u: jax.Array, *, expansion: int = 8,
+                    col_block: int = 512, interpret: bool = True) -> jax.Array:
+    """z[B,H] = A[B,S,H]ᵀ @ u[B,S] — one launch for the whole batch."""
+    b_dim, s_dim, h_dim = a.shape
+    assert s_dim % expansion == 0
+    blk = s_dim // expansion
+    cb = _block_divisor(h_dim, col_block)
+
+    z = pl.pallas_call(
+        _rmatvec_batched_kernel,
+        grid=(b_dim, h_dim // cb, expansion),
+        in_specs=[
+            pl.BlockSpec((1, blk, cb), lambda b, i, j: (b, j, i)),
+            pl.BlockSpec((1, blk, 1), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, cb), lambda b, i, j: (b, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((b_dim, 1, h_dim), jnp.float32),
+        interpret=interpret,
+    )(a, u[..., None])
+    return z[:, 0]
+
+
 @functools.partial(jax.jit, static_argnames=("expansion", "col_block",
                                              "interpret"))
 def rmatvec(a: jax.Array, u: jax.Array, *, expansion: int = 8,

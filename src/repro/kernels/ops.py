@@ -12,20 +12,41 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from ..core.lanczos import LanczosHooks
+from ..core.lanczos import BatchedLanczosHooks, LanczosHooks
 from . import dkv_attention as _dkv, lanczos_reorth, \
     lowrank_matmul as _lrmm, matvec_expand, outlier_extract, ssd_chunk
 
 INTERPRET = True
 
 
-def _pad_to(x: jax.Array, axis: int, mult: int):
-    n = x.shape[axis]
+@functools.lru_cache(maxsize=None)
+def pad_plan(shape: tuple, axis: int, mult: int):
+    """Cached pad decision for one axis: (pad widths tuple | None, orig n).
+
+    Keyed on ``(shape, axis, mult)`` so repeated wrapper calls (and the
+    engine's per-layer decompose sites) never recompute pad widths or build
+    fresh width lists at trace time.
+    """
+    n = shape[axis]
     pad = (-n) % mult
     if pad == 0:
-        return x, n
-    widths = [(0, 0)] * x.ndim
+        return None, n
+    widths = [(0, 0)] * len(shape)
     widths[axis] = (0, pad)
+    return tuple(widths), n
+
+
+@functools.lru_cache(maxsize=None)
+def padded_dims(s: int, h: int, expansion: int):
+    """Cached (S_pad, H_pad) for a fused-Lanczos launch: the left step needs
+    S % f == 0, the right step H % f == 0."""
+    return s + ((-s) % expansion), h + ((-h) % expansion)
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int):
+    widths, n = pad_plan(x.shape, axis, mult)
+    if widths is None:
+        return x, n
     return jnp.pad(x, widths), n
 
 
@@ -47,11 +68,49 @@ def rmatvec(a, u, *, expansion: int = 8, interpret: Optional[bool] = None):
     return z[:h]
 
 
+def matvec_batched(a, v, *, expansion: int = 8,
+                   interpret: Optional[bool] = None):
+    """y[B,S] = A[B,S,H] @ v[B,H]; pads H like the scalar wrapper."""
+    a, _ = _pad_to(a, 2, expansion)
+    v, _ = _pad_to(v, 1, expansion)
+    y = matvec_expand.matvec_batched(
+        a, v, expansion=expansion, row_block=min(512, a.shape[-2]),
+        interpret=INTERPRET if interpret is None else interpret)
+    return y
+
+
+def rmatvec_batched(a, u, *, expansion: int = 8,
+                    interpret: Optional[bool] = None):
+    """z[B,H] = A[B,S,H]ᵀ @ u[B,S]; pads S like the scalar wrapper."""
+    a, _ = _pad_to(a, 1, expansion)
+    u, _ = _pad_to(u, 1, expansion)
+    z = matvec_expand.rmatvec_batched(
+        a, u, expansion=expansion, col_block=min(512, a.shape[-1]),
+        interpret=INTERPRET if interpret is None else interpret)
+    return z
+
+
 def reorth_right(a, u, v_buf, *, expansion: int = 8,
                  interpret: Optional[bool] = None):
     interp = INTERPRET if interpret is None else interpret
     return lanczos_reorth.reorth_right(a, u, v_buf, expansion=expansion,
                                        interpret=interp)
+
+
+def reorth_right_batched(a, u, v_buf, *, expansion: int = 8,
+                         interpret: Optional[bool] = None):
+    interp = INTERPRET if interpret is None else interpret
+    return lanczos_reorth.reorth_right_batched(a, u, v_buf,
+                                               expansion=expansion,
+                                               interpret=interp)
+
+
+def reorth_left_batched(a, v, u_buf, *, expansion: int = 8,
+                        interpret: Optional[bool] = None):
+    interp = INTERPRET if interpret is None else interpret
+    return lanczos_reorth.reorth_left_batched(a, v, u_buf,
+                                              expansion=expansion,
+                                              interpret=interp)
 
 
 def reorth_left(a, v, u_buf, *, expansion: int = 8,
@@ -102,9 +161,20 @@ def make_pallas_hooks(expansion: int = 8,
     Shapes must divide by ``expansion`` (callers pad); normalization stays in
     ``core.lanczos`` (the kernels return unnormalized vectors; the returned
     ‖z‖² is dropped here because _safe_normalize recomputes it — O(H)).
-    """
-    interp = INTERPRET if interpret is None else interpret
 
+    The returned hooks are cached per (expansion, RESOLVED interpret) so
+    they keep a stable identity — they are static jit arguments in
+    ``core.lanczos``, and fresh closures would retrace on every engine
+    construction.  The module-level ``INTERPRET`` flag is re-read on every
+    call (never baked into a cache key), so flipping it for TPU deployment
+    keeps working.
+    """
+    return _make_pallas_hooks(expansion,
+                              INTERPRET if interpret is None else interpret)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_pallas_hooks(expansion: int, interp: bool) -> LanczosHooks:
     def right_step(a, u, v_buf):
         z, _ = lanczos_reorth.reorth_right(a, u, v_buf, expansion=expansion,
                                            interpret=interp)
@@ -116,3 +186,54 @@ def make_pallas_hooks(expansion: int = 8,
         return w
 
     return LanczosHooks(right_step=right_step, left_step=left_step)
+
+
+def make_batched_pallas_hooks(expansion: int = 8,
+                              interpret: Optional[bool] = None
+                              ) -> BatchedLanczosHooks:
+    """BatchedLanczosHooks running ONE fused Pallas launch per Lanczos pass
+    for the whole prompt batch (grid = (B, 3, f)) — no vmap over pallas_call.
+
+    Shapes must divide by ``expansion`` on the reduced axis (the engine pads
+    via the cached :func:`padded_dims` plan).  Cached per (expansion,
+    resolved interpret) for stable jit identity, like
+    :func:`make_pallas_hooks`; ``INTERPRET`` is re-read per call.
+    """
+    return _make_batched_pallas_hooks(
+        expansion, INTERPRET if interpret is None else interpret)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_batched_pallas_hooks(expansion: int, interp: bool
+                               ) -> BatchedLanczosHooks:
+    def right_step(a, u, v_buf):
+        z, _ = lanczos_reorth.reorth_right_batched(
+            a, u, v_buf, expansion=expansion, interpret=interp)
+        return z
+
+    def left_step(a, v, u_buf):
+        w, _ = lanczos_reorth.reorth_left_batched(
+            a, v, u_buf, expansion=expansion, interpret=interp)
+        return w
+
+    return BatchedLanczosHooks(right_step=right_step, left_step=left_step)
+
+
+def make_vmapped_pallas_hooks(expansion: int = 8,
+                              interpret: Optional[bool] = None
+                              ) -> BatchedLanczosHooks:
+    """vmap-of-scalar-kernel fallback hooks (the pre-engine batching scheme).
+
+    Kept as an explicit backend so the engine benchmark can measure batched
+    launch vs per-prompt vmap, and as the escape hatch for shapes a native
+    batched launch cannot take.
+    """
+    return _make_vmapped_pallas_hooks(
+        expansion, INTERPRET if interpret is None else interpret)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_vmapped_pallas_hooks(expansion: int, interp: bool
+                               ) -> BatchedLanczosHooks:
+    from ..core.lanczos import batch_hooks
+    return batch_hooks(_make_pallas_hooks(expansion, interp))

@@ -1,6 +1,12 @@
 """Serving CLI: continuous-batching engine on a reduced config.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --requests 8
+
+Decomposed-KV serving (the paper's activation decomposition applied to the
+KV stream) rides one DecomposeEngine, constructed here from the CLI flags
+and handed to the serving engine:
+
+  ... --decompose-kv-rank 8 --dkv-tail 16 --backend pallas_interpret
 """
 from __future__ import annotations
 
@@ -10,6 +16,7 @@ import jax
 import numpy as np
 
 from ..configs.base import get_arch
+from ..engine import DecomposeEngine, EngineConfig, available_backends
 from ..models import api
 from ..serving import Engine, Request
 
@@ -22,12 +29,26 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--decompose-kv-rank", type=int, default=0,
+                    help="serve the low-rank KV cache at this rank (0=off)")
+    ap.add_argument("--dkv-tail", type=int, default=16,
+                    help="dense recent-token tail length")
+    ap.add_argument("--backend", default="reference",
+                    choices=available_backends(),
+                    help="decomposition backend for the engine")
+    ap.add_argument("--expansion", type=int, default=8,
+                    help="D-com compute-expansion factor f")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch).reduced()
     fns = api.model_fns(cfg)
     params = fns.init(jax.random.PRNGKey(0), cfg)
-    eng = Engine(cfg, params, slots=args.slots, max_len=args.max_len)
+    dengine = DecomposeEngine(EngineConfig(
+        backend=args.backend, expansion=args.expansion,
+        kv_rank=args.decompose_kv_rank, kv_tail=args.dkv_tail))
+    eng = Engine(cfg, params, slots=args.slots, max_len=args.max_len,
+                 decompose_kv_rank=args.decompose_kv_rank,
+                 dkv_tail=args.dkv_tail, decompose_engine=dengine)
 
     rng = np.random.RandomState(0)
     for i in range(args.requests):
@@ -39,6 +60,7 @@ def main() -> None:
     for r in sorted(done, key=lambda r: r.uid):
         print(f"req {r.uid}: {r.out_tokens}")
     s = eng.stats
+    print(f"engine: {dengine}")
     print(f"stats: prefills={s.prefills} decode_steps={s.decode_steps} "
           f"tokens={s.tokens_out} wall={s.wall_s:.2f}s "
           f"tok/s={s.tokens_out / max(s.wall_s, 1e-9):.1f}")

@@ -52,6 +52,62 @@ def model_fns(cfg: ArchConfig) -> ModelFns:
     return _FAMILY[cfg.family]
 
 
+@dataclasses.dataclass(frozen=True)
+class DecomposedFns:
+    """Decomposed-execution surface, bound to ONE DecomposeEngine.
+
+    ``forward``/``logit_kl`` run policy-selected decomposed blocks;
+    ``prefill_dkv``/``decode_step_dkv``/``compress_tail`` are the
+    decomposed-KV-cache serving path.  Obtain via :func:`decomposed_fns`.
+    """
+    engine: Any
+    forward: Callable               # (params, tokens) -> logits
+    logit_kl: Callable              # (params, tokens) -> scalar
+    prefill_dkv: Callable           # (params, tokens, rank, ...) -> (logits, cache)
+    decode_step_dkv: Callable       # (params, token, cache, pos, frozen_len)
+    compress_tail: Callable         # (cache, rank) -> cache
+
+
+def decomposed_fns(cfg: ArchConfig, engine) -> DecomposedFns:
+    """Bind the decomposed-execution entry points to ``engine``.
+
+    The engine (a ``repro.engine.DecomposeEngine``) is the ONLY source of
+    decomposition for everything returned here — consumers never touch
+    ranks, hooks, or backends directly.  Dense family only (the engine's
+    decomposed paths are implemented for the dense transformer).
+    """
+    assert cfg.family == "dense", "decomposed execution: dense family"
+    from . import decomposed as D
+    from . import decomposed_kv as DK
+    runtime = D.DecomposedRuntime(engine=engine) \
+        if engine.config.policy is not None else None
+
+    def forward(params, tokens, wfactors=None):
+        assert runtime is not None, "engine has no decomposition policy"
+        return D.forward(params, cfg, tokens, runtime, wfactors)
+
+    def logit_kl(params, tokens, wfactors=None):
+        assert runtime is not None, "engine has no decomposition policy"
+        return D.logit_kl(params, cfg, tokens, runtime, wfactors)
+
+    def prefill_dkv(params, tokens, rank=None, tail=None, exact=False):
+        return DK.prefill_dkv(
+            params, cfg, tokens,
+            engine.config.kv_rank if rank is None else rank,
+            tail=engine.config.kv_tail if tail is None else tail,
+            exact=exact, engine=engine)
+
+    def decode_step_dkv(params, token, cache, pos, frozen_len):
+        return DK.decode_step_dkv(params, cfg, token, cache, pos, frozen_len)
+
+    def compress_tail(cache, rank=None):
+        return DK.compress_tail(
+            cache, cfg, engine.config.kv_rank if rank is None else rank)
+
+    return DecomposedFns(engine, forward, logit_kl, prefill_dkv,
+                         decode_step_dkv, compress_tail)
+
+
 def abstract_params(cfg: ArchConfig):
     """Parameter ShapeDtypeStructs without allocating anything."""
     fns = model_fns(cfg)

@@ -1,10 +1,13 @@
 """Decomposed-execution integration layer — the paper's technique wired into
 the model zoo (paper Figs. 1, 5, 6).
 
-For every layer the :class:`~repro.core.policy.DecompositionPolicy` selects,
-the block input is (a) outlier-extracted channel-wise (§4), (b) decomposed by
-batched Lanczos bidiagonalization (§2.3), and (c) consumed by the layer's
-GEMMs in decomposition-preserved form (§3.2):
+All decomposition flows through ONE :class:`~repro.engine.DecomposeEngine`
+(carried by :class:`DecomposedRuntime`); this module only decides WHERE in
+the block the engine is invoked.  For every layer the
+:class:`~repro.core.policy.DecompositionPolicy` selects, the block input is
+(a) outlier-extracted channel-wise (§4), (b) decomposed by the engine's
+natively batched Lanczos bidiagonalization (§2.3), and (c) consumed by the
+layer's GEMMs in decomposition-preserved form (§3.2):
 
 * QKV projections: ``lowrank_matmul`` (Eq. 6) — or
   ``lowrank_x_lowrank_weight`` (Eq. 7) when the policy also decomposes the
@@ -36,13 +39,9 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from ..core import lanczos as lz
-from ..core import outlier as ol
 from ..core.policy import DecompositionPolicy, LayerPolicy
-from ..core.lowrank import LowRank, add_bias_rank
-from ..core.preserved import (decompose_weight, lowrank_matmul,
-                              lowrank_x_lowrank_weight, preserved_pv,
-                              preserved_qk_scores)
+from ..core.lowrank import LowRank
+from ..engine import DecomposeEngine, EngineConfig
 from . import layers as L
 from . import transformer as T
 
@@ -52,10 +51,51 @@ Params = Dict[str, Any]
 
 @dataclasses.dataclass(frozen=True)
 class DecomposedRuntime:
-    """Runtime configuration for decomposed execution."""
-    policy: DecompositionPolicy
+    """Runtime configuration for decomposed execution.
+
+    A thin, constructor-compatible shell around :class:`DecomposeEngine`:
+    every decomposition (and every preserved-form consumption) goes through
+    ``self.engine`` — the runtime only carries it plus the whole-model
+    policy.  Pass ``engine=`` to share one engine across call sites, or let
+    ``__post_init__`` build one from (policy, attn_mode, backend).
+    """
+    policy: Optional[DecompositionPolicy] = None
     attn_mode: str = "dense"             # "dense" | "preserved"
-    hooks: Any = None                    # LanczosHooks (None → jnp reference)
+    backend: str = "reference"           # engine backend registry key
+    engine: Optional[DecomposeEngine] = None
+
+    def __post_init__(self):
+        if self.engine is None:
+            object.__setattr__(self, "engine", DecomposeEngine(EngineConfig(
+                policy=self.policy, backend=self.backend,
+                attn_mode=self.attn_mode)))
+        else:
+            # The engine is the source of truth; reject CONFLICTING explicit
+            # settings rather than silently overriding them (leaving a field
+            # at its default means "inherit from the engine").
+            for field, mine, its in (
+                    ("attn_mode", self.attn_mode, self.engine.attn_mode),
+                    ("backend", self.backend, self.engine.backend.name)):
+                if mine != type(self).__dataclass_fields__[field].default \
+                        and mine != its:
+                    raise ValueError(
+                        f"DecomposedRuntime({field}={mine!r}) conflicts with "
+                        f"engine's {field}={its!r}; configure the "
+                        f"EngineConfig instead")
+            if (self.policy is not None
+                    and self.engine.config.policy is not None
+                    and self.policy is not self.engine.config.policy):
+                raise ValueError(
+                    "DecomposedRuntime(policy=...) conflicts with the "
+                    "engine's policy; configure the EngineConfig instead")
+            if self.policy is None:
+                object.__setattr__(self, "policy",
+                                   self.engine.config.policy)
+            object.__setattr__(self, "attn_mode", self.engine.attn_mode)
+            object.__setattr__(self, "backend", self.engine.backend.name)
+        if self.policy is None:
+            raise ValueError("DecomposedRuntime needs a DecompositionPolicy "
+                             "(directly or via the engine's EngineConfig)")
 
     def layer(self, i: int) -> LayerPolicy:
         return self.policy.layer(i)
@@ -66,27 +106,18 @@ class DecomposedRuntime:
 # ---------------------------------------------------------------------------
 
 def decompose_activation(x: Array, lp: LayerPolicy, threshold: float,
-                         hooks=None) -> LowRank:
+                         engine: Optional[DecomposeEngine] = None) -> LowRank:
     """x [B, S, H] → LowRank with dense outlier channel track.
 
-    Each prompt decomposes independently (paper §3.1); outlier channel count
-    is the static ``round(outlier_frac · H)``.
+    Thin compatibility wrapper: the pipeline (outlier extraction, batched
+    Lanczos, track re-attachment) lives in
+    :meth:`DecomposeEngine.decompose_activation`.
     """
-    h_dim = x.shape[-1]
-    num_c = max(1, round(lp.outlier_frac * h_dim)) if lp.outlier_frac > 0 \
-        else 0
-    x32 = x.astype(jnp.float32)
-    kw = {} if hooks is None else {"hooks": hooks}
-    if num_c:
-        base, vals, idx = ol.extract(x32, jnp.asarray(threshold, jnp.float32),
-                                     num_c)
-    else:
-        base = x32
-    lr = lz.decompose(base, lp.rank, iters=lp.effective_iters, **kw)
-    lr = lr.astype(x.dtype)
-    if num_c:
-        lr = ol.attach_dense_outliers(lr, vals.astype(x.dtype), idx)
-    return lr
+    engine = engine or _DEFAULT_ENGINE
+    return engine.decompose_activation(x, lp=lp, threshold=threshold)
+
+
+_DEFAULT_ENGINE = DecomposeEngine(EngineConfig())
 
 
 # ---------------------------------------------------------------------------
@@ -104,6 +135,7 @@ def decompose_layer_weights(params: Params, cfg,
     Returns {layer_idx: {"attn": {wq/wk/wv: LowRank}, "mlp": {...}}}.
     Layer params are stacked [L, ...]; we slice per layer.
     """
+    engine = DecomposeEngine(EngineConfig(policy=policy))
     out: Dict[int, Params] = {}
     for i in policy.decomposed_layers():
         lp = policy.layer(i)
@@ -112,11 +144,11 @@ def decompose_layer_weights(params: Params, cfg,
         layer = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
         fac: Params = {"attn": {}, "mlp": {}}
         for kname in WEIGHT_KEYS:
-            fac["attn"][kname] = decompose_weight(
+            fac["attn"][kname] = engine.decompose_weight(
                 layer["attn"][kname]["w"], lp.weight_rank)
         for kname in MLP_KEYS:
             if kname in layer["mlp"]:
-                fac["mlp"][kname] = decompose_weight(
+                fac["mlp"][kname] = engine.decompose_weight(
                     layer["mlp"][kname]["w"], lp.weight_rank)
         out[i] = fac
     return out
@@ -126,39 +158,35 @@ def decompose_layer_weights(params: Params, cfg,
 # Decomposed dense-transformer block
 # ---------------------------------------------------------------------------
 
-def _proj(lr: LowRank, wp: Params, wfac: Optional[LowRank]) -> LowRank:
-    if wfac is not None:
-        y = lowrank_x_lowrank_weight(lr, wfac)
-        if "b" in wp:
-            y = add_bias_rank(y, wp["b"])   # exact rank-1 bias fold
-        return y
-    return lowrank_matmul(lr, wp["w"], bias=wp.get("b"))
-
-
 def decomposed_block(p: Params, x: Array, positions: Array, cfg,
                      lp: LayerPolicy, threshold: float,
                      wfac: Optional[Params] = None,
-                     attn_mode: str = "dense", hooks=None) -> Array:
-    """One transformer block executed in decomposed form per ``lp``."""
+                     engine: Optional[DecomposeEngine] = None) -> Array:
+    """One transformer block executed in decomposed form per ``lp``.
+
+    All decomposition AND all preserved-form consumption go through the
+    ``engine`` (backend/attn-mode were chosen once at its construction).
+    """
+    engine = engine or _DEFAULT_ENGINE
     nh, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
     b, s, _ = x.shape
 
     # ---- attention path -------------------------------------------------
     h1 = T._norm(p["attn_norm"], x, cfg)
-    lr = decompose_activation(h1, lp, threshold, hooks)
+    lr = engine.decompose_activation(h1, lp=lp, threshold=threshold)
 
     wf = (wfac or {}).get("attn", {})
-    q_lr = _proj(lr, p["attn"]["wq"], wf.get("wq"))
-    k_lr = _proj(lr, p["attn"]["wk"], wf.get("wk"))
-    v_lr = _proj(lr, p["attn"]["wv"], wf.get("wv"))
+    q_lr = engine.project(lr, p["attn"]["wq"], wf.get("wq"))
+    k_lr = engine.project(lr, p["attn"]["wk"], wf.get("wk"))
+    v_lr = engine.project(lr, p["attn"]["wv"], wf.get("wv"))
 
-    if attn_mode == "preserved":
+    if engine.attn_mode == "preserved":
         # Paper's preserved QKᵀ/PV contractions (NoPE inside the layer).
-        sc = preserved_qk_scores(q_lr, k_lr, nh, hd ** -0.5, kvh)
+        sc = engine.qk_scores(q_lr, k_lr, nh, hd ** -0.5, kvh)
         mask = positions[..., None] >= positions[..., None, :]
         sc = jnp.where(mask[:, None, :, :], sc.astype(jnp.float32), -1e30)
         pr = jax.nn.softmax(sc, axis=-1)
-        attn_out = preserved_pv(pr, v_lr, nh, kvh).astype(x.dtype)
+        attn_out = engine.pv(pr, v_lr, nh, kvh).astype(x.dtype)
     else:
         q = L._split_heads(q_lr.reconstruct(), nh)
         k = L._split_heads(k_lr.reconstruct(), kvh)
@@ -171,12 +199,13 @@ def decomposed_block(p: Params, x: Array, positions: Array, cfg,
 
     # ---- MLP path --------------------------------------------------------
     h2 = T._norm(p["mlp_norm"], x, cfg)
-    lr2 = decompose_activation(h2, lp, threshold, hooks)
+    lr2 = engine.decompose_activation(h2, lp=lp, threshold=threshold)
     wfm = (wfac or {}).get("mlp", {})
-    up = _proj(lr2, p["mlp"]["up"], wfm.get("up")).reconstruct()
+    up = engine.project(lr2, p["mlp"]["up"], wfm.get("up")).reconstruct()
     act = L.activation_fn(cfg.activation)
     if "gate" in p["mlp"]:
-        gate = _proj(lr2, p["mlp"]["gate"], wfm.get("gate")).reconstruct()
+        gate = engine.project(lr2, p["mlp"]["gate"],
+                              wfm.get("gate")).reconstruct()
         hidden = act(gate) * up
     else:
         hidden = act(up)
@@ -206,7 +235,7 @@ def forward(params: Params, cfg, tokens: Array, runtime: DecomposedRuntime,
             thr = runtime.policy.thresholds.get(i)
             x = decomposed_block(layer, x, positions, cfg, pol, thr,
                                  (wfactors or {}).get(i),
-                                 runtime.attn_mode, runtime.hooks)
+                                 engine=runtime.engine)
         else:
             x = T.block(layer, x, positions, cfg)
     return T.logits_head(params, x, cfg)

@@ -27,7 +27,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..core import lanczos as lz
+from ..engine import DecomposeEngine, EngineConfig
 from . import layers as L
 from . import transformer as T
 
@@ -35,6 +35,10 @@ Array = jax.Array
 Params = Dict[str, Any]
 
 TAIL = 128                      # dense recent-token buffer length
+
+# Module-default engine for callers that don't thread one (tests, one-shot
+# scripts); serving constructs and reuses its own.
+_DEFAULT_ENGINE = DecomposeEngine(EngineConfig())
 
 
 def init_cache(cfg, batch: int, frozen_len: int, rank: int,
@@ -54,33 +58,28 @@ def init_cache(cfg, batch: int, frozen_len: int, rank: int,
     }
 
 
-def _decompose_kv(x: Array, rank: int, iters: Optional[int] = None,
-                  exact: bool = False) -> Tuple[Array, Array]:
-    """x [B, T, kvw] → (U [B, T, r], Vᵀ [B, r, kvw]).
-
-    Lanczos (the paper's production path) for r ≪ min(T, kvw); ``exact``
-    switches to direct SVD — used when r approaches full rank, where
-    floating-point Lanczos loses trailing directions (§2.3: Lanczos is the
-    small-rank algorithm)."""
-    if exact:
-        from ..core.lowrank import from_dense_svd
-        lr = from_dense_svd(x.astype(jnp.float32), rank)
-    else:
-        lr = lz.decompose(x.astype(jnp.float32), rank,
-                          iters=iters or min(rank + 8, min(x.shape[-2:])))
-    return lr.scaled_u().astype(x.dtype), lr.vt.astype(x.dtype)
-
-
 def prefill_dkv(p: Params, cfg, tokens: Array, rank: int,
-                tail: int = TAIL, exact: bool = False) -> Tuple[Array, Params]:
-    """Dense-family prefill that emits a decomposed KV cache."""
+                tail: int = TAIL, exact: bool = False,
+                engine: Optional[DecomposeEngine] = None
+                ) -> Tuple[Array, Params]:
+    """Dense-family prefill that emits a decomposed KV cache.
+
+    K/V factorization goes through :meth:`DecomposeEngine.decompose_kv`
+    (Lanczos via the engine's backend; ``exact`` switches to direct SVD for
+    r near full rank, where floating-point Lanczos loses trailing
+    directions — §2.3: Lanczos is the small-rank algorithm).
+    """
+    if rank < 1:
+        raise ValueError(f"prefill_dkv needs rank >= 1, got {rank} "
+                         "(is the engine's kv_rank configured?)")
+    engine = engine or _DEFAULT_ENGINE
     b, s = tokens.shape
     logits, dense_cache = T.prefill(p, cfg, tokens, s)
     kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
 
     def one(kv):
         flat = kv.reshape(cfg.num_layers * b, s, kvh * hd)
-        u, vt = _decompose_kv(flat, rank, exact=exact)
+        u, vt = engine.decompose_kv(flat, rank, exact=exact)
         return (u.reshape(cfg.num_layers, b, s, rank),
                 vt.reshape(cfg.num_layers, b, rank, kvh * hd))
 

@@ -1,5 +1,7 @@
 """Jit-able step functions: train_step (grad + clip + optimizer [+ optional
-low-rank gradient compression]), prefill_step, decode_step.
+low-rank gradient compression]), prefill_step, decode_step, and the
+decomposed-execution steps (which obtain decomposition exclusively through a
+:class:`~repro.engine.DecomposeEngine`).
 
 These are the functions the dry-run lowers and the drivers execute; they are
 pure (params/opt_state in → out) so checkpoint/restart and elastic re-mesh
@@ -14,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
+from ..engine import DecomposeEngine, EngineConfig
 from ..models import api
 from ..optim import clip_by_global_norm, make_optimizer
 
@@ -89,6 +92,66 @@ def make_decode_step(cfg: ArchConfig) -> Callable:
     def decode_step(params, token, cache, pos):
         return fns.decode_step(params, cfg, token, cache, pos)
     return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Decomposed-execution steps — one DecomposeEngine per step factory
+# ---------------------------------------------------------------------------
+
+def _resolve_engine(engine) -> DecomposeEngine:
+    if engine is None:
+        return DecomposeEngine(EngineConfig())
+    if isinstance(engine, EngineConfig):
+        return DecomposeEngine(engine)
+    return engine
+
+
+def _resolve_policy_engine(engine) -> DecomposeEngine:
+    engine = _resolve_engine(engine)
+    if engine.config.policy is None:
+        raise ValueError(
+            "decomposed forward/quality steps need a DecompositionPolicy: "
+            "pass a DecomposeEngine (or EngineConfig) whose policy is set")
+    return engine
+
+
+def make_decomposed_forward_step(cfg: ArchConfig, engine) -> Callable:
+    """forward(params, tokens) → logits with policy-selected decomposed
+    execution.  ``engine`` is a DecomposeEngine or an EngineConfig (with a
+    policy); the engine is resolved ONCE here and threaded through every
+    block — no per-callsite rank/hook plumbing.
+    """
+    engine = _resolve_policy_engine(engine)
+    from ..models import decomposed as D
+    runtime = D.DecomposedRuntime(engine=engine)
+
+    def forward_step(params, tokens):
+        return D.forward(params, cfg, tokens, runtime)
+    return forward_step
+
+
+def make_decomposed_quality_step(cfg: ArchConfig, engine) -> Callable:
+    """quality(params, tokens) → KL(base ‖ decomposed) over the vocab."""
+    engine = _resolve_policy_engine(engine)
+    from ..models import decomposed as D
+    runtime = D.DecomposedRuntime(engine=engine)
+
+    def quality_step(params, tokens):
+        return D.logit_kl(params, cfg, tokens, runtime)
+    return quality_step
+
+
+def make_dkv_prefill_step(cfg: ArchConfig, rank: int, tail: int = 128,
+                          engine=None, exact: bool = False) -> Callable:
+    """prefill(params, tokens) → (logits, decomposed KV cache) through the
+    engine's backend."""
+    engine = _resolve_engine(engine)
+    from ..models import decomposed_kv as DK
+
+    def prefill_step(params, tokens):
+        return DK.prefill_dkv(params, cfg, tokens, rank, tail=tail,
+                              exact=exact, engine=engine)
+    return prefill_step
 
 
 def init_train_state(cfg: ArchConfig, key, optimizer=None

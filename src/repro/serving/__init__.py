@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ArchConfig
+from ..engine import DecomposeEngine, EngineConfig
 from ..models import api
 
 Array = jax.Array
@@ -54,16 +55,34 @@ class Engine:
 
     def __init__(self, cfg: ArchConfig, params, *, slots: int = 4,
                  max_len: int = 256, sampler: Optional[Callable] = None,
-                 decompose_kv_rank: int = 0, dkv_tail: int = 16):
+                 decompose_kv_rank: Optional[int] = None,
+                 dkv_tail: Optional[int] = None,
+                 decompose_engine: Optional[DecomposeEngine] = None):
         self.cfg, self.params = cfg, params
         self.slots, self.max_len = slots, max_len
         self.fns = api.model_fns(cfg)
         self.sampler = sampler or (lambda lg, k: jnp.argmax(lg, -1)
                                    .astype(jnp.int32))
+        # One DecomposeEngine per serving engine: backend/hook selection
+        # happens here, once, and every prefill decomposition reuses it.
+        # An explicitly passed knob always wins (0 DISABLES decomposed KV);
+        # None knobs inherit from the engine config when one is supplied.
+        if decompose_engine is not None:
+            self.dengine = decompose_engine
+            if decompose_kv_rank is None:
+                decompose_kv_rank = decompose_engine.config.kv_rank
+            if dkv_tail is None:
+                dkv_tail = decompose_engine.config.kv_tail
+        else:
+            decompose_kv_rank = decompose_kv_rank or 0
+            if dkv_tail is None:
+                dkv_tail = 16
+            self.dengine = DecomposeEngine(EngineConfig(
+                kv_rank=decompose_kv_rank, kv_tail=dkv_tail))
         self.dkv_rank = decompose_kv_rank
         self.dkv_tail = dkv_tail
         self.frozen_len = 0
-        if decompose_kv_rank:
+        if self.dkv_rank:
             assert cfg.family == "dense", "decomposed KV: dense family"
             self.cache = None            # built at first prefill
         else:
@@ -117,7 +136,8 @@ class Engine:
             from ..models import decomposed_kv as DK
             logits, cache = DK.prefill_dkv(self.params, self.cfg,
                                            jnp.asarray(toks), self.dkv_rank,
-                                           tail=self.dkv_tail)
+                                           tail=self.dkv_tail,
+                                           engine=self.dengine)
             self.frozen_len = plen
             self.cache = cache
         else:

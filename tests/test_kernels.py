@@ -39,6 +39,52 @@ def test_rmatvec(shape, f):
                                ref.rmatvec(a, u), rtol=1e-5, atol=1e-3)
 
 
+@pytest.mark.parametrize("b", [1, 3])
+@pytest.mark.parametrize("s,h", [(64, 128), (520, 128)])  # 520 % 512 != 0
+def test_matvec_batched(b, s, h):
+    """One launch over the batch == per-element oracle (incl. a row count
+    that is NOT divisible by the default row_block)."""
+    a = _mk(jax.random.PRNGKey(40), (b, s, h), jnp.float32)
+    v = _mk(jax.random.PRNGKey(41), (b, h), jnp.float32)
+    u = _mk(jax.random.PRNGKey(42), (b, s), jnp.float32)
+    y = ops.matvec_batched(a, v, expansion=4)
+    z = ops.rmatvec_batched(a, u, expansion=4)
+    for i in range(b):
+        np.testing.assert_allclose(np.asarray(y[i]),
+                                   np.asarray(ref.matvec(a[i], v[i])),
+                                   rtol=1e-5, atol=1e-3)
+        np.testing.assert_allclose(np.asarray(z[i]),
+                                   np.asarray(ref.rmatvec(a[i], u[i])),
+                                   rtol=1e-5, atol=1e-3)
+
+
+@pytest.mark.parametrize("b", [1, 3])
+@pytest.mark.parametrize("k", [4, 12])
+def test_reorth_batched_matches_scalar(b, k):
+    """Batched fused re-orth (grid (B,3,f)) == the scalar kernel per prompt."""
+    s, h, f = 64, 128, 8
+    a = _mk(jax.random.PRNGKey(50), (b, s, h), jnp.float32)
+    u = _mk(jax.random.PRNGKey(51), (b, s), jnp.float32)
+    v = _mk(jax.random.PRNGKey(52), (b, h), jnp.float32)
+    qv = jnp.stack([jnp.linalg.qr(_mk(jax.random.PRNGKey(53 + i),
+                                      (h, k), jnp.float32))[0]
+                    for i in range(b)])
+    qu = jnp.stack([jnp.linalg.qr(_mk(jax.random.PRNGKey(63 + i),
+                                      (s, k), jnp.float32))[0]
+                    for i in range(b)])
+    z, zn = ops.reorth_right_batched(a, u, qv, expansion=f)
+    w, wn = ops.reorth_left_batched(a, v, qu, expansion=f)
+    for i in range(b):
+        z_i, zn_i = ops.reorth_right(a[i], u[i], qv[i], expansion=f)
+        w_i, wn_i = ops.reorth_left(a[i], v[i], qu[i], expansion=f)
+        np.testing.assert_allclose(np.asarray(z[i]), np.asarray(z_i),
+                                   rtol=1e-5, atol=1e-3)
+        np.testing.assert_allclose(np.asarray(w[i]), np.asarray(w_i),
+                                   rtol=1e-5, atol=1e-3)
+        np.testing.assert_allclose(float(zn[i]), float(zn_i), rtol=1e-5)
+        np.testing.assert_allclose(float(wn[i]), float(wn_i), rtol=1e-5)
+
+
 @pytest.mark.parametrize("shape", SHAPES)
 @pytest.mark.parametrize("k", [8, 16])
 @pytest.mark.parametrize("f", [4, 8])

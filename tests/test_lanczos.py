@@ -1,9 +1,13 @@
-"""Lanczos bidiagonalization vs the LAPACK oracle + properties."""
+"""Lanczos bidiagonalization vs the LAPACK oracle.
+
+Property-based (hypothesis) cases live in test_properties.py, which skips
+itself at module level when hypothesis is not installed — this module must
+import cleanly with only the pinned requirements-dev.txt basics.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import (decompose, from_dense_svd, lanczos_svd,
                         relative_error)
@@ -55,18 +59,3 @@ def test_orthonormal_factors():
     u, s, vt = lanczos_svd(a, rank=8, iters=12)
     np.testing.assert_allclose(np.asarray(u.T @ u), np.eye(8), atol=1e-3)
     np.testing.assert_allclose(np.asarray(vt @ vt.T), np.eye(8), atol=1e-3)
-
-
-@settings(max_examples=15, deadline=None)
-@given(s=st.integers(12, 48), h=st.integers(12, 48), r=st.integers(1, 6))
-def test_property_reconstruction_bounded(s, h, r):
-    """‖X − X̂_r‖ ≤ ‖X‖ and ε decreases vs the oracle's tail energy."""
-    a = jax.random.normal(jax.random.PRNGKey(s * 1000 + h), (s, h))
-    lr = decompose(a, rank=r, iters=min(r + 6, min(s, h)))
-    err = float(relative_error(lr, a))
-    assert 0.0 <= err <= 1.0 + 1e-3
-    # oracle tail: optimal error for the same rank (Eckart–Young)
-    sv = np.linalg.svd(np.asarray(a), compute_uv=False)
-    opt = float(np.sqrt((sv[r:] ** 2).sum() / (sv ** 2).sum()))
-    assert err >= opt - 1e-3            # can't beat optimal
-    assert err <= opt + 0.35            # near-optimal for random matrices

@@ -102,42 +102,5 @@ def test_preserved_attention_gqa(nh, kvh):
     np.testing.assert_allclose(np.asarray(out), np.asarray(pv_ref),
                                rtol=1e-3, atol=1e-3)
 
-
-# ---------------------------------------------------------------------------
-# Property-based invariants (hypothesis)
-# ---------------------------------------------------------------------------
-from hypothesis import given, settings, strategies as st
-
-
-@settings(max_examples=12, deadline=None)
-@given(s=st.integers(8, 40), h=st.sampled_from([16, 32, 48]),
-       n=st.sampled_from([16, 24, 40]), r=st.integers(1, 8),
-       bias=st.booleans())
-def test_property_eq6_exactness(s, h, n, r, bias):
-    """lowrank_matmul(lr, W) reconstructs to lr.reconstruct() @ W (+b) for
-    arbitrary shapes/ranks/bias — the Eq. 6 invariant."""
-    key = jax.random.PRNGKey(s * 10007 + h * 101 + n)
-    lr = from_dense_svd(jax.random.normal(key, (s, h)), r)
-    w = jax.random.normal(jax.random.PRNGKey(7), (h, n)) * 0.2
-    b = jax.random.normal(jax.random.PRNGKey(8), (n,)) if bias else None
-    y = lowrank_matmul(lr, w, bias=b)
-    want = lr.reconstruct() @ w + (b if bias else 0.0)
-    np.testing.assert_allclose(np.asarray(y.reconstruct()),
-                               np.asarray(want), rtol=2e-3, atol=2e-3)
-    assert y.vt.shape[-1] == n                     # output stays factored
-    assert y.u.shape[-2] == s
-
-
-@settings(max_examples=10, deadline=None)
-@given(s=st.integers(8, 32), h=st.sampled_from([16, 32]),
-       r=st.integers(1, 6), p=st.integers(2, 8))
-def test_property_eq7_exactness(s, h, r, p):
-    """Input+weight preserved product equals the dense double product."""
-    key = jax.random.PRNGKey(s * 31 + h * 7 + r)
-    lr = from_dense_svd(jax.random.normal(key, (s, h)), r)
-    w = jax.random.normal(jax.random.PRNGKey(5), (h, h)) * 0.2
-    w_lr = decompose_weight(w, min(p, h))
-    y = lowrank_x_lowrank_weight(lr, w_lr)
-    want = lr.reconstruct() @ w_lr.reconstruct()
-    np.testing.assert_allclose(np.asarray(y.reconstruct()),
-                               np.asarray(want), rtol=2e-3, atol=2e-3)
+# Property-based (hypothesis) invariants live in test_properties.py, which
+# importorskips hypothesis at module level.

@@ -1,0 +1,65 @@
+"""Property-based invariants (hypothesis).
+
+This module holds every hypothesis-driven case so the rest of the suite
+imports without the dependency; the importorskip below skips the whole file
+when hypothesis is absent (install via requirements-dev.txt).
+"""
+import jax
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (decompose, decompose_weight, from_dense_svd,
+                        lowrank_matmul, lowrank_x_lowrank_weight,
+                        relative_error)
+
+
+@settings(max_examples=15, deadline=None)
+@given(s=st.integers(12, 48), h=st.integers(12, 48), r=st.integers(1, 6))
+def test_property_reconstruction_bounded(s, h, r):
+    """‖X − X̂_r‖ ≤ ‖X‖ and ε decreases vs the oracle's tail energy."""
+    a = jax.random.normal(jax.random.PRNGKey(s * 1000 + h), (s, h))
+    lr = decompose(a, rank=r, iters=min(r + 6, min(s, h)))
+    err = float(relative_error(lr, a))
+    assert 0.0 <= err <= 1.0 + 1e-3
+    # oracle tail: optimal error for the same rank (Eckart–Young)
+    sv = np.linalg.svd(np.asarray(a), compute_uv=False)
+    opt = float(np.sqrt((sv[r:] ** 2).sum() / (sv ** 2).sum()))
+    assert err >= opt - 1e-3            # can't beat optimal
+    assert err <= opt + 0.35            # near-optimal for random matrices
+
+
+@settings(max_examples=12, deadline=None)
+@given(s=st.integers(8, 40), h=st.sampled_from([16, 32, 48]),
+       n=st.sampled_from([16, 24, 40]), r=st.integers(1, 8),
+       bias=st.booleans())
+def test_property_eq6_exactness(s, h, n, r, bias):
+    """lowrank_matmul(lr, W) reconstructs to lr.reconstruct() @ W (+b) for
+    arbitrary shapes/ranks/bias — the Eq. 6 invariant."""
+    key = jax.random.PRNGKey(s * 10007 + h * 101 + n)
+    lr = from_dense_svd(jax.random.normal(key, (s, h)), r)
+    w = jax.random.normal(jax.random.PRNGKey(7), (h, n)) * 0.2
+    b = jax.random.normal(jax.random.PRNGKey(8), (n,)) if bias else None
+    y = lowrank_matmul(lr, w, bias=b)
+    want = lr.reconstruct() @ w + (b if bias else 0.0)
+    np.testing.assert_allclose(np.asarray(y.reconstruct()),
+                               np.asarray(want), rtol=2e-3, atol=2e-3)
+    assert y.vt.shape[-1] == n                     # output stays factored
+    assert y.u.shape[-2] == s
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.integers(8, 32), h=st.sampled_from([16, 32]),
+       r=st.integers(1, 6), p=st.integers(2, 8))
+def test_property_eq7_exactness(s, h, r, p):
+    """Input+weight preserved product equals the dense double product."""
+    key = jax.random.PRNGKey(s * 31 + h * 7 + r)
+    lr = from_dense_svd(jax.random.normal(key, (s, h)), r)
+    w = jax.random.normal(jax.random.PRNGKey(5), (h, h)) * 0.2
+    w_lr = decompose_weight(w, min(p, h))
+    y = lowrank_x_lowrank_weight(lr, w_lr)
+    want = lr.reconstruct() @ w_lr.reconstruct()
+    np.testing.assert_allclose(np.asarray(y.reconstruct()),
+                               np.asarray(want), rtol=2e-3, atol=2e-3)

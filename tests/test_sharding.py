@@ -7,8 +7,9 @@ from jax.sharding import AbstractMesh, PartitionSpec as P
 from repro.configs import all_archs
 from repro.distributed import sharding as sh
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH_POD = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+# AbstractMesh takes ((name, size), ...) pairs since jax 0.4.35
+MESH = AbstractMesh((("data", 16), ("model", 16)))
+MESH_POD = AbstractMesh((("pod", 2), ("data", 16), ("model", 16)))
 
 
 def test_dp_axes():
