@@ -18,12 +18,13 @@ def main() -> None:
 
     from . import (dkv_quality, engine_throughput, fig2_convergence,
                    fig3_breakdown, fig10_outliers, fig11_layer_runtime,
-                   fig12_expansion, table2_table3_configs)
+                   fig12_expansion, serving_admission, table2_table3_configs)
     mods = {
         "fig2": fig2_convergence, "fig3": fig3_breakdown,
         "fig10": fig10_outliers, "fig11": fig11_layer_runtime,
         "fig12": fig12_expansion, "table2_table3": table2_table3_configs,
         "dkv_quality": dkv_quality, "engine": engine_throughput,
+        "serving": serving_admission,
     }
     if args.only:
         keep = args.only.split(",")

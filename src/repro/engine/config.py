@@ -34,7 +34,16 @@ class EngineConfig:
     * ``attn_mode``   — ``"dense"`` | ``"preserved"`` consumption of the
                         decomposed QKV inputs (paper §3.2).
     * ``kv_rank`` / ``kv_tail`` / ``kv_iters_extra`` — decomposed-KV-cache
-                        serving knobs (rank 0 disables).
+                        serving knobs (rank 0 disables); ``kv_exact``
+                        switches prefill factorization to direct SVD
+                        (near-full-rank regime, §2.3).
+    * ``sched_*``     — serving-scheduler knobs: prefill lengths round up
+                        to multiples of ``sched_bucket`` (bounds the set of
+                        prefill shapes, hence re-jits), admission is
+                        checked every ``sched_admit_every`` decode rounds
+                        (prefill/decode interleaving policy), and one
+                        admission batch takes at most ``sched_max_admit``
+                        requests (0 = as many as there are free slots).
     """
     policy: Optional[DecompositionPolicy] = None
     backend: str = "reference"
@@ -43,6 +52,10 @@ class EngineConfig:
     kv_rank: int = 0
     kv_tail: int = 128
     kv_iters_extra: int = 8
+    kv_exact: bool = False
+    sched_bucket: int = 16
+    sched_admit_every: int = 1
+    sched_max_admit: int = 0
 
     def layer(self, idx: int) -> LayerPolicy:
         if self.policy is None:

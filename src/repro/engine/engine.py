@@ -143,7 +143,10 @@ class DecomposeEngine:
 
         Lanczos through the engine backend for r ≪ min(T, kvw); ``exact``
         switches to direct SVD — used when r approaches full rank, where
-        floating-point Lanczos loses trailing directions (§2.3)."""
+        floating-point Lanczos loses trailing directions (§2.3).  The
+        requested rank caps at min(T, kvw) — a factorization cannot carry
+        more directions than the matrix has."""
+        rank = min(rank, *x.shape[-2:])
         if exact:
             lr = from_dense_svd(x.astype(jnp.float32), rank)
         else:

@@ -33,11 +33,22 @@ def main() -> None:
                     help="serve the low-rank KV cache at this rank (0=off)")
     ap.add_argument("--dkv-tail", type=int, default=16,
                     help="dense recent-token tail length")
+    ap.add_argument("--dkv-exact", action="store_true",
+                    help="direct-SVD KV factorization (near-full rank)")
     ap.add_argument("--backend", default="reference",
                     choices=available_backends(),
                     help="decomposition backend for the engine")
     ap.add_argument("--expansion", type=int, default=8,
                     help="D-com compute-expansion factor f")
+    ap.add_argument("--admission", default="per_slot",
+                    choices=("per_slot", "gang"),
+                    help="admission policy (gang = legacy, for A/B)")
+    ap.add_argument("--sched-bucket", type=int, default=16,
+                    help="prefill length bucket (bounds re-jits)")
+    ap.add_argument("--admit-every", type=int, default=1,
+                    help="decode rounds between admission checks")
+    ap.add_argument("--max-admit", type=int, default=0,
+                    help="max requests per admission batch (0=free slots)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch).reduced()
@@ -45,10 +56,13 @@ def main() -> None:
     params = fns.init(jax.random.PRNGKey(0), cfg)
     dengine = DecomposeEngine(EngineConfig(
         backend=args.backend, expansion=args.expansion,
-        kv_rank=args.decompose_kv_rank, kv_tail=args.dkv_tail))
+        kv_rank=args.decompose_kv_rank, kv_tail=args.dkv_tail,
+        kv_exact=args.dkv_exact, sched_bucket=args.sched_bucket,
+        sched_admit_every=args.admit_every, sched_max_admit=args.max_admit))
     eng = Engine(cfg, params, slots=args.slots, max_len=args.max_len,
                  decompose_kv_rank=args.decompose_kv_rank,
-                 dkv_tail=args.dkv_tail, decompose_engine=dengine)
+                 dkv_tail=args.dkv_tail, decompose_engine=dengine,
+                 admission=args.admission)
 
     rng = np.random.RandomState(0)
     for i in range(args.requests):
@@ -60,10 +74,12 @@ def main() -> None:
     for r in sorted(done, key=lambda r: r.uid):
         print(f"req {r.uid}: {r.out_tokens}")
     s = eng.stats
-    print(f"engine: {dengine}")
-    print(f"stats: prefills={s.prefills} decode_steps={s.decode_steps} "
+    print(f"engine: {dengine}  admission={args.admission}")
+    print(f"stats: prefills={s.prefills} batches={s.prefill_batches} "
+          f"decode_steps={s.decode_steps} folds={s.tail_folds} "
           f"tokens={s.tokens_out} wall={s.wall_s:.2f}s "
-          f"tok/s={s.tokens_out / max(s.wall_s, 1e-9):.1f}")
+          f"tok/s={s.tokens_out / max(s.wall_s, 1e-9):.1f} "
+          f"ttft={s.mean_ttft_s * 1e3:.1f}ms itl={s.mean_itl_s * 1e3:.1f}ms")
 
 
 if __name__ == "__main__":

@@ -8,10 +8,12 @@ device allocation ever happens for full configs).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..configs.base import ArchConfig, ShapeSpec
 from . import encdec, hybrid, mamba2, moe, transformer, vlm
@@ -52,6 +54,50 @@ def model_fns(cfg: ArchConfig) -> ModelFns:
     return _FAMILY[cfg.family]
 
 
+# ---------------------------------------------------------------------------
+# Cache splicing (per-slot admission support, every family)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def cache_batch_axes(cfg: ArchConfig):
+    """Pytree (matching ``init_cache``'s structure) of each leaf's batch
+    axis, derived by probing ``init_cache`` at two batch sizes — no
+    per-family table to drift when a family adds a cache leaf.  The batch
+    axis is NOT uniform across families (hybrid mamba state and vlm self
+    KV carry leading group axes), which is why gang admission used to be
+    the only safe policy for them."""
+    fns = model_fns(cfg)
+    a = jax.eval_shape(lambda: fns.init_cache(cfg, 2, 8))
+    b = jax.eval_shape(lambda: fns.init_cache(cfg, 5, 8))
+
+    def axis(x, y):
+        d = [i for i, (m, n) in enumerate(zip(x.shape, y.shape)) if m != n]
+        assert len(d) == 1, f"ambiguous batch axis for leaf {x.shape}"
+        return d[0]
+
+    return jax.tree_util.tree_map(axis, a, b)
+
+
+def splice_cache(cfg: ArchConfig, old, new, slot_indices,
+                 src_indices=None):
+    """Scatter batch rows ``src_indices`` (default ``0…n−1``) of ``new``
+    into ``old`` at ``slot_indices`` along each leaf's batch axis.  ``new``
+    may carry more batch rows than ``len(slot_indices)`` (bucketed prefill
+    padding); the excess rows are dropped.  Live slots' rows are untouched,
+    so admission never re-prefills in-flight sequences — any family."""
+    axes = cache_batch_axes(cfg)
+    idx = jnp.asarray(slot_indices, jnp.int32)      # traced-input friendly
+    src = jnp.arange(idx.shape[0], dtype=jnp.int32) \
+        if src_indices is None else jnp.asarray(src_indices, jnp.int32)
+
+    def one(o, nw, ax):
+        om = jnp.moveaxis(o, ax, 0)
+        nm = jnp.moveaxis(nw, ax, 0)[src].astype(o.dtype)
+        return jnp.moveaxis(om.at[idx].set(nm), 0, ax)
+
+    return jax.tree_util.tree_map(one, old, new, axes)
+
+
 @dataclasses.dataclass(frozen=True)
 class DecomposedFns:
     """Decomposed-execution surface, bound to ONE DecomposeEngine.
@@ -65,7 +111,8 @@ class DecomposedFns:
     logit_kl: Callable              # (params, tokens) -> scalar
     prefill_dkv: Callable           # (params, tokens, rank, ...) -> (logits, cache)
     decode_step_dkv: Callable       # (params, token, cache, pos, frozen_len)
-    compress_tail: Callable         # (cache, rank) -> cache
+    compress_tail: Callable         # (cache, rank[, frozen_len, fold]) -> cache
+    splice_dkv: Callable = None     # (live, fresh, slot_indices) -> cache
 
 
 def decomposed_fns(cfg: ArchConfig, engine) -> DecomposedFns:
@@ -100,12 +147,13 @@ def decomposed_fns(cfg: ArchConfig, engine) -> DecomposedFns:
     def decode_step_dkv(params, token, cache, pos, frozen_len):
         return DK.decode_step_dkv(params, cfg, token, cache, pos, frozen_len)
 
-    def compress_tail(cache, rank=None):
+    def compress_tail(cache, rank=None, frozen_len=None, fold=None):
         return DK.compress_tail(
-            cache, cfg, engine.config.kv_rank if rank is None else rank)
+            cache, cfg, engine.config.kv_rank if rank is None else rank,
+            frozen_len=frozen_len, fold=fold)
 
     return DecomposedFns(engine, forward, logit_kl, prefill_dkv,
-                         decode_step_dkv, compress_tail)
+                         decode_step_dkv, compress_tail, DK.splice_dkv)
 
 
 def abstract_params(cfg: ArchConfig):

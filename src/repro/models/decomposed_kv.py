@@ -16,6 +16,14 @@ recent context); the serving engine re-compresses the tail into the
 low-rank prefix on a fixed cadence (rank-concat + retruncate, amortized) —
 mirroring the paper's "decomposition once, consumed many times" economics.
 
+All tail state is PER SLOT: ``frozen_len`` may be a ``[B]`` vector (each
+slot's low-rank prefix length), the prefix rows beyond a slot's
+``frozen_len`` are masked out of the softmax, ``compress_tail`` accepts a
+per-slot ``fold`` mask so each slot folds exactly when ITS tail fills, and
+``splice_dkv`` scatters a freshly prefilled low-rank prefix + empty tail
+into a live cache along the batch axis — the serving engine admits new
+requests without touching live slots.
+
 Approximation surface: the low-rank prefix (rank r of the RoPE'd K/V rows).
 ``prefill_dkv`` at full rank reproduces dense attention exactly
 (tests/test_decomposed_kv.py).
@@ -26,6 +34,7 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..engine import DecomposeEngine, EngineConfig
 from . import layers as L
@@ -80,8 +89,9 @@ def prefill_dkv(p: Params, cfg, tokens: Array, rank: int,
     def one(kv):
         flat = kv.reshape(cfg.num_layers * b, s, kvh * hd)
         u, vt = engine.decompose_kv(flat, rank, exact=exact)
-        return (u.reshape(cfg.num_layers, b, s, rank),
-                vt.reshape(cfg.num_layers, b, rank, kvh * hd))
+        r_eff = u.shape[-1]          # rank caps at min(s, kvw) (exact SVD)
+        return (u.reshape(cfg.num_layers, b, s, r_eff),
+                vt.reshape(cfg.num_layers, b, r_eff, kvh * hd))
 
     k_u, k_vt = one(dense_cache["k"])
     v_u, v_vt = one(dense_cache["v"])
@@ -90,32 +100,45 @@ def prefill_dkv(p: Params, cfg, tokens: Array, rank: int,
                     "tail": {"k": z, "v": z}}
 
 
+def _frozen_vec(frozen_len, pos: Array) -> Array:
+    """Normalize frozen_len (int or per-slot [B] array) to int32 [B]."""
+    return jnp.broadcast_to(jnp.asarray(frozen_len, jnp.int32), pos.shape)
+
+
 def _lowrank_attention(q: Array, c: Params, tail_kv: Params,
-                       pos: Array, frozen_len: int, cfg) -> Array:
-    """q [B, 1, nh, d]; low-rank prefix + dense tail → out [B, 1, nh·d]."""
+                       pos: Array, frozen_len: Array, cfg) -> Array:
+    """q [B, 1, nh, d]; low-rank prefix + dense tail → out [B, 1, nh·d].
+
+    ``frozen_len`` is per-slot [B]: prefix rows at or beyond a slot's
+    frozen_len are zero in U but still produce score 0 (not −inf) through
+    the factors, so they are masked out of the softmax explicitly.
+    """
     nh, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
     g = nh // kvh
     b = q.shape[0]
     scale = hd ** -0.5
     qg = q[:, 0].reshape(b, kvh, g, hd).astype(jnp.float32)
+    t_pre = c["k_u"].shape[1]                     # static prefix row count
 
     # ---- prefix scores through the factors ------------------------------
     k_vt = c["k_vt"].astype(jnp.float32).reshape(b, -1, kvh, hd)
     inner = jnp.einsum("bkgd,brkd->bkgr", qg, k_vt)          # [B,kvh,g,r]
     sc_pre = jnp.einsum("bkgr,btr->bkgt", inner,
                         c["k_u"].astype(jnp.float32)) * scale
+    pre_valid = jnp.arange(t_pre)[None, :] < frozen_len[:, None]   # [B,T]
+    sc_pre = jnp.where(pre_valid[:, None, None, :], sc_pre, -1e30)
 
     # ---- tail scores (exact) ---------------------------------------------
     tk = tail_kv["k"].astype(jnp.float32)                     # [B,tl,kvh,hd]
     sc_tail = jnp.einsum("bkgd,btkd->bkgt", qg, tk) * scale
-    tail_pos = frozen_len + jnp.arange(tk.shape[1])[None, :]
+    tail_pos = frozen_len[:, None] + jnp.arange(tk.shape[1])[None, :]
     valid = tail_pos <= pos[:, None]                          # [B, tl]
     sc_tail = jnp.where(valid[:, None, None, :], sc_tail, -1e30)
 
     # ---- joint softmax -----------------------------------------------------
     sc = jnp.concatenate([sc_pre, sc_tail], axis=-1)
     pr = jax.nn.softmax(sc, axis=-1)
-    p_pre, p_tail = pr[..., :frozen_len], pr[..., frozen_len:]
+    p_pre, p_tail = pr[..., :t_pre], pr[..., t_pre:]
 
     # ---- PV through the factors -------------------------------------------
     tmp = jnp.einsum("bkgt,btr->bkgr", p_pre,
@@ -128,8 +151,13 @@ def _lowrank_attention(q: Array, c: Params, tail_kv: Params,
 
 
 def decode_step_dkv(p: Params, cfg, token: Array, cache: Params,
-                    pos: Array, frozen_len: int) -> Tuple[Array, Params]:
-    """One-token decode over the decomposed cache (dense transformer)."""
+                    pos: Array, frozen_len) -> Tuple[Array, Params]:
+    """One-token decode over the decomposed cache (dense transformer).
+
+    ``frozen_len`` is an int (uniform) or a per-slot int32 [B] vector; each
+    slot's tail write position is its own ``pos − frozen_len``.
+    """
+    frozen_len = _frozen_vec(frozen_len, pos)
     x = p["embed"]["w"][token][:, None, :] * jnp.asarray(
         cfg.d_model ** 0.5 if cfg.tie_embeddings else 1.0, cfg.jax_dtype)
     kvh = cfg.num_kv_heads
@@ -164,38 +192,116 @@ def decode_step_dkv(p: Params, cfg, token: Array, cache: Params,
     return T.logits_head(p, x, cfg)[:, 0], new_cache
 
 
-def compress_tail(cache: Params, cfg, rank: int) -> Params:
+def compress_tail(cache: Params, cfg, rank: int,
+                  frozen_len=None, fold=None) -> Params:
     """Fold the dense tail into the low-rank prefix (rank-concat +
-    retruncate) — the serving engine calls this every TAIL steps."""
+    retruncate).
+
+    Uniform mode (``frozen_len is None``): every slot's tail occupies rows
+    ``t_frozen … t_frozen+tl`` — the pre-per-slot behavior, kept for
+    one-shot callers (tests, ``api.decomposed_fns``).
+
+    Per-slot mode: ``frozen_len`` is an int32 [B] vector and ``fold`` a
+    bool [B] mask — each folding slot's tail rows are scattered at ITS
+    ``frozen_len`` offset in the row space, non-folding slots keep their
+    prefix, factors, and tail untouched (time axis still grows by ``tl``
+    so shapes stay static; the serving engine slices back to
+    ``max(frozen_len)``).
+    """
     from ..core.lowrank import LowRank, retruncate
     nl, b, tl, kvh, hd = cache["tail"]["k"].shape
     kvw = kvh * hd
+    r_in = cache["k_u"].shape[-1]
+    t_frozen = cache["k_u"].shape[2]
+    # retruncate's output rank caps at both the concatenated factor width
+    # and the row count; non-folding slots keep all r_in columns, so the
+    # common output rank is the max of the two (zero-padded, never sliced)
+    r_fold = min(rank, r_in + tl, t_frozen + tl)
+    r_out = max(r_in, r_fold)
+
+    if frozen_len is None:
+        offsets = jnp.full((b,), t_frozen, jnp.int32)
+        fold_m = jnp.ones((b,), bool)
+    else:
+        offsets = jnp.asarray(frozen_len, jnp.int32).reshape(b)
+        fold_m = jnp.ones((b,), bool) if fold is None \
+            else jnp.asarray(fold).reshape(b)
+
+    # identity scatter block per slot: E[offset+i, i] = 1  → [B, T+tl, tl]
+    eye = jnp.eye(tl, dtype=jnp.float32)
+    scat = jax.vmap(lambda off: jax.lax.dynamic_update_slice(
+        jnp.zeros((t_frozen + tl, tl), jnp.float32), eye, (off, 0)))(offsets)
 
     def one(u, vt, tail):
-        tail2 = tail.reshape(nl * b, tl, kvw).astype(jnp.float32)
-        u2 = u.reshape(nl * b, -1, rank).astype(jnp.float32)
-        vt2 = vt.reshape(nl * b, rank, kvw).astype(jnp.float32)
-        # tail as exact rank-tl factors appended to the prefix row space:
-        # [U | P_tail·tail] with Vt rows [Vt ; I-scatter] — here the tail
-        # rows live at the END of the time axis, so U gains tl rows.
-        t_frozen = u2.shape[1]
+        tail2 = tail.reshape(nl, b, tl, kvw).astype(jnp.float32)
+        u2 = u.astype(jnp.float32)                       # [nl, b, T, r]
+        vt2 = vt.astype(jnp.float32)                     # [nl, b, r, kvw]
+        u_pad = jnp.pad(u2, ((0, 0), (0, 0), (0, tl), (0, 0)))
         u_cat = jnp.concatenate(
-            [jnp.pad(u2, ((0, 0), (0, tl), (0, 0))),
-             jnp.pad(jnp.eye(tl, dtype=u2.dtype)[None].repeat(nl * b, 0),
-                     ((0, 0), (t_frozen, 0), (0, 0)))], axis=-1)
+            [u_pad, jnp.broadcast_to(scat[None], (nl,) + scat.shape)],
+            axis=-1)                                     # [nl,b,T+tl,r+tl]
         vt_cat = jnp.concatenate([vt2, tail2], axis=-2)
         lr = retruncate(LowRank(u_cat,
-                                jnp.ones(u_cat.shape[:-1][:-1]
+                                jnp.ones(u_cat.shape[:-2]
                                          + (u_cat.shape[-1],), u_cat.dtype),
-                                vt_cat), rank)
-        return (lr.scaled_u().reshape(nl, b, t_frozen + tl, rank),
-                lr.vt.reshape(nl, b, rank, kvw))
+                                vt_cat), r_fold)
+        pad_r = lambda a, ax: jnp.pad(
+            a, [(0, 0)] * ax + [(0, r_out - a.shape[ax])]
+            + [(0, 0)] * (a.ndim - ax - 1))
+        u_new, vt_new = pad_r(lr.scaled_u(), 3), pad_r(lr.vt, 2)
+        # non-folding slots keep their (time-padded, rank-padded) factors
+        keep_u, keep_vt = pad_r(u_pad, 3), pad_r(vt2, 2)
+        fm = fold_m[None, :, None, None]
+        return (jnp.where(fm, u_new, keep_u),
+                jnp.where(fm, vt_new, keep_vt))
 
     k_u, k_vt = one(cache["k_u"], cache["k_vt"], cache["tail"]["k"])
     v_u, v_vt = one(cache["v_u"], cache["v_vt"], cache["tail"]["v"])
-    z = jnp.zeros_like(cache["tail"]["k"])
+    fm = fold_m[None, :, None, None, None]
+    new_tail = {k: jnp.where(fm, jnp.zeros_like(v), v)
+                for k, v in cache["tail"].items()}
     return {"k_u": k_u.astype(cache["k_u"].dtype),
             "k_vt": k_vt.astype(cache["k_vt"].dtype),
             "v_u": v_u.astype(cache["v_u"].dtype),
             "v_vt": v_vt.astype(cache["v_vt"].dtype),
-            "tail": {"k": z, "v": z}}
+            "tail": new_tail}
+
+
+def splice_dkv(live: Params, fresh: Params, slot_indices,
+               src_indices=None) -> Params:
+    """Scatter freshly prefilled rows of ``fresh`` (batch rows
+    ``src_indices``, default 0…n−1) into ``live`` at ``slot_indices`` along
+    the batch axis — admission into a LIVE decomposed cache, no re-prefill
+    of occupied slots.
+
+    Time and rank axes are zero-padded to the pairwise max first (zero U
+    rows/columns and zero Vᵀ rows are inert), so a fresh short prefix can
+    join a cache whose prefix has grown through tail folds, and vice
+    versa.
+    """
+    idx = jnp.asarray(slot_indices, jnp.int32)      # traced-input friendly
+    src = jnp.arange(idx.shape[0], dtype=jnp.int32) \
+        if src_indices is None else jnp.asarray(src_indices, jnp.int32)
+
+    def pad_to(a, axis, size):
+        if a.shape[axis] >= size:
+            return a
+        w = [(0, 0)] * a.ndim
+        w[axis] = (0, size - a.shape[axis])
+        return jnp.pad(a, w)
+
+    t = max(live["k_u"].shape[2], fresh["k_u"].shape[2])
+    r = max(live["k_u"].shape[-1], fresh["k_u"].shape[-1])
+    out: Params = {}
+    for key in ("k_u", "v_u"):
+        old = pad_to(pad_to(live[key], 2, t), 3, r)
+        new = pad_to(pad_to(fresh[key], 2, t), 3, r)
+        out[key] = old.at[:, idx].set(new[:, src].astype(old.dtype))
+    for key in ("k_vt", "v_vt"):
+        old = pad_to(live[key], 2, r)
+        new = pad_to(fresh[key], 2, r)
+        out[key] = old.at[:, idx].set(new[:, src].astype(old.dtype))
+    out["tail"] = {k: live["tail"][k].at[:, idx].set(
+        fresh["tail"][k][:, src].astype(live["tail"][k].dtype))
+        for k in live["tail"]}
+    return out

@@ -1,22 +1,37 @@
 """Serving engine: batched prefill/decode with continuous batching.
 
 A slot-based engine (vLLM-style, sized for the dry-run meshes): ``slots``
-concurrent sequences share one static KV cache; finished sequences free
-their slot; queued requests prefill into free slots.
+concurrent sequences share one static cache; finished sequences free their
+slot; queued requests prefill into free slots.
 
-Admission with LIVE sequences present re-prefills the slot batch, so the
-fresh cache rows are SPLICED into the live cache along the batch axis
-(dense family; other families gang-admit when all slots are free —
-documented limitation).  ``decompose_kv_rank`` serves the dense family on
-the paper's low-rank KV cache (models.decomposed_kv): prefill decomposes
-K/V, decode contracts through the factors, and the dense tail is folded
-back (compress_tail) whenever it fills.
+Admission is PER SLOT (``admission="per_slot"``, the default): only the
+newly admitted requests are prefilled — batch and length rounded up to
+scheduler buckets to bound re-jits — and the fresh cache rows are spliced
+into the live cache along each leaf's batch axis (``api.splice_cache``,
+every family; ``decomposed_kv.splice_dkv`` for the low-rank KV cache).
+Live slots are never re-prefilled and admission never waits for them to
+drain.  ``admission="gang"`` keeps the legacy policy (whole-slot-batch
+prefill; decomposed-KV and non-dense families block until every slot is
+free) for A/B comparison in ``benchmarks/serving_admission.py``.
+
+``decompose_kv_rank`` serves the dense family on the paper's low-rank KV
+cache (models.decomposed_kv): prefill decomposes K/V, decode contracts
+through the factors, and each slot's dense tail is folded back
+(``compress_tail`` with a per-slot fold mask) when THAT slot's tail
+fills — plus opportunistic co-folding of half-full neighbors to
+re-synchronize fold cadence.  ``frozen_len`` is a per-slot vector, not a
+global scalar.
+
+The :class:`Scheduler` dispatches FIFO with prefill-length bucketing (one
+plen bucket per admission batch); ``EngineStats`` tracks per-request
+first-token and inter-token latency.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -36,30 +51,152 @@ class Request:
     max_new_tokens: int = 16
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # -- latency accounting (monotonic perf_counter stamps, 0.0 = not yet)
+    t_submit: float = 0.0
+    t_first: float = 0.0             # first token emitted (prefill sample)
+    t_last: float = 0.0              # most recent token
+    t_done: float = 0.0
 
 
 @dataclasses.dataclass
 class EngineStats:
-    prefills: int = 0
+    prefills: int = 0                # admitted REQUESTS (one per request)
+    prefill_batches: int = 0         # admission batches (jit launches)
     decode_steps: int = 0
     tokens_out: int = 0
+    tail_folds: int = 0              # per-slot compress_tail events
     wall_s: float = 0.0
+    ttft_s: List[float] = dataclasses.field(default_factory=list)
+    itl_s: List[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def mean_ttft_s(self) -> float:
+        return sum(self.ttft_s) / len(self.ttft_s) if self.ttft_s else 0.0
+
+    @property
+    def mean_itl_s(self) -> float:
+        return sum(self.itl_s) / len(self.itl_s) if self.itl_s else 0.0
+
+
+class Scheduler:
+    """FIFO request queue with prefill-length bucketing.
+
+    ``next_batch`` serves the HEAD of the queue plus any later requests
+    falling in the same prefill-length bucket (FIFO order within the
+    bucket), so one admission batch compiles exactly one (batch, plen)
+    shape.  Prompt lengths round up to multiples of ``bucket``; admitted
+    batch size is capped at ``max_admit`` (0 = number of free slots).
+    """
+
+    def __init__(self, bucket: int = 16, max_admit: int = 0):
+        self.bucket = max(1, bucket)
+        self.max_admit = max_admit
+        self._q: List[Request] = []
+
+    def submit(self, req: Request) -> None:
+        self._q.append(req)
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    @property
+    def pending(self) -> List[Request]:
+        return list(self._q)
+
+    def bucket_of(self, plen: int) -> int:
+        return -(-max(int(plen), 1) // self.bucket) * self.bucket
+
+    def next_batch(self, free_slots: int) -> List[Request]:
+        if not self._q or free_slots < 1:
+            return []
+        cap = free_slots if self.max_admit < 1 \
+            else min(free_slots, self.max_admit)
+        want = self.bucket_of(len(self._q[0].prompt))
+        take: List[Request] = []
+        keep: List[Request] = []
+        for r in self._q:
+            if len(take) < cap and self.bucket_of(len(r.prompt)) == want:
+                take.append(r)
+            else:
+                keep.append(r)
+        self._q = keep
+        return take
+
+
+def _pow2(n: int) -> int:
+    return 1 << max(0, n - 1).bit_length()
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_steps(fns: api.ModelFns, cfg: ArchConfig, max_len: int):
+    """Jitted (decode, prefill) shared across Engine instances of the same
+    config — XLA executables are reused instead of re-traced per engine."""
+    decode = jax.jit(lambda p, t, c, pos: fns.decode_step(p, cfg, t, c, pos))
+    prefill = jax.jit(lambda p, *a: fns.prefill(p, cfg, *a, max_len))
+    return decode, prefill
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_dkv_decode(cfg: ArchConfig):
+    from ..models import decomposed_kv as DK
+    return jax.jit(lambda p, t, c, pos, fl: DK.decode_step_dkv(
+        p, cfg, t, c, pos, frozen_len=fl))
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_dkv_prefill(cfg: ArchConfig, backend: str, expansion: int,
+                        rank: int, tail: int, iters_extra: int,
+                        exact: bool):
+    """Jitted decomposed-KV prefill (forward + Lanczos/SVD factorization in
+    ONE compiled program — ~100× over the eager path on small configs).
+    Keyed on the decomposition-relevant engine knobs so equivalently
+    configured serving engines share executables."""
+    from ..models import decomposed_kv as DK
+    eng = DecomposeEngine(EngineConfig(
+        backend=backend, expansion=expansion, kv_rank=rank, kv_tail=tail,
+        kv_iters_extra=iters_extra))
+    return jax.jit(lambda p, tk: DK.prefill_dkv(
+        p, cfg, tk, rank, tail=tail, exact=exact, engine=eng))
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_dkv_compress(cfg: ArchConfig, rank: int):
+    from ..models import decomposed_kv as DK
+    return jax.jit(lambda c, fl, fm: DK.compress_tail(
+        c, cfg, rank, frozen_len=fl, fold=fm))
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_splices():
+    """Jitted cache-splice kernels (slot/src index vectors are traced, so
+    one executable serves every admission with the same shape profile)."""
+    from ..models import decomposed_kv as DK
+    dkv = jax.jit(lambda live, fresh, idx, src:
+                  DK.splice_dkv(live, fresh, idx, src))
+    fam = jax.jit(lambda old, new, idx, src, cfg:
+                  api.splice_cache(cfg, old, new, idx, src),
+                  static_argnums=(4,))
+    return dkv, fam
 
 
 class Engine:
     """Continuous-batching engine over the unified model API.
 
-    All sequences in a batch prefill together (same padded length); decode
-    advances every live slot one token per step.
+    Decode advances every live slot one token per step; admission splices
+    only the newly prefilled rows into the live cache (per-slot policy).
     """
 
     def __init__(self, cfg: ArchConfig, params, *, slots: int = 4,
                  max_len: int = 256, sampler: Optional[Callable] = None,
                  decompose_kv_rank: Optional[int] = None,
                  dkv_tail: Optional[int] = None,
-                 decompose_engine: Optional[DecomposeEngine] = None):
+                 decompose_engine: Optional[DecomposeEngine] = None,
+                 admission: str = "per_slot",
+                 dkv_exact: Optional[bool] = None):
+        assert admission in ("per_slot", "gang"), admission
         self.cfg, self.params = cfg, params
         self.slots, self.max_len = slots, max_len
+        self.admission = admission
         self.fns = api.model_fns(cfg)
         self.sampler = sampler or (lambda lg, k: jnp.argmax(lg, -1)
                                    .astype(jnp.int32))
@@ -81,86 +218,170 @@ class Engine:
                 kv_rank=decompose_kv_rank, kv_tail=dkv_tail))
         self.dkv_rank = decompose_kv_rank
         self.dkv_tail = dkv_tail
-        self.frozen_len = 0
+        self.dkv_exact = self.dengine.config.kv_exact \
+            if dkv_exact is None else dkv_exact
         if self.dkv_rank:
             assert cfg.family == "dense", "decomposed KV: dense family"
             self.cache = None            # built at first prefill
         else:
             self.cache = self.fns.init_cache(cfg, slots, max_len)
+        # per-slot state: pos is the next write position, frozen_len the
+        # length of the slot's low-rank prefix (dkv path only)
         self.pos = np.zeros((slots,), np.int32)
+        self.frozen_len = np.zeros((slots,), np.int32)
         self.live: List[Optional[Request]] = [None] * slots
-        self.queue: List[Request] = []
+        ecfg = self.dengine.config
+        self.sched = Scheduler(bucket=ecfg.sched_bucket,
+                               max_admit=ecfg.sched_max_admit)
+        self.admit_every = max(1, ecfg.sched_admit_every)
         self.stats = EngineStats()
+        self._round = 0
 
-        self._decode = jax.jit(
-            lambda p, t, c, pos: self.fns.decode_step(p, cfg, t, c, pos))
+        self._decode, self._prefill = _jitted_steps(self.fns, cfg, max_len)
+        self._splice_dkv, self._splice_fam = _jitted_splices()
+        # frozen_len is a traced [B] vector now, so the dkv step jits
+        # cleanly (no retrace per tail fold)
+        if self.dkv_rank:
+            ec = self.dengine.config
+            self._decode_dkv = _jitted_dkv_decode(cfg)
+            self._prefill_dkv = _jitted_dkv_prefill(
+                cfg, ec.backend, ec.expansion, self.dkv_rank, self.dkv_tail,
+                ec.kv_iters_extra, self.dkv_exact)
+            self._compress_dkv = _jitted_dkv_compress(cfg, self.dkv_rank)
 
     # -- public API ------------------------------------------------------
+    @property
+    def queue(self) -> List[Request]:
+        return self.sched._q
+
     def submit(self, req: Request) -> None:
-        self.queue.append(req)
+        if len(req.prompt) >= self.max_len:
+            raise ValueError(
+                f"prompt of {len(req.prompt)} tokens leaves no decode room "
+                f"in a max_len={self.max_len} cache")
+        if not req.t_submit:
+            req.t_submit = time.perf_counter()
+        self.sched.submit(req)
+
+    def step(self) -> List[Request]:
+        """One scheduling iteration: admit if due (per the interleaving
+        policy), then decode one token on every live slot.  Returns the
+        requests that finished this step."""
+        if self._round % self.admit_every == 0 or not any(self.live):
+            self._admit()
+        self._round += 1
+        if not any(self.live):
+            return []
+        return self._decode_round()
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
-        t0 = time.time()
+        t0 = time.perf_counter()
         finished: List[Request] = []
         for _ in range(max_steps):
-            self._admit()
-            if not any(self.live):
-                if not self.queue:
-                    break
-                continue
-            finished.extend(self._decode_round())
-        self.stats.wall_s += time.time() - t0
+            finished.extend(self.step())
+            if not any(self.live) and not len(self.sched):
+                # drained: admission on an all-free engine always takes at
+                # least the queue head, so an empty queue means done
+                break
+        self.stats.wall_s += time.perf_counter() - t0
         return finished
 
     # -- internals ---------------------------------------------------------
-    def _admit(self) -> None:
+    def _admit(self) -> int:
         free = [i for i, r in enumerate(self.live) if r is None]
-        if not free or not self.queue:
-            return
+        if not free or not len(self.sched):
+            return 0
         has_live = any(r is not None for r in self.live)
-        if has_live and (self.dkv_rank or self.cfg.family != "dense"):
-            # gang admission: splice-merge is implemented for the dense
-            # dense-cache path only (documented limitation)
-            return
-        batch = [self.queue.pop(0) for _ in free[:len(self.queue)]]
-        plen = max(len(r.prompt) for r in batch)
-        toks = np.zeros((self.slots, plen), np.int32)
-        new_mask = np.zeros((self.slots,), bool)
-        for slot, req in zip(free, batch):
-            toks[slot, plen - len(req.prompt):] = req.prompt   # left-pad
+        if self.admission == "gang" and has_live and \
+                (self.dkv_rank or self.cfg.family != "dense"):
+            # legacy gang restriction, kept only for the A/B benchmark:
+            # splice-merge used to exist for the dense dense-cache path only
+            return 0
+        batch = self.sched.next_batch(len(free))
+        if not batch:
+            return 0
+        slots_idx = free[:len(batch)]
+        maxp = max(len(r.prompt) for r in batch)
+        plen = self.sched.bucket_of(maxp)
+        if plen >= self.max_len:
+            # bucket rounds past the cache: fall back to the exact length
+            # (one extra jit shape near the cap beats losing decode room)
+            plen = maxp
+
+        if self.admission == "gang":
+            logits = self._admit_gang(batch, slots_idx, plen, has_live)
+            rows = slots_idx
+        else:
+            logits = self._admit_per_slot(batch, slots_idx, plen)
+            rows = list(range(len(batch)))
+
+        now = time.perf_counter()
+        nxt = np.asarray(self.sampler(logits, 1))
+        for row, slot, req in zip(rows, slots_idx, batch):
             self.live[slot] = req
-            new_mask[slot] = True
-        # Prefill the WHOLE slot batch (idle slots compute padding — the
-        # static-shape trade; per-slot prefill would re-jit per length).
+            self.pos[slot] = plen
+            self.frozen_len[slot] = plen if self.dkv_rank else 0
+            req.out_tokens.append(int(nxt[row]))
+            req.t_first = req.t_last = now
+            self.stats.ttft_s.append(now - req.t_submit)
+        self.stats.prefills += len(batch)
+        self.stats.prefill_batches += 1
+        return len(batch)
+
+    def _toks(self, batch: List[Request], rows: int, plen: int,
+              row_of: Callable[[int], int]) -> np.ndarray:
+        toks = np.zeros((rows, plen), np.int32)
+        for j, req in enumerate(batch):
+            toks[row_of(j), plen - len(req.prompt):] = req.prompt  # left-pad
+        return toks
+
+    def _admit_per_slot(self, batch: List[Request], slots_idx: List[int],
+                        plen: int) -> Array:
+        """Prefill ONLY the admitted requests (batch padded to a power of
+        two so compile count stays O(log slots × max_len/bucket)) and
+        splice the fresh rows into the live cache."""
+        nb = min(_pow2(len(batch)), max(self.slots, 1))
+        toks = self._toks(batch, nb, plen, lambda j: j)
         if self.dkv_rank:
             from ..models import decomposed_kv as DK
-            logits, cache = DK.prefill_dkv(self.params, self.cfg,
-                                           jnp.asarray(toks), self.dkv_rank,
-                                           tail=self.dkv_tail,
-                                           engine=self.dengine)
-            self.frozen_len = plen
-            self.cache = cache
+            logits, fresh = self._prefill_dkv(self.params, jnp.asarray(toks))
+            if self.cache is None:
+                self.cache = DK.init_cache(self.cfg, self.slots,
+                                           fresh["k_u"].shape[2],
+                                           fresh["k_u"].shape[-1],
+                                           tail=self.dkv_tail)
+            idx = np.asarray(slots_idx, np.int32)
+            src = np.arange(len(slots_idx), dtype=np.int32)
+            self.cache = self._splice_dkv(self.cache, fresh, idx, src)
         else:
             args = self._prefill_args(jnp.asarray(toks))
-            logits, cache = jax.jit(
-                lambda p, *a: self.fns.prefill(p, self.cfg, *a,
-                                               self.max_len))(self.params,
-                                                              *args)
-            if has_live:
-                # splice fresh rows into the live cache (batch axis = 1 on
-                # every dense-cache leaf [L, B, T, kvh, hd])
-                m = jnp.asarray(new_mask)
+            logits, fresh = self._prefill(self.params, *args)
+            idx = np.asarray(slots_idx, np.int32)
+            src = np.arange(len(slots_idx), dtype=np.int32)
+            self.cache = self._splice_fam(self.cache, fresh, idx, src,
+                                          self.cfg)
+        return logits
 
-                def splice(old, new):
-                    mm = m.reshape((1, -1) + (1,) * (old.ndim - 2))
-                    return jnp.where(mm, new, old)
-                cache = jax.tree_util.tree_map(splice, self.cache, cache)
+    def _admit_gang(self, batch: List[Request], slots_idx: List[int],
+                    plen: int, has_live: bool) -> Array:
+        """Legacy admission: prefill the WHOLE slot batch (idle and live
+        slots compute padding), splice rows for the dense family, replace
+        the cache wholesale otherwise (all slots are free by the gang
+        restriction)."""
+        toks = self._toks(batch, self.slots, plen,
+                          lambda j: slots_idx[j])
+        if self.dkv_rank:
+            logits, self.cache = self._prefill_dkv(self.params,
+                                                   jnp.asarray(toks))
+        else:
+            args = self._prefill_args(jnp.asarray(toks))
+            logits, cache = self._prefill(self.params, *args)
+            if has_live:
+                idx = np.asarray(slots_idx, np.int32)
+                cache = self._splice_fam(self.cache, cache, idx, idx,
+                                         self.cfg)
             self.cache = cache
-        self.stats.prefills += 1
-        for slot, req in zip(free, batch):
-            self.pos[slot] = plen
-            nxt = int(np.asarray(self.sampler(logits, 1))[slot])
-            req.out_tokens.append(nxt)
+        return logits
 
     def _prefill_args(self, toks: Array):
         b, s = toks.shape
@@ -169,7 +390,10 @@ class Engine:
                             self.cfg.jax_dtype)
             return (toks, img)
         if self.cfg.family == "audio":
-            frames = jnp.zeros((b, s, self.cfg.d_model), self.cfg.jax_dtype)
+            # encoder memory length is cfg.num_audio_frames (the init_cache
+            # cross-KV contract) — NOT the token prefix length
+            frames = jnp.zeros((b, self.cfg.num_audio_frames,
+                                self.cfg.d_model), self.cfg.jax_dtype)
             return (frames, toks)
         return (toks,)
 
@@ -179,21 +403,39 @@ class Engine:
             if req is not None and req.out_tokens:
                 tok[i] = req.out_tokens[-1]
         if self.dkv_rank:
-            from ..models import decomposed_kv as DK
-            if int(self.pos.max()) - self.frozen_len >= self.dkv_tail:
-                # tail full: fold into the low-rank prefix (amortized)
-                self.cache = DK.compress_tail(self.cache, self.cfg,
-                                              self.dkv_rank)
-                self.frozen_len += self.dkv_tail
-            logits, self.cache = DK.decode_step_dkv(
-                self.params, self.cfg, jnp.asarray(tok), self.cache,
-                jnp.asarray(self.pos), frozen_len=self.frozen_len)
+            live_m = np.array([r is not None for r in self.live])
+            occ = self.pos - self.frozen_len
+            must = live_m & (occ >= self.dkv_tail)
+            if must.any():
+                # a slot's tail is full — fold it, and opportunistically
+                # co-fold every live slot at least half full: co-folded
+                # slots restart at occupancy 0 together, re-synchronizing
+                # fold cadence under staggered admissions (fold ≈ one
+                # event per TAIL decode rounds instead of one per slot).
+                # A co-folded slot's unused tail rows are zeros and fold
+                # as zero rows — exactness is unaffected.
+                fold = must | (live_m & (occ >= max(1, self.dkv_tail // 2)))
+                self.cache = self._compress_dkv(self.cache,
+                                                jnp.asarray(self.frozen_len),
+                                                jnp.asarray(fold))
+                self.frozen_len = np.where(fold, self.pos,
+                                           self.frozen_len).astype(np.int32)
+                self.stats.tail_folds += int(fold.sum())
+                # keep only the rows live slots reference (a finished
+                # slot's stale frozen_len must not pin prefix memory)
+                t_need = int(self.frozen_len[live_m].max())
+                for key in ("k_u", "v_u"):
+                    self.cache[key] = self.cache[key][:, :, :t_need]
+            logits, self.cache = self._decode_dkv(
+                self.params, jnp.asarray(tok), self.cache,
+                jnp.asarray(self.pos), jnp.asarray(self.frozen_len))
         else:
             logits, self.cache = self._decode(self.params, jnp.asarray(tok),
                                               self.cache,
                                               jnp.asarray(self.pos))
         nxt = np.asarray(self.sampler(logits, 1))
         self.stats.decode_steps += 1
+        now = time.perf_counter()
         done: List[Request] = []
         for i, req in enumerate(self.live):
             if req is None:
@@ -201,9 +443,12 @@ class Engine:
             self.pos[i] += 1
             req.out_tokens.append(int(nxt[i]))
             self.stats.tokens_out += 1
+            self.stats.itl_s.append(now - req.t_last)
+            req.t_last = now
             if (len(req.out_tokens) >= req.max_new_tokens
                     or self.pos[i] >= self.max_len - 1):
                 req.done = True
+                req.t_done = now
                 done.append(req)
                 self.live[i] = None
         return done

@@ -92,6 +92,65 @@ def test_batched_backend_is_native_not_vmap(engines):
     assert z.shape == (3, 64)
 
 
+@pytest.mark.parametrize("rank", [4, 8])
+@pytest.mark.parametrize("batch", [1, 3])
+def test_parity_decompose_kv_reference_vs_pallas(engines, rank, batch):
+    """The serving KV factorization rides the same backend matrix: the
+    (U·Σ, Vᵀ) product must agree between the jnp reference and the batched
+    Pallas-interpret backend."""
+    x = _x(rank * 7 + batch, batch, 32, 64, jnp.float32)
+    u_r, vt_r = engines["reference"].decompose_kv(x, rank)
+    u_p, vt_p = engines["pallas_interpret"].decompose_kv(x, rank)
+    assert u_p.shape == (batch, 32, rank) and vt_p.shape == (batch, rank, 64)
+    np.testing.assert_allclose(
+        np.asarray(jnp.einsum("btr,brh->bth", u_r, vt_r)),
+        np.asarray(jnp.einsum("btr,brh->bth", u_p, vt_p)),
+        rtol=5e-3, atol=5e-3)
+    # exact=True bypasses the backend entirely — identical across backends
+    e_r = engines["reference"].decompose_kv(x, rank, exact=True)
+    e_p = engines["pallas_interpret"].decompose_kv(x, rank, exact=True)
+    np.testing.assert_allclose(np.asarray(e_r[0]), np.asarray(e_p[0]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_parity_splice_admission_cache_across_backends():
+    """Per-slot splice admission through the serving engine produces the
+    same decomposed-KV cache (as an operator: U·Vᵀ, and the dense tail)
+    under the reference and pallas_interpret backends."""
+    from repro.configs import all_archs
+    from repro.models import model_fns
+    from repro.serving import Engine, Request
+
+    cfg = all_archs()["deepseek-7b"].reduced()
+    params = model_fns(cfg).init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(0, cfg.vocab, n, dtype=np.int32) for n in (10, 6)]
+
+    caches = {}
+    for backend in ("reference", "pallas_interpret"):
+        eng = Engine(cfg, params, slots=2, max_len=64,
+                     decompose_engine=DecomposeEngine(EngineConfig(
+                         backend=backend, kv_rank=8, kv_tail=4)))
+        eng.submit(Request(uid=0, prompt=prompts[0], max_new_tokens=8))
+        for step in range(12):
+            if step == 2:   # splice-admit while slot 0 is live
+                eng.submit(Request(uid=1, prompt=prompts[1],
+                                   max_new_tokens=6))
+            eng.step()
+        caches[backend] = eng.cache
+        np.testing.assert_array_equal(eng.frozen_len >= 16, True)
+    a, b = caches["reference"], caches["pallas_interpret"]
+    for uk, vk in (("k_u", "k_vt"), ("v_u", "v_vt")):
+        np.testing.assert_allclose(
+            np.asarray(jnp.einsum("lbtr,lbrh->lbth", a[uk], a[vk])),
+            np.asarray(jnp.einsum("lbtr,lbrh->lbth", b[uk], b[vk])),
+            rtol=5e-2, atol=5e-2)
+    for k in ("k", "v"):
+        np.testing.assert_allclose(np.asarray(a["tail"][k]),
+                                   np.asarray(b["tail"][k]),
+                                   rtol=5e-2, atol=5e-2)
+
+
 def test_vmap_fallback_matches_batched_kernels(engines):
     x = _x(9, 4, 32, 64, jnp.float32)
     lr_v = engines["pallas_vmap"].decompose(x, 5)

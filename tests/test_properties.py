@@ -14,6 +14,7 @@ from hypothesis import given, settings, strategies as st
 from repro.core import (decompose, decompose_weight, from_dense_svd,
                         lowrank_matmul, lowrank_x_lowrank_weight,
                         relative_error)
+from repro.serving import Engine, Request, Scheduler
 
 
 @settings(max_examples=15, deadline=None)
@@ -63,3 +64,96 @@ def test_property_eq7_exactness(s, h, r, p):
     want = lr.reconstruct() @ w_lr.reconstruct()
     np.testing.assert_allclose(np.asarray(y.reconstruct()),
                                np.asarray(want), rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# Serving-scheduler invariants (pure python — no device work)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(lens=st.lists(st.integers(1, 40), min_size=1, max_size=20),
+       bucket=st.sampled_from([1, 4, 16]),
+       max_admit=st.sampled_from([0, 2]),
+       frees=st.lists(st.integers(0, 4), min_size=1, max_size=30))
+def test_property_scheduler_fifo_within_bucket(lens, bucket, max_admit,
+                                               frees):
+    """Every submitted request is dispatched exactly once, each batch is a
+    single prefill-length bucket capped at the free-slot count, and
+    dispatch order within a bucket is submission (FIFO) order."""
+    sched = Scheduler(bucket=bucket, max_admit=max_admit)
+    reqs = [Request(uid=i, prompt=np.zeros(n, np.int32))
+            for i, n in enumerate(lens)]
+    for r in reqs:
+        sched.submit(r)
+    dispatched = []
+    for f in frees + [4] * len(reqs):          # drain with full freedom
+        batch = sched.next_batch(f)
+        assert len(batch) <= f
+        if max_admit:
+            assert len(batch) <= max_admit
+        assert len({sched.bucket_of(len(r.prompt)) for r in batch}) <= 1
+        dispatched += batch
+        if not len(sched):
+            break
+    assert sorted(r.uid for r in dispatched) == [r.uid for r in reqs]
+    by_bucket = {}
+    for r in dispatched:
+        by_bucket.setdefault(sched.bucket_of(len(r.prompt)), []).append(r.uid)
+    for uids in by_bucket.values():
+        assert uids == sorted(uids), "FIFO violated within a bucket"
+
+
+_MODEL = {}
+
+
+def _dense_model():
+    if not _MODEL:
+        import jax as _jax
+        from repro.configs import all_archs
+        from repro.models import model_fns
+        cfg = all_archs()["llama2-7b"].reduced()
+        _MODEL["cfg"] = cfg
+        _MODEL["params"] = model_fns(cfg).init(_jax.random.PRNGKey(0), cfg)
+    return _MODEL["cfg"], _MODEL["params"]
+
+
+@settings(max_examples=5, deadline=None)
+@given(data=st.data())
+def test_property_engine_finishes_once_no_leaks_monotone(data):
+    """Engine invariants under random arrivals: every submitted request
+    finishes exactly once, no slot leaks, and while a slot keeps its
+    occupant its ``pos`` strictly advances and ``frozen_len`` never
+    shrinks (per-slot monotonicity)."""
+    cfg, params = _dense_model()
+    n = data.draw(st.integers(1, 5))
+    lens = data.draw(st.lists(st.integers(1, 12), min_size=n, max_size=n))
+    news = data.draw(st.lists(st.integers(1, 4), min_size=n, max_size=n))
+    arrive = sorted(data.draw(st.lists(st.integers(0, 6), min_size=n,
+                                       max_size=n)))
+    dkv = data.draw(st.booleans())
+    kw = dict(decompose_kv_rank=6, dkv_tail=2) if dkv else {}
+    eng = Engine(cfg, params, slots=2, max_len=48, **kw)
+    rng = np.random.RandomState(0)
+    reqs = [Request(uid=i, prompt=rng.randint(0, cfg.vocab, l,
+                                              dtype=np.int32),
+                    max_new_tokens=m)
+            for i, (l, m) in enumerate(zip(lens, news))]
+    pending = list(zip(arrive, reqs))
+    finished = []
+    for step in range(300):
+        while pending and pending[0][0] <= step:
+            eng.submit(pending.pop(0)[1])
+        occ = [id(r) if r is not None else None for r in eng.live]
+        pos0, fr0 = eng.pos.copy(), eng.frozen_len.copy()
+        finished += eng.step()
+        for s in range(eng.slots):
+            if occ[s] is not None and eng.live[s] is not None \
+                    and id(eng.live[s]) == occ[s]:
+                assert eng.pos[s] > pos0[s], "pos stalled on a live slot"
+                assert eng.frozen_len[s] >= fr0[s], "frozen_len shrank"
+        if not pending and not len(eng.sched) and not any(eng.live):
+            break
+    assert sorted(r.uid for r in finished) == list(range(n))
+    assert all(r.done for r in finished)
+    assert eng.live == [None] * eng.slots, "slot leak"
+    assert eng.stats.prefills == n

@@ -37,8 +37,11 @@ def test_continuous_batching_reuses_slots():
                            max_new_tokens=3))
     done = eng.run()
     assert len(done) == 6
-    assert eng.stats.prefills >= 3      # 6 requests / 2 slots
+    assert eng.stats.prefills == 6      # counted PER REQUEST, not per gang
+    assert eng.stats.prefill_batches >= 3   # 6 requests / 2 slots
     assert eng.stats.tokens_out > 0
+    assert len(eng.stats.ttft_s) == 6   # one first-token latency each
+    assert eng.stats.mean_ttft_s > 0.0
 
 
 def test_deterministic_outputs():
@@ -87,4 +90,24 @@ def test_decomposed_kv_serving():
     done = eng.run()
     assert len(done) == 2
     assert all(len(r.out_tokens) >= 10 for r in done)
-    assert eng.frozen_len > 12          # tail was folded at least once
+    # frozen_len is PER SLOT now; both slots folded their tail at least once
+    assert (eng.frozen_len > 12).all()
+    assert eng.stats.tail_folds >= 2
+
+
+def test_bucket_never_rounds_past_max_len():
+    """A prompt that fits in max_len must get its full decode budget even
+    when its scheduler bucket would round past the cache length."""
+    cfg, eng = _engine(slots=2, max_len=60)   # not a bucket multiple
+    assert eng.sched.bucket_of(50) > eng.max_len - 1
+    eng.submit(Request(uid=0, prompt=np.arange(50, dtype=np.int32) % cfg.vocab,
+                       max_new_tokens=4))
+    done = eng.run()
+    assert len(done) == 1 and len(done[0].out_tokens) >= 4
+
+
+def test_oversized_prompt_rejected_at_submit():
+    cfg, eng = _engine(slots=1, max_len=32)
+    import pytest
+    with pytest.raises(ValueError):
+        eng.submit(Request(uid=0, prompt=np.zeros(32, np.int32)))
