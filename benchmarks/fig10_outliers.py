@@ -1,6 +1,6 @@
 """Paper Fig. 10: outlier-extraction effect on model quality vs rank.
 
-Container-feasible quality metric (DESIGN.md §6): logit KL divergence of the
+Container-feasible quality metric (DESIGN.md §7): logit KL divergence of the
 decomposed model vs baseline on a reduced Llama2 (the paper uses arc_easy
 accuracy / wikitext-2 perplexity on the full 7B — weights unavailable here).
 Axes match the paper: rank ∈ {1, 10, 20}, outlier % ∈ {0, 1, 3, 5, 10}, on

@@ -1,5 +1,18 @@
 """Paper Fig. 12: decomposition latency vs expansion factor f.
 
+Two sections:
+
+1. the mechanistic D-com hardware model (below) reproducing the paper's
+   f* = 8 and ~6.2× speedup;
+2. ``run_ab`` — tuner validation on the REAL kernel: sweep the expansion
+   grid empirically (median-of-k through ``repro.tune.measure``), replay
+   the tuner's production pruning against that same table, and A/B tuned
+   vs the hard-coded default f = 8 vs the swept optimum.  The gate is
+   non-vacuous: if cost-model pruning discards the true optimum, tuned
+   lands on a worse survivor and the >5% assert fires.  The JSON
+   artifact (``benchmarks/out/fig12_ab.json``) records every number and
+   CI uploads it.
+
 Mechanistic model of the paper's OWN explanation (§5.3 + §6.4):
 
 * Left of f*: the iterative vector chain is MEMORY-BOUND and expansion
@@ -22,9 +35,13 @@ consequences on v5e are in fig11's modeled section.
 """
 from __future__ import annotations
 
-from typing import List
+import json
+import os
+from typing import Dict, List, Optional
 
 from .common import Row
+
+AB_JSON = os.path.join(os.path.dirname(__file__), "out", "fig12_ab.json")
 
 S, H, K, BATCH = 4096, 4096, 10, 64
 
@@ -61,6 +78,89 @@ def batch_decomposition_latency(f: int) -> float:
     return reorth_latency(f) * 2 * K * BATCH
 
 
+def run_ab(quick: bool = False, out_json: Optional[str] = AB_JSON
+           ) -> Dict[str, object]:
+    """Tuned-vs-default-vs-swept-optimum A/B on the real Fig. 12 kernel.
+
+    ONE measured sweep over the full expansion grid, then the tuner's
+    production path is replayed against that same table: the cost model
+    ranks the grid, the top ``PRUNE`` survivors keep their measurements,
+    and "tuned" is the measured winner AMONG THE SURVIVORS — exactly what
+    ``tune(measure_candidates=True, prune=PRUNE)`` returns given these
+    measurements.  The gate is therefore real: if the cost model prunes
+    away the true optimum's f, tuned_vs_opt exceeds 1 and CI fails.
+    Using one table for both sides removes timing noise from the ratio."""
+    from repro import tune
+
+    kernel = "matvec_expand"
+    shape = (128, 256) if quick else (1024, 2048)
+    fix = {"row_block": 512}             # 1-D sweep: f is the Fig. 12 axis
+    reps = 3 if quick else 5
+    res = tune.tune(kernel, shape, "float32", fix=fix,
+                    measure_candidates=True, prune=None,
+                    reps=reps, force=True, persist=False)
+
+    # replay production pruning on the measured table (stable model order
+    # and the same DEFAULT_PRUNE width as tune() itself)
+    by_model = sorted(res.table, key=lambda row: row[1])
+    survivors = by_model[:tune.DEFAULT_PRUNE]
+    tuned_cand, _, tuned_s = min(survivors, key=lambda row: row[2])
+
+    swept = {str(c["expansion"]): m for c, _, m in res.table}
+    opt_cand, opt_s = res.swept_optimum()
+    if tuned_s > 1.05 * opt_s and tuned_cand != opt_cand:
+        # finalists head-to-head before the CI gate can fire: one sweep
+        # sample per f is noise-prone, a deliberate re-measure at 3× reps
+        # separates a genuine pruning miss from a scheduler hiccup
+        tuned_s = tune.measure_candidate(kernel, res.shape, res.dtype,
+                                         tuned_cand, reps=3 * reps)
+        opt_s = tune.measure_candidate(kernel, res.shape, res.dtype,
+                                       opt_cand, reps=3 * reps)
+    default_s = swept[str(tune.get_space(kernel).param("expansion").default)]
+    data = {
+        "kernel": kernel,
+        "shape": list(res.shape),
+        "dtype": res.dtype,
+        "device_kind": tune.device_kind(),
+        "swept_s": swept,
+        "prune": tune.DEFAULT_PRUNE,
+        "pruned_fs": [int(c["expansion"]) for c, _, _ in survivors],
+        "model_pick_f": int(by_model[0][0]["expansion"]),
+        "tuned_f": int(tuned_cand["expansion"]),
+        "tuned_s": tuned_s,
+        "default_f": tune.get_space(kernel).param("expansion").default,
+        "default_s": default_s,
+        "opt_f": int(opt_cand["expansion"]),
+        "opt_s": opt_s,
+        "tuned_vs_opt": tuned_s / opt_s,
+        "default_vs_opt": default_s / opt_s,
+    }
+    if out_json:
+        os.makedirs(os.path.dirname(out_json), exist_ok=True)
+        with open(out_json, "w") as fh:
+            json.dump(data, fh, indent=1, sort_keys=True)
+    return data
+
+
+def _ab_rows(quick: bool) -> List[Row]:
+    data = run_ab(quick)
+    rows: List[Row] = []
+    for f, s in sorted(data["swept_s"].items(), key=lambda kv: int(kv[0])):
+        rows.append((f"fig12/measured_f{f}", s * 1e6, "swept_kernel_s"))
+    rows.append(("fig12/ab_tuned", data["tuned_s"] * 1e6,
+                 f"tuner_pick_f={data['tuned_f']} "
+                 f"(pruned_to={data['pruned_fs']})"))
+    rows.append(("fig12/ab_default", data["default_s"] * 1e6,
+                 f"hardcoded_f={data['default_f']}"))
+    rows.append(("fig12/ab_opt", data["opt_s"] * 1e6,
+                 f"swept_optimum_f={data['opt_f']}"))
+    rows.append(("fig12/tuned_vs_opt", 0.0,
+                 f"{data['tuned_vs_opt']:.3f}x (acceptance: <= 1.05)"))
+    assert data["tuned_vs_opt"] <= 1.05, \
+        "tuned f must stay within 5% of the swept optimum"
+    return rows
+
+
 def run(quick: bool = False) -> List[Row]:
     rows: List[Row] = []
     best = (None, float("inf"))
@@ -77,6 +177,7 @@ def run(quick: bool = False) -> List[Row]:
     rows.append(("fig12/speedup_vs_f1", 0.0,
                  f"{lat[1] / best[1]:.2f}x (paper: 6.2x)"))
     assert best[0] == 8, "expansion model must reproduce the paper's f*"
+    rows.extend(_ab_rows(quick))
     return rows
 
 

@@ -10,7 +10,8 @@ from .backends import (Backend, available_backends, get_backend,
                        register_backend)
 from .config import EngineConfig
 from .engine import DecomposeEngine, make_engine
+from .platform import default_interpret, resolve_interpret
 
 __all__ = ["Backend", "DecomposeEngine", "EngineConfig",
-           "available_backends", "get_backend", "make_engine",
-           "register_backend"]
+           "available_backends", "default_interpret", "get_backend",
+           "make_engine", "register_backend", "resolve_interpret"]

@@ -13,7 +13,7 @@ is built exactly once and then threaded through models/runtime/serving.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Union
 
 from ..core.outlier import ThresholdTable
 from ..core.policy import DecompositionPolicy, LayerPolicy
@@ -28,9 +28,15 @@ class EngineConfig:
     * ``backend``     — registry key: ``"reference"`` (pure jnp),
                         ``"pallas_interpret"`` (batched fused kernels,
                         interpreter), ``"pallas"`` (compiled, TPU),
-                        ``"pallas_vmap"`` (vmap-of-scalar fallback).
+                        ``"pallas_vmap"`` (vmap-of-scalar fallback) — or
+                        ``"auto"``: resolved at engine build through
+                        ``repro.tune`` (measured cache override, else
+                        platform heuristic).
     * ``expansion``   — the D-com compute-expansion factor f (Pallas grid
-                        size along the reduced axis).
+                        size along the reduced axis), or ``"auto"``: the
+                        engine resolves f per shape-bucket through the
+                        ``repro.tune`` cost model + tuning cache
+                        (DESIGN.md §6).
     * ``attn_mode``   — ``"dense"`` | ``"preserved"`` consumption of the
                         decomposed QKV inputs (paper §3.2).
     * ``kv_rank`` / ``kv_tail`` / ``kv_iters_extra`` — decomposed-KV-cache
@@ -47,7 +53,7 @@ class EngineConfig:
     """
     policy: Optional[DecompositionPolicy] = None
     backend: str = "reference"
-    expansion: int = 8
+    expansion: Union[int, str] = 8      # int f, or "auto" (tuner-resolved)
     attn_mode: str = "dense"            # "dense" | "preserved"
     kv_rank: int = 0
     kv_tail: int = 128
@@ -56,6 +62,13 @@ class EngineConfig:
     sched_bucket: int = 16
     sched_admit_every: int = 1
     sched_max_admit: int = 0
+
+    def __post_init__(self):
+        if self.expansion != "auto" and (
+                not isinstance(self.expansion, int) or self.expansion < 1):
+            raise ValueError(
+                f"expansion must be a positive int or 'auto', "
+                f"got {self.expansion!r}")
 
     def layer(self, idx: int) -> LayerPolicy:
         if self.policy is None:

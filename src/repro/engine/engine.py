@@ -59,10 +59,23 @@ class DecomposeEngine:
 
     def __init__(self, config: EngineConfig):
         self.config = config
-        self.backend: Backend = get_backend(config.backend)
-        # Hooks resolved ONCE; factories are lru-cached upstream so the
-        # returned functions hash stably as static jit arguments.
-        self._hooks = self.backend.make_hooks(config.expansion)
+        backend_name = config.backend
+        if backend_name == "auto":
+            # tuner-resolved at build: measured cache override when
+            # benchmarks/run.py --tune ran on this machine, else the
+            # platform heuristic (Mosaic on TPU, jnp reference on CPU)
+            from .. import tune
+            backend_name = tune.resolve_backend()
+        self.backend: Backend = get_backend(backend_name)
+        self._auto_expansion = config.expansion == "auto"
+        # Hooks resolved ONCE for a fixed f; factories are lru-cached
+        # upstream so the returned functions hash stably as static jit
+        # arguments.  With expansion="auto" the f — and therefore the
+        # hooks — resolve per shape-bucket at decompose time through the
+        # tuner's in-process lru (same cached factories, same identities
+        # as a fixed-f engine at that f).
+        self._hooks = None if self._auto_expansion \
+            else self.backend.make_hooks(config.expansion)
 
     # -- config passthroughs ---------------------------------------------
     def layer_policy(self, idx: int) -> LayerPolicy:
@@ -75,6 +88,25 @@ class DecomposeEngine:
     def attn_mode(self) -> str:
         return self.config.attn_mode
 
+    @property
+    def resolved_backend(self) -> str:
+        """The registry key actually in use (``"auto"`` resolved)."""
+        return self.backend.name
+
+    def resolve_expansion(self, s_dim: int, h_dim: int, batch: int = 1,
+                          dtype: object = "float32") -> int:
+        """The expansion factor f this engine runs a [batch, S, H]
+        decomposition at: the configured int, or — for ``"auto"`` — the
+        ``repro.tune`` answer for this shape-bucket (cache hit / cost
+        model; in-process lru, so the per-layer hot path is a dict
+        lookup)."""
+        if not self._auto_expansion:
+            return self.config.expansion
+        from .. import tune
+        return tune.tuned_expansion((int(batch), int(s_dim), int(h_dim)),
+                                    dtype=str(dtype),
+                                    backend=self.backend.name)
+
     # -- stage 1: batched Lanczos decomposition ---------------------------
     def decompose(self, x: Array, rank: int,
                   iters: Optional[int] = None) -> LowRank:
@@ -85,7 +117,12 @@ class DecomposeEngine:
         """
         from ..kernels import ops
         s_dim, h_dim = x.shape[-2:]
-        f = self.config.expansion
+        batch = 1
+        for d in x.shape[:-2]:
+            batch *= int(d)
+        f = self.resolve_expansion(s_dim, h_dim, max(1, batch), x.dtype)
+        hooks = self._hooks if self._hooks is not None \
+            else self.backend.make_hooks(f)
         pad = self.backend.requires_padding
         if pad:
             s_pad, h_pad = ops.padded_dims(s_dim, h_dim, f)
@@ -100,7 +137,7 @@ class DecomposeEngine:
         else:
             xp, z0 = x, None        # jitted core generates the same z0
         lr = lz.decompose(xp, rank, iters=iters,
-                          batched_hooks=self._hooks, z0=z0)
+                          batched_hooks=hooks, z0=z0)
         if pad:
             lr = LowRank(lr.u[..., :s_dim, :], lr.core,
                          lr.vt[..., :h_dim])
@@ -181,8 +218,9 @@ class DecomposeEngine:
         return decompose_weight(w, rank)
 
     def __repr__(self) -> str:
+        exp = "auto" if self._auto_expansion else self.config.expansion
         return (f"DecomposeEngine(backend={self.backend.name!r}, "
-                f"expansion={self.config.expansion}, "
+                f"expansion={exp}, "
                 f"attn_mode={self.config.attn_mode!r}, "
                 f"kv_rank={self.config.kv_rank})")
 

@@ -26,18 +26,26 @@ the exact dense tail with the standard flash combine rule.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..engine.platform import resolve_interpret
+
 
 def _dkv_kernel(inner_ref, ku_ref, vu_ref, a_out, m_out, l_out,
-                m_s, l_s, a_s, *, f: int, blk: int):
+                m_s, l_s, a_s, *, f: int, blk: int, t_valid: int):
     """grid = (f,) time-blocks for ONE (batch, kv-head) slice.
 
     inner [g, r]; ku/vu block [blk, r]; accumulators in VMEM scratch.
+    Rows at or beyond ``t_valid`` are zero-padding (the wrapper pads the
+    time axis to a multiple of f) and are masked out of the running
+    softmax statistics EXACTLY: their scores never enter the max and their
+    probability mass is written as a literal 0, so padded and unpadded
+    launches produce bit-identical (a, m, l).
     """
     j = pl.program_id(0)
 
@@ -51,11 +59,19 @@ def _dkv_kernel(inner_ref, ku_ref, vu_ref, a_out, m_out, l_out,
     ku = ku_ref[...].astype(jnp.float32)                # [blk, r]
     s_blk = jnp.dot(inner, ku.T,
                     preferred_element_type=jnp.float32)  # [g, blk]
+    # global row index of every score column; -1e30 for pad rows keeps the
+    # running max neutral even when a whole block is padding
+    rows = j * blk + jax.lax.broadcasted_iota(jnp.int32, s_blk.shape, 1)
+    valid = rows < t_valid
+    s_blk = jnp.where(valid, s_blk, -1e30)
 
     m_old = m_s[...]                                     # [g, 1]
     m_new = jnp.maximum(m_old, jnp.max(s_blk, axis=1, keepdims=True))
     c = jnp.exp(m_old - m_new)
-    p = jnp.exp(s_blk - m_new)                           # [g, blk]
+    # exp(-1e30 − m) underflows to 0 for every reachable m EXCEPT the
+    # all-padding-so-far case (m_new still -1e30, exp(0) = 1) — the where
+    # pins pad mass to exactly 0 in both regimes
+    p = jnp.where(valid, jnp.exp(s_blk - m_new), 0.0)    # [g, blk]
     vu = vu_ref[...].astype(jnp.float32)                 # [blk, r]
     a_s[...] = a_s[...] * c + jnp.dot(p, vu,
                                       preferred_element_type=jnp.float32)
@@ -69,22 +85,35 @@ def _dkv_kernel(inner_ref, ku_ref, vu_ref, a_out, m_out, l_out,
         l_out[...] = l_s[...]
 
 
-@functools.partial(jax.jit, static_argnames=("expansion", "interpret"))
+@functools.partial(jax.jit, static_argnames=("expansion", "interpret",
+                                             "t_valid"))
 def dkv_attention_stats(inner: jax.Array, k_u: jax.Array, v_u: jax.Array,
-                        *, expansion: int = 8, interpret: bool = True):
+                        *, expansion: int = 8,
+                        interpret: Optional[bool] = None,
+                        t_valid: Optional[int] = None):
     """Rank-space flash stats for ONE (batch, kv-head) slice.
 
     inner [g, r] (= scaled q·Vᵀ_k), k_u / v_u [T, r] →
     (a [g, r], m [g, 1], l [g, 1]) with softmax-weighted U_v accumulated
-    in rank space.  T % expansion == 0.
+    in rank space.  Arbitrary T: the time axis is zero-padded to a
+    multiple of ``expansion`` (the ``ops`` wrapper pads through the cached
+    ``pad_plan``; unpadded direct calls pad here) and rows at or beyond
+    ``t_valid`` are masked out of the softmax inside the kernel, so any
+    cache length works with any f.
     """
+    interpret = resolve_interpret(interpret)
     g, r = inner.shape
     t = k_u.shape[0]
-    assert t % expansion == 0, (t, expansion)
-    blk = t // expansion
+    if t_valid is None:
+        t_valid = t
+    pad = (-t) % expansion
+    if pad:
+        k_u = jnp.pad(k_u, ((0, pad), (0, 0)))
+        v_u = jnp.pad(v_u, ((0, pad), (0, 0)))
+    blk = (t + pad) // expansion
 
     a, m, l = pl.pallas_call(
-        functools.partial(_dkv_kernel, f=expansion, blk=blk),
+        functools.partial(_dkv_kernel, f=expansion, blk=blk, t_valid=t_valid),
         grid=(expansion,),
         in_specs=[
             pl.BlockSpec((g, r), lambda j: (0, 0)),
@@ -127,3 +156,12 @@ def merge_with_tail(a, m, l, v_vt, tail_scores, tail_v):
     out_pre = (a @ v_vt.astype(jnp.float32)) * c_pre     # [g, d]
     denom = l * c_pre + l_t * c_t
     return (out_pre + o_t * c_t) / jnp.maximum(denom, 1e-30)
+
+
+# -- tunable space (see repro.tune): time-axis expansion of the stream ------
+from ..tune.space import (EXPANSION_GRID, TunableParam,  # noqa: E402
+                          TunableSpace, register_space)
+
+register_space(TunableSpace("dkv_attention", (
+    TunableParam("expansion", EXPANSION_GRID, default=8),
+)))

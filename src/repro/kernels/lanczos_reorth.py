@@ -35,11 +35,14 @@ MXU handles the [blk, k] projections and the VPU the element-wise tail.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from ..engine.platform import resolve_interpret
 
 
 def _reorth_right_kernel(a_ref, u_ref, q_ref, z_out, nrm_out,
@@ -213,12 +216,14 @@ def _reorth_left_batched_kernel(a_ref, v_ref, q_ref, z_out, nrm_out,
 @functools.partial(jax.jit,
                    static_argnames=("expansion", "interpret"))
 def reorth_right_batched(a: jax.Array, u: jax.Array, v_buf: jax.Array,
-                         *, expansion: int = 8, interpret: bool = True):
+                         *, expansion: int = 8,
+                         interpret: Optional[bool] = None):
     """Batched fused  z_b = CGS2(A_bᵀ·u_b, V_b)  → (z [B, H], ‖z‖² [B]).
 
     ONE pallas_call for the whole batch: grid (B, 3, f).  H must divide by
     ``expansion``.
     """
+    interpret = resolve_interpret(interpret)
     b_dim, s_dim, h_dim = a.shape
     k = v_buf.shape[-1]
     assert h_dim % expansion == 0, (h_dim, expansion)
@@ -255,9 +260,11 @@ def reorth_right_batched(a: jax.Array, u: jax.Array, v_buf: jax.Array,
 @functools.partial(jax.jit,
                    static_argnames=("expansion", "interpret"))
 def reorth_left_batched(a: jax.Array, v: jax.Array, u_buf: jax.Array,
-                        *, expansion: int = 8, interpret: bool = True):
+                        *, expansion: int = 8,
+                         interpret: Optional[bool] = None):
     """Batched fused  w_b = CGS2(A_b·v_b, U_b)  → (w [B, S], ‖w‖² [B]).
     S % expansion == 0."""
+    interpret = resolve_interpret(interpret)
     b_dim, s_dim, h_dim = a.shape
     k = u_buf.shape[-1]
     assert s_dim % expansion == 0, (s_dim, expansion)
@@ -294,12 +301,14 @@ def reorth_left_batched(a: jax.Array, v: jax.Array, u_buf: jax.Array,
 @functools.partial(jax.jit,
                    static_argnames=("expansion", "interpret"))
 def reorth_right(a: jax.Array, u: jax.Array, v_buf: jax.Array,
-                 *, expansion: int = 8, interpret: bool = True):
+                 *, expansion: int = 8,
+                         interpret: Optional[bool] = None):
     """Fused  z = CGS2(Aᵀ·u, V)  → (z [H], ‖z‖² scalar).
 
     ``expansion`` is the paper's f: the number of column-blocks the
     reduction is expanded over.  H must divide by ``expansion``.
     """
+    interpret = resolve_interpret(interpret)
     s_dim, h_dim = a.shape
     k = v_buf.shape[-1]
     assert h_dim % expansion == 0, (h_dim, expansion)
@@ -336,8 +345,10 @@ def reorth_right(a: jax.Array, u: jax.Array, v_buf: jax.Array,
 @functools.partial(jax.jit,
                    static_argnames=("expansion", "interpret"))
 def reorth_left(a: jax.Array, v: jax.Array, u_buf: jax.Array,
-                *, expansion: int = 8, interpret: bool = True):
+                *, expansion: int = 8,
+                         interpret: Optional[bool] = None):
     """Fused  w = CGS2(A·v, U)  → (w [S], ‖w‖² scalar).  S % expansion == 0."""
+    interpret = resolve_interpret(interpret)
     s_dim, h_dim = a.shape
     k = u_buf.shape[-1]
     assert s_dim % expansion == 0, (s_dim, expansion)
@@ -369,3 +380,19 @@ def reorth_left(a: jax.Array, v: jax.Array, u_buf: jax.Array,
         interpret=interpret,
     )(a, v[None, :], u_buf)
     return z[:, 0], nrm[0, 0]
+
+
+# -- tunable space (see repro.tune): the decomposition operating point ------
+# ``backend`` selects the execution substrate (engine.backends registry);
+# ``reorth`` declares the re-orthogonalization cadence — CGS2 is the only
+# implemented point today, registered so the axis is tunable the day a
+# cheaper cadence lands.
+from ..tune.space import (EXPANSION_GRID, TunableParam,  # noqa: E402
+                          TunableSpace, register_space)
+
+register_space(TunableSpace("lanczos_reorth", (
+    TunableParam("expansion", EXPANSION_GRID, default=8),
+    TunableParam("backend", ("reference", "pallas_interpret", "pallas",
+                             "pallas_vmap"), default="reference"),
+    TunableParam("reorth", ("cgs2",), default="cgs2"),
+)))

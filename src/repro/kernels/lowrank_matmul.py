@@ -14,10 +14,14 @@ tiles each).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from ..engine.platform import resolve_interpret
+from .matvec_expand import _block_divisor
 
 
 def _lr_matmul_kernel(vt_ref, w_ref, o_ref):
@@ -36,15 +40,16 @@ def _lr_matmul_kernel(vt_ref, w_ref, o_ref):
 @functools.partial(jax.jit, static_argnames=("expansion", "n_block",
                                              "interpret"))
 def lowrank_matmul(vt: jax.Array, w: jax.Array, *, expansion: int = 8,
-                   n_block: int = 512, interpret: bool = True) -> jax.Array:
+                   n_block: int = 512, interpret: Optional[bool] = None
+                   ) -> jax.Array:
     """Vᵀ[k,H] @ W[H,N] → [k,N] with f-way expanded H reduction."""
+    interpret = resolve_interpret(interpret)
     k, h_dim = vt.shape
     h2, n_dim = w.shape
     assert h_dim == h2
     assert h_dim % expansion == 0
     blk = h_dim // expansion
-    nb = min(n_block, n_dim)
-    assert n_dim % nb == 0
+    nb = _block_divisor(n_dim, n_block)
 
     # Pad k to a sublane multiple so the MXU tile is well-formed.
     k_pad = max(8, (k + 7) // 8 * 8)
@@ -63,3 +68,13 @@ def lowrank_matmul(vt: jax.Array, w: jax.Array, *, expansion: int = 8,
         interpret=interpret,
     )(vt, w)
     return out[:k]
+
+
+# -- tunable space (see repro.tune): the Eq. 6 GEMM operating point ---------
+from ..tune.space import (BLOCK_GRID, EXPANSION_GRID,  # noqa: E402
+                          TunableParam, TunableSpace, register_space)
+
+register_space(TunableSpace("lowrank_matmul", (
+    TunableParam("expansion", EXPANSION_GRID, default=8),
+    TunableParam("n_block", BLOCK_GRID, default=512),
+)))

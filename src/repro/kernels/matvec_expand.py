@@ -15,10 +15,13 @@ blocks whose fixed per-step cost dominates (Fig. 12 right).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from ..engine.platform import resolve_interpret
 
 
 def _matvec_kernel(a_ref, v_ref, y_ref):
@@ -50,13 +53,14 @@ def _rmatvec_kernel(a_ref, u_ref, z_ref):
 @functools.partial(jax.jit, static_argnames=("expansion", "row_block",
                                              "interpret"))
 def matvec(a: jax.Array, v: jax.Array, *, expansion: int = 8,
-           row_block: int = 512, interpret: bool = True) -> jax.Array:
+           row_block: int = 512, interpret: Optional[bool] = None
+           ) -> jax.Array:
     """y[S] = A[S,H] @ v[H] with f-way expanded reduction over H."""
+    interpret = resolve_interpret(interpret)
     s_dim, h_dim = a.shape
     assert h_dim % expansion == 0
     blk = h_dim // expansion
-    rb = min(row_block, s_dim)
-    assert s_dim % rb == 0
+    rb = _block_divisor(s_dim, row_block)
 
     y = pl.pallas_call(
         _matvec_kernel,
@@ -106,8 +110,10 @@ def _rmatvec_batched_kernel(a_ref, u_ref, z_ref):
 @functools.partial(jax.jit, static_argnames=("expansion", "row_block",
                                              "interpret"))
 def matvec_batched(a: jax.Array, v: jax.Array, *, expansion: int = 8,
-                   row_block: int = 512, interpret: bool = True) -> jax.Array:
+                   row_block: int = 512, interpret: Optional[bool] = None
+                   ) -> jax.Array:
     """y[B,S] = A[B,S,H] @ v[B,H] — one launch for the whole batch."""
+    interpret = resolve_interpret(interpret)
     b_dim, s_dim, h_dim = a.shape
     assert h_dim % expansion == 0
     blk = h_dim // expansion
@@ -130,8 +136,10 @@ def matvec_batched(a: jax.Array, v: jax.Array, *, expansion: int = 8,
 @functools.partial(jax.jit, static_argnames=("expansion", "col_block",
                                              "interpret"))
 def rmatvec_batched(a: jax.Array, u: jax.Array, *, expansion: int = 8,
-                    col_block: int = 512, interpret: bool = True) -> jax.Array:
+                    col_block: int = 512, interpret: Optional[bool] = None
+                    ) -> jax.Array:
     """z[B,H] = A[B,S,H]ᵀ @ u[B,S] — one launch for the whole batch."""
+    interpret = resolve_interpret(interpret)
     b_dim, s_dim, h_dim = a.shape
     assert s_dim % expansion == 0
     blk = s_dim // expansion
@@ -154,13 +162,14 @@ def rmatvec_batched(a: jax.Array, u: jax.Array, *, expansion: int = 8,
 @functools.partial(jax.jit, static_argnames=("expansion", "col_block",
                                              "interpret"))
 def rmatvec(a: jax.Array, u: jax.Array, *, expansion: int = 8,
-            col_block: int = 512, interpret: bool = True) -> jax.Array:
+            col_block: int = 512, interpret: Optional[bool] = None
+            ) -> jax.Array:
     """z[H] = A[S,H]ᵀ @ u[S] with f-way expanded reduction over S."""
+    interpret = resolve_interpret(interpret)
     s_dim, h_dim = a.shape
     assert s_dim % expansion == 0
     blk = s_dim // expansion
-    cb = min(col_block, h_dim)
-    assert h_dim % cb == 0
+    cb = _block_divisor(h_dim, col_block)
 
     z = pl.pallas_call(
         _rmatvec_kernel,
@@ -174,3 +183,13 @@ def rmatvec(a: jax.Array, u: jax.Array, *, expansion: int = 8,
         interpret=interpret,
     )(a, u[:, None])
     return z[0]
+
+
+# -- tunable space (see repro.tune): the Fig. 12 operating point ------------
+from ..tune.space import (BLOCK_GRID, EXPANSION_GRID,  # noqa: E402
+                          TunableParam, TunableSpace, register_space)
+
+register_space(TunableSpace("matvec_expand", (
+    TunableParam("expansion", EXPANSION_GRID + (64, 128), default=8),
+    TunableParam("row_block", BLOCK_GRID, default=512),
+)))

@@ -1,8 +1,14 @@
 """Jit'd public wrappers around the Pallas kernels + Lanczos hook factory.
 
-``INTERPRET`` defaults to True because this container is CPU-only; on a real
-TPU deployment set ``repro.kernels.ops.INTERPRET = False`` (or pass
-``interpret=False``) and the same BlockSpecs compile via Mosaic.
+``INTERPRET`` is derived ONCE from the platform (``engine.platform``):
+interpret mode everywhere except a real TPU, where the same BlockSpecs
+compile via Mosaic with no manual flags at call sites.  It stays a mutable
+module attribute as the process-wide escape hatch (e.g. forcing interpret
+mode on TPU for debugging).
+
+Block sizes (``row_block``/``n_block``/``col_block``) default to ``None``
+= the kernel's historical 512; the ``repro.tune`` autotuner passes the
+measured operating point through these wrappers.
 """
 from __future__ import annotations
 
@@ -13,10 +19,11 @@ import jax
 import jax.numpy as jnp
 
 from ..core.lanczos import BatchedLanczosHooks, LanczosHooks
+from ..engine.platform import default_interpret
 from . import dkv_attention as _dkv, lanczos_reorth, \
     lowrank_matmul as _lrmm, matvec_expand, outlier_extract, ssd_chunk
 
-INTERPRET = True
+INTERPRET = default_interpret()
 
 
 @functools.lru_cache(maxsize=None)
@@ -50,42 +57,50 @@ def _pad_to(x: jax.Array, axis: int, mult: int):
     return jnp.pad(x, widths), n
 
 
-def matvec(a, v, *, expansion: int = 8, interpret: Optional[bool] = None):
+def matvec(a, v, *, expansion: int = 8, row_block: Optional[int] = None,
+           interpret: Optional[bool] = None):
     a, s = _pad_to(a, 0, 8)
     a, _ = _pad_to(a, 1, expansion)
     v, _ = _pad_to(v, 0, expansion)
-    y = matvec_expand.matvec(a, v, expansion=expansion, row_block=min(512, a.shape[0]),
+    rb = min(row_block or 512, a.shape[0])
+    y = matvec_expand.matvec(a, v, expansion=expansion, row_block=rb,
                              interpret=INTERPRET if interpret is None else interpret)
     return y[:s]
 
 
-def rmatvec(a, u, *, expansion: int = 8, interpret: Optional[bool] = None):
+def rmatvec(a, u, *, expansion: int = 8, col_block: Optional[int] = None,
+            interpret: Optional[bool] = None):
     a, _ = _pad_to(a, 0, expansion)
     a, h = _pad_to(a, 1, 128)
     u, _ = _pad_to(u, 0, expansion)
-    z = matvec_expand.rmatvec(a, u, expansion=expansion, col_block=min(512, a.shape[1]),
+    cb = min(col_block or 512, a.shape[1])
+    z = matvec_expand.rmatvec(a, u, expansion=expansion, col_block=cb,
                               interpret=INTERPRET if interpret is None else interpret)
     return z[:h]
 
 
 def matvec_batched(a, v, *, expansion: int = 8,
+                   row_block: Optional[int] = None,
                    interpret: Optional[bool] = None):
     """y[B,S] = A[B,S,H] @ v[B,H]; pads H like the scalar wrapper."""
     a, _ = _pad_to(a, 2, expansion)
     v, _ = _pad_to(v, 1, expansion)
     y = matvec_expand.matvec_batched(
-        a, v, expansion=expansion, row_block=min(512, a.shape[-2]),
+        a, v, expansion=expansion, row_block=min(row_block or 512,
+                                                 a.shape[-2]),
         interpret=INTERPRET if interpret is None else interpret)
     return y
 
 
 def rmatvec_batched(a, u, *, expansion: int = 8,
+                    col_block: Optional[int] = None,
                     interpret: Optional[bool] = None):
     """z[B,H] = A[B,S,H]ᵀ @ u[B,S]; pads S like the scalar wrapper."""
     a, _ = _pad_to(a, 1, expansion)
     u, _ = _pad_to(u, 1, expansion)
     z = matvec_expand.rmatvec_batched(
-        a, u, expansion=expansion, col_block=min(512, a.shape[-1]),
+        a, u, expansion=expansion, col_block=min(col_block or 512,
+                                                 a.shape[-1]),
         interpret=INTERPRET if interpret is None else interpret)
     return z
 
@@ -121,9 +136,21 @@ def reorth_left(a, v, u_buf, *, expansion: int = 8,
 
 
 def lowrank_matmul(vt, w, *, expansion: int = 8,
+                   n_block: Optional[int] = None,
                    interpret: Optional[bool] = None):
+    """Vᵀ[k,H] @ W[H,N]; zero-pads the H reduction to a multiple of the
+    expansion factor (exact — pad products are 0·0) and N to a multiple
+    of 128 so the kernel's block-divisor clamp never collapses to tiny
+    N-blocks on prime-ish widths (a vocab-sized N would otherwise run a
+    pathological (N, f) grid)."""
     interp = INTERPRET if interpret is None else interpret
-    return _lrmm.lowrank_matmul(vt, w, expansion=expansion, interpret=interp)
+    vt, _ = _pad_to(vt, 1, expansion)
+    w, _ = _pad_to(w, 0, expansion)
+    w, n = _pad_to(w, 1, 128)
+    out = _lrmm.lowrank_matmul(vt, w, expansion=expansion,
+                               n_block=min(n_block or 512, w.shape[1]),
+                               interpret=interp)
+    return out[:, :n]
 
 
 def outlier_stats(x, threshold, *, expansion: int = 8,
@@ -135,9 +162,14 @@ def outlier_stats(x, threshold, *, expansion: int = 8,
 
 def dkv_attention_stats(inner, k_u, v_u, *, expansion: int = 8,
                         interpret: Optional[bool] = None):
+    """Rank-space flash stats over an ARBITRARY-length time axis: U_k/U_v
+    are zero-padded through the cached pad plan and the kernel masks rows
+    at or beyond the true length out of the softmax exactly."""
     interp = INTERPRET if interpret is None else interpret
+    k_u, t = _pad_to(k_u, 0, expansion)
+    v_u, _ = _pad_to(v_u, 0, expansion)
     return _dkv.dkv_attention_stats(inner, k_u, v_u, expansion=expansion,
-                                    interpret=interp)
+                                    interpret=interp, t_valid=t)
 
 
 merge_with_tail = _dkv.merge_with_tail

@@ -13,10 +13,14 @@ is exactly why the paper chose channel granularity.
 from __future__ import annotations
 
 import functools
+from typing import Optional
+
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from ..engine.platform import resolve_interpret
 
 
 def _outlier_kernel(x_ref, t_ref, cnt_ref, mx_ref):
@@ -36,8 +40,9 @@ def _outlier_kernel(x_ref, t_ref, cnt_ref, mx_ref):
 @functools.partial(jax.jit, static_argnames=("expansion", "col_block",
                                              "interpret"))
 def outlier_stats(x: jax.Array, threshold: jax.Array, *, expansion: int = 8,
-                  col_block: int = 512, interpret: bool = True):
+                  col_block: int = 512, interpret: Optional[bool] = None):
     """(counts[H] float32, maxabs[H] float32) for |x| > threshold."""
+    interpret = resolve_interpret(interpret)
     s_dim, h_dim = x.shape
     assert s_dim % expansion == 0
     blk = s_dim // expansion

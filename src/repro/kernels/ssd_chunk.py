@@ -20,10 +20,14 @@ The inter-chunk state recurrence stays outside (tiny, sequential).
 from __future__ import annotations
 
 import functools
+from typing import Optional
+
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from ..engine.platform import resolve_interpret
 
 
 def _ssd_chunk_kernel(cb_ref, l_ref, dt_ref, x_ref, y_ref, *, q: int,
@@ -50,12 +54,13 @@ def _ssd_chunk_kernel(cb_ref, l_ref, dt_ref, x_ref, y_ref, *, q: int,
 @functools.partial(jax.jit, static_argnames=("head_block", "interpret"))
 def ssd_chunk_intra(cb: jax.Array, l: jax.Array, dt: jax.Array,
                     x: jax.Array, *, head_block: int = 4,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: Optional[bool] = None) -> jax.Array:
     """Intra-chunk SSD term, fused.
 
     cb [G, Q, Q] (G = batch·chunks), l/dt [G, Q, nh], x [G, Q, nh, hd]
     → y [G, Q, nh, hd].  nh % head_block == 0.
     """
+    interpret = resolve_interpret(interpret)
     g, q, nh = l.shape
     hd = x.shape[-1]
     assert nh % head_block == 0, (nh, head_block)

@@ -7,6 +7,13 @@ KV stream) rides one DecomposeEngine, constructed here from the CLI flags
 and handed to the serving engine:
 
   ... --decompose-kv-rank 8 --dkv-tail 16 --backend pallas_interpret
+
+``--backend auto`` / ``--expansion auto`` resolve through the ``repro.tune``
+autotuner; with ``--expansion auto`` warmup PRE-TUNES the prefill
+decomposition shape this serving config will actually launch (the bucketed
+prompt length through the lanczos_reorth kernel family), so the first
+request pays no tuning cost and the resolved operating point is printed
+before traffic starts.
 """
 from __future__ import annotations
 
@@ -36,10 +43,14 @@ def main() -> None:
     ap.add_argument("--dkv-exact", action="store_true",
                     help="direct-SVD KV factorization (near-full rank)")
     ap.add_argument("--backend", default="reference",
-                    choices=available_backends(),
-                    help="decomposition backend for the engine")
-    ap.add_argument("--expansion", type=int, default=8,
-                    help="D-com compute-expansion factor f")
+                    choices=available_backends() + ["auto"],
+                    help="decomposition backend for the engine "
+                         "(auto = tuner-resolved)")
+    ap.add_argument("--expansion", default="8",
+                    help="D-com compute-expansion factor f, or 'auto' "
+                         "(tuner-resolved per shape-bucket)")
+    ap.add_argument("--no-pretune", action="store_true",
+                    help="skip the warmup pre-tuning pass")
     ap.add_argument("--admission", default="per_slot",
                     choices=("per_slot", "gang"),
                     help="admission policy (gang = legacy, for A/B)")
@@ -54,11 +65,40 @@ def main() -> None:
     cfg = get_arch(args.arch).reduced()
     fns = api.model_fns(cfg)
     params = fns.init(jax.random.PRNGKey(0), cfg)
+    expansion = args.expansion if args.expansion == "auto" \
+        else int(args.expansion)
     dengine = DecomposeEngine(EngineConfig(
-        backend=args.backend, expansion=args.expansion,
+        backend=args.backend, expansion=expansion,
         kv_rank=args.decompose_kv_rank, kv_tail=args.dkv_tail,
         kv_exact=args.dkv_exact, sched_bucket=args.sched_bucket,
         sched_admit_every=args.admit_every, sched_max_admit=args.max_admit))
+
+    if expansion == "auto" and not args.no_pretune:
+        # Serving warmup: resolve the tuned operating points for the
+        # shapes this config will actually launch — per-slot admission
+        # prefills pow2(len(admitted)) ≤ slots requests, and the flat
+        # prefill decomposition engine.decompose_kv runs through the
+        # lanczos_reorth family is [num_layers·nb, plen_bucket, kvw] —
+        # so every pow2 admission batch gets its bucket warmed before
+        # traffic starts.  (Pointless for a fixed --expansion: resolution
+        # never consults the tuner then.)
+        from .. import tune
+        plen = -(-args.prompt_len // max(1, args.sched_bucket)) \
+            * max(1, args.sched_bucket)
+        kvw = cfg.num_kv_heads * cfg.resolved_head_dim
+        slots = max(1, args.slots)
+        nbs, nb = {slots}, 1             # nb = min(pow2(admitted), slots)
+        while nb < slots:
+            nbs.add(nb)
+            nb *= 2
+        pre = tune.pretune(
+            {"lanczos_reorth": [(cfg.num_layers * n, plen, kvw)
+                                for n in sorted(nbs)]},
+            fix={"backend": dengine.resolved_backend})
+        for key, res in pre.items():
+            print(f"pretune[{res.kernel}]: f={res.best['expansion']} "
+                  f"({res.source}, {key})")
+
     eng = Engine(cfg, params, slots=args.slots, max_len=args.max_len,
                  decompose_kv_rank=args.decompose_kv_rank,
                  dkv_tail=args.dkv_tail, decompose_engine=dengine,

@@ -245,7 +245,7 @@ def logit_kl(params: Params, cfg, tokens: Array,
              runtime: DecomposedRuntime,
              wfactors: Optional[Dict[int, Params]] = None) -> Array:
     """KL(base ‖ decomposed) over the vocab — the container-feasible stand-in
-    for the paper's arc_easy/wikitext quality metrics (see DESIGN.md §6)."""
+    for the paper's arc_easy/wikitext quality metrics (see DESIGN.md §7)."""
     base = jax.nn.log_softmax(
         T.forward(params, cfg, tokens).astype(jnp.float32), axis=-1)
     dec = jax.nn.log_softmax(

@@ -1,0 +1,38 @@
+"""``repro.tune`` — cost-model-guided autotuner for the compute-expansion
+kernel family (see DESIGN.md §6).
+
+The paper's 6.2× decomposition speedup is a statement about choosing the
+right operating point on the Fig. 12 U-curve; this package owns that
+choice end to end:
+
+* ``space``      — declarative tunable spaces, registered next to each
+                   kernel in ``repro.kernels``;
+* ``cost_model`` — analytic roofline U-curve (prunes the grid, provably
+                   unimodal in f along the power-of-two grid);
+* ``measure``    — jit-warmup + median-of-k empirical harness;
+* ``cache``      — persistent JSON keyed device_kind × kernel ×
+                   shape-bucket × dtype, with an in-process lru layer;
+* ``tuner``      — orchestration + the engine-facing resolvers
+                   (``tuned_expansion`` answers ``expansion="auto"``,
+                   ``resolve_backend`` answers ``backend="auto"``).
+"""
+from .cache import TuningCache, default_cache, default_path, entry_key, \
+    shape_bucket
+from .cost_model import (CPU_INTERPRET, V5E, DeviceModel, detect_device,
+                         device_kind, predict, predict_curve)
+from .measure import measure_candidate, timeit
+from .space import (BLOCK_GRID, EXPANSION_GRID, TunableParam, TunableSpace,
+                    available_spaces, get_space, register_space)
+from .tuner import (DEFAULT_PRUNE, TuneResult, candidates_for, pretune,
+                    resolve_backend, tune, tune_backend, tuned_expansion)
+
+__all__ = [
+    "BLOCK_GRID", "CPU_INTERPRET", "DEFAULT_PRUNE", "DeviceModel",
+    "EXPANSION_GRID",
+    "TunableParam", "TunableSpace", "TuneResult", "TuningCache", "V5E",
+    "available_spaces", "candidates_for", "default_cache", "default_path",
+    "detect_device", "device_kind", "entry_key", "get_space",
+    "measure_candidate", "predict", "predict_curve", "pretune",
+    "register_space", "resolve_backend", "shape_bucket", "timeit", "tune",
+    "tune_backend", "tuned_expansion",
+]

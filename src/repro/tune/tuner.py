@@ -1,0 +1,260 @@
+"""Tuner orchestration: space → cost model → (optional) measurement → cache.
+
+``tune`` is the one entry point:
+
+1. **cache** — a persistent entry for (device_kind, kernel, shape-bucket,
+   dtype, pinned params) short-circuits everything; tuning cost is paid
+   once per machine.
+2. **model** — the roofline cost model scores every feasible candidate and
+   either answers directly (``measure=False`` — deterministic, O(grid)
+   arithmetic, what the engine uses at build/decompose time) or prunes the
+   grid to the ``prune`` most promising points.
+3. **measure** — survivors are timed by ``measure.measure_candidate``
+   (jit warmup + median-of-k); the winner is persisted so step 1 hits next
+   time.
+
+``tuned_expansion`` adds the in-process lru layer the engine resolves
+``expansion="auto"`` through, and ``resolve_backend`` answers
+``backend="auto"`` (cache override → platform heuristic).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Mapping, Optional, Sequence, Tuple
+
+from . import cost_model, measure
+from .cache import TuningCache, default_cache, entry_key, shape_bucket
+from .space import TunableSpace, get_space
+
+#: Production prune width: how many model-ranked candidates a measured
+#: tune benchmarks.  One constant so the fig12 A/B replays EXACTLY the
+#: pruning the shipped tuner uses.
+DEFAULT_PRUNE = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    """Outcome of one tuning query (also the shape of a cache entry)."""
+    kernel: str
+    shape: Tuple[int, ...]               # bucketed shape the entry covers
+    dtype: str
+    key: str
+    best: Dict[str, Any]
+    source: str                          # "cache" | "model" | "measured"
+    predicted_s: float
+    measured_s: Optional[float]
+    #: full sweep: (candidate, predicted_s, measured_s-or-None)
+    table: Tuple[Tuple[Dict[str, Any], float, Optional[float]], ...]
+
+    def swept_optimum(self) -> Tuple[Dict[str, Any], float]:
+        """(candidate, seconds) minimizing the measured column (predicted
+        where no measurement exists)."""
+        rows = [(c, m if m is not None else p) for c, p, m in self.table]
+        return min(rows, key=lambda r: r[1])
+
+
+def _variant(fix: Optional[Mapping[str, Any]]) -> str:
+    if not fix:
+        return "-"
+    return ",".join(f"{k}={fix[k]}" for k in sorted(fix))
+
+
+def _feasible(cand: Mapping[str, Any],
+              pinned: frozenset = frozenset()) -> bool:
+    """Drop operating points this process cannot run (the compiled Mosaic
+    backend needs a real TPU).  Pinned params are exempt: an explicitly
+    configured backend is the caller's choice — resolution must still
+    answer (the engine may be constructed on a CPU host for a TPU
+    deployment)."""
+    if "backend" not in pinned and cand.get("backend") == "pallas":
+        import jax
+        return jax.default_backend() == "tpu"
+    return True
+
+
+def candidates_for(kernel: str, fix: Optional[Mapping[str, Any]] = None
+                   ) -> Tuple[Dict[str, Any], ...]:
+    """Feasible candidate grid of ``kernel`` with ``fix`` params pinned
+    (pinned values need not be in the declared choices — the engine may pin
+    e.g. an exotic backend)."""
+    space: TunableSpace = get_space(kernel)
+    fix = dict(fix or {})
+    pinned = frozenset(fix)
+    out = []
+    seen = set()
+    for cand in space.candidates():
+        cand.update(fix)
+        key = tuple(sorted(cand.items()))
+        if key in seen:
+            continue
+        seen.add(key)
+        if _feasible(cand, pinned):
+            out.append(cand)
+    return tuple(out)
+
+
+def _from_entry(key: str, entry: Mapping[str, Any]) -> TuneResult:
+    table = tuple((dict(r["params"]), float(r["predicted_s"]),
+                   None if r.get("measured_s") is None
+                   else float(r["measured_s"]))
+                  for r in entry.get("table", ()))
+    return TuneResult(kernel=entry["kernel"], shape=tuple(entry["shape"]),
+                      dtype=entry["dtype"], key=key,
+                      best=dict(entry["best"]), source="cache",
+                      predicted_s=float(entry["predicted_s"]),
+                      measured_s=entry.get("measured_s"), table=table)
+
+
+def _to_entry(res: TuneResult) -> Dict[str, Any]:
+    return {"kernel": res.kernel, "shape": list(res.shape),
+            "dtype": res.dtype, "best": dict(res.best),
+            "source": res.source, "predicted_s": res.predicted_s,
+            "measured_s": res.measured_s,
+            "table": [{"params": dict(c), "predicted_s": p,
+                       "measured_s": m} for c, p, m in res.table]}
+
+
+def tune(kernel: str, shape: Sequence[int], dtype: Any = "float32", *,
+         fix: Optional[Mapping[str, Any]] = None, measure_candidates:
+         bool = False, prune: Optional[int] = DEFAULT_PRUNE, reps: int = 5,
+         device: Optional[cost_model.DeviceModel] = None,
+         cache: Optional[TuningCache] = None, force: bool = False,
+         persist: Optional[bool] = None) -> TuneResult:
+    """Pick the operating point of ``kernel`` for ``shape``/``dtype``.
+
+    ``measure_candidates=False`` (default) answers from cache or pure cost
+    model — cheap enough for the engine's build/decompose path.  With
+    ``measure_candidates=True`` the model-ranked top ``prune`` candidates
+    (None = all) are benchmarked and the winner persisted.  ``fix`` pins
+    params (the engine pins its backend); ``force`` ignores the cache.
+    """
+    cache = cache if cache is not None else default_cache()
+    dev = device or cost_model.detect_device()
+    bucket = shape_bucket(shape)
+    dt = str(dtype)
+    key = entry_key(cost_model.device_kind(), kernel, shape, dt) \
+        + "/" + _variant(fix)
+
+    if not force:
+        entry = cache.get(key)
+        if entry is not None and (entry.get("measured_s") is not None
+                                  or not measure_candidates):
+            return _from_entry(key, entry)
+
+    cands = candidates_for(kernel, fix)
+    if not cands:
+        raise ValueError(f"no feasible candidate for kernel {kernel!r} "
+                         f"with fix={dict(fix or {})!r}")
+    scored = sorted(
+        ((c, cost_model.predict(kernel, bucket, dt, c, dev))
+         for c in cands), key=lambda cp: cp[1])
+
+    if measure_candidates:
+        top = scored if prune is None else scored[:max(1, prune)]
+        table = tuple(
+            (c, p, measure.measure_candidate(kernel, bucket, dtype, c,
+                                             reps=reps))
+            for c, p in top)
+        best, pred, meas = min(table, key=lambda r: r[2])
+        res = TuneResult(kernel, bucket, dt, key, dict(best), "measured",
+                         pred, meas, table)
+    else:
+        best, pred = scored[0]
+        table = tuple((c, p, None) for c, p in scored)
+        res = TuneResult(kernel, bucket, dt, key, dict(best), "model",
+                         pred, None, table)
+
+    cache.put(key, _to_entry(res))
+    if persist if persist is not None else measure_candidates:
+        cache.save()
+    return res
+
+
+# ---------------------------------------------------------------------------
+# Engine-facing resolution (the in-process lru layer)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _tuned_expansion(kernel: str, bucket: Tuple[int, ...], dtype: str,
+                     backend: Optional[str], cache_path: str) -> int:
+    fix = {"backend": backend} if backend is not None else None
+    res = tune(kernel, bucket, dtype, fix=fix)
+    return int(res.best["expansion"])
+
+
+def tuned_expansion(shape: Sequence[int], dtype: Any = "float32",
+                    backend: Optional[str] = None,
+                    kernel: str = "lanczos_reorth") -> int:
+    """The expansion factor f the engine should run ``kernel`` at for this
+    shape-bucket — cache/model resolution behind an in-process lru (keyed
+    on the cache path so tests pointing ``REPRO_TUNE_CACHE`` elsewhere
+    don't see stale answers)."""
+    return _tuned_expansion(kernel, shape_bucket(shape), str(dtype),
+                            backend, default_cache().path)
+
+
+_BACKEND_KEY_SUFFIX = "engine_backend"
+
+
+def _backend_key() -> str:
+    return f"{cost_model.device_kind()}/{_BACKEND_KEY_SUFFIX}"
+
+
+def resolve_backend(cache: Optional[TuningCache] = None) -> str:
+    """Answer ``backend="auto"``: a measured cache override if
+    :func:`tune_backend` ran on this machine, else the platform heuristic
+    (compiled Mosaic on TPU; the jnp reference path on CPU, where Pallas
+    interpret mode is an emulation and never wins)."""
+    cache = cache if cache is not None else default_cache()
+    entry = cache.get(_backend_key())
+    if entry:
+        name = entry.get("best", {}).get("backend")
+        from ..engine.backends import available_backends
+        if name in available_backends():
+            return name
+    import jax
+    return "pallas" if jax.default_backend() == "tpu" else "reference"
+
+
+def tune_backend(shape: Sequence[int] = (4, 256, 512),
+                 dtype: Any = "float32", *, reps: int = 5,
+                 cache: Optional[TuningCache] = None) -> TuneResult:
+    """Measure the Lanczos re-orth step across every feasible backend (at
+    each backend's model-best f) and persist the winner as the machine's
+    ``backend="auto"`` answer."""
+    cache = cache if cache is not None else default_cache()
+    from ..engine.backends import available_backends
+    rows = []
+    for name in available_backends():
+        if not _feasible({"backend": name}):
+            continue
+        res = tune("lanczos_reorth", shape, dtype, fix={"backend": name},
+                   measure_candidates=True, prune=2, reps=reps,
+                   cache=cache, force=True, persist=False)
+        rows.append((res.best, res.predicted_s, res.measured_s))
+    best, pred, meas = min(rows, key=lambda r: r[2])
+    res = TuneResult("lanczos_reorth", shape_bucket(shape), str(dtype),
+                     _backend_key(), dict(best), "measured", pred, meas,
+                     tuple(rows))
+    cache.put(_backend_key(), _to_entry(res))
+    cache.save()
+    return res
+
+
+def pretune(shapes: Mapping[str, Sequence[Sequence[int]]],
+            dtype: Any = "float32", *,
+            fix: Optional[Mapping[str, Any]] = None,
+            measure_candidates: bool = False,
+            cache: Optional[TuningCache] = None
+            ) -> Dict[str, TuneResult]:
+    """Warm the tuning cache for a known workload — e.g. the serving CLI
+    pre-tunes its prefill decomposition and dkv-attention shapes before
+    the first request lands.  Returns {cache key: result}."""
+    out: Dict[str, TuneResult] = {}
+    for kernel, kshapes in shapes.items():
+        for shape in kshapes:
+            res = tune(kernel, shape, dtype, fix=fix,
+                       measure_candidates=measure_candidates, cache=cache)
+            out[res.key] = res
+    return out

@@ -163,6 +163,42 @@ def test_dkv_attention_stats(t, g, r, f):
     np.testing.assert_allclose(a, a_r, rtol=1e-4, atol=1e-3)
 
 
+@pytest.mark.parametrize("t", [1, 7, 100, 130])
+@pytest.mark.parametrize("f", [4, 8])
+def test_dkv_attention_stats_arbitrary_length(t, f):
+    """Non-divisible cache lengths (incl. t < f, where whole grid blocks
+    are padding): the wrapper pads the time axis through the cached pad
+    plan and the kernel masks pad rows out of the softmax EXACTLY."""
+    g, r = 4, 16
+    inner = _mk(jax.random.PRNGKey(30), (g, r), jnp.float32)
+    k_u = _mk(jax.random.PRNGKey(31), (t, r), jnp.float32)
+    v_u = _mk(jax.random.PRNGKey(32), (t, r), jnp.float32)
+    a, m, l = ops.dkv_attention_stats(inner, k_u, v_u, expansion=f)
+    a_r, m_r, l_r = ref.dkv_attention_stats(inner, k_u, v_u)
+    np.testing.assert_allclose(m, m_r, rtol=1e-5)
+    np.testing.assert_allclose(l, l_r, rtol=1e-4)
+    np.testing.assert_allclose(a, a_r, rtol=1e-4, atol=1e-3)
+
+
+def test_dkv_attention_stats_padding_is_bit_exact():
+    """Padded launch (t=96+pad at f=8 → 96 divisible; compare t=90) must
+    equal slicing a longer divisible launch's inputs — the masked rows
+    contribute literal zeros, not epsilon."""
+    g, r, f = 4, 8, 8
+    inner = _mk(jax.random.PRNGKey(33), (g, r), jnp.float32)
+    k_u = _mk(jax.random.PRNGKey(34), (96, r), jnp.float32)
+    v_u = _mk(jax.random.PRNGKey(35), (96, r), jnp.float32)
+    # oracle on the 90-row prefix, computed WITHOUT padding (f=1 divides)
+    a1, m1, l1 = ops.dkv_attention_stats(inner, k_u[:90], v_u[:90],
+                                         expansion=1)
+    a8, m8, l8 = ops.dkv_attention_stats(inner, k_u[:90], v_u[:90],
+                                         expansion=f)
+    np.testing.assert_allclose(np.asarray(m8), np.asarray(m1), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(l8), np.asarray(l1), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(a8), np.asarray(a1),
+                               rtol=1e-5, atol=1e-5)
+
+
 def test_dkv_merge_with_tail_exact():
     """Kernel stats + dense-tail merge == softmax over the full sequence."""
     g, r, t, tl, d = 4, 8, 256, 16, 32

@@ -157,3 +157,39 @@ def test_property_engine_finishes_once_no_leaks_monotone(data):
     assert all(r.done for r in finished)
     assert eng.live == [None] * eng.slots, "slot leak"
     assert eng.stats.prefills == n
+
+
+# ---------------------------------------------------------------------------
+# Tuner cost-model invariant (pure python — no device work)
+# ---------------------------------------------------------------------------
+
+from repro import tune as _tune  # noqa: E402
+
+
+@settings(max_examples=40, deadline=None)
+@given(b=st.integers(1, 8), s=st.integers(1, 700), h=st.integers(1, 700),
+       dtype=st.sampled_from(["float32", "bfloat16"]),
+       kernel=st.sampled_from(["lanczos_reorth", "matvec_expand",
+                               "lowrank_matmul", "dkv_attention"]),
+       dev=st.sampled_from([_tune.V5E, _tune.CPU_INTERPRET]))
+def test_property_cost_model_u_shaped_in_f(b, s, h, dtype, kernel, dev):
+    """The predicted latency is U-shaped (unimodal) in the expansion
+    factor along the power-of-two grid for EVERY shape/dtype/device:
+    non-increasing up to its argmin, non-decreasing after.  This is the
+    structural property the pruner relies on — a non-unimodal model could
+    prune away the true optimum."""
+    shape = {"lanczos_reorth": (b, s, h),
+             "matvec_expand": (s, h),
+             "lowrank_matmul": (max(1, 2 * b), s, h),
+             "dkv_attention": (b, s, h)}[kernel]
+    grid = sorted(_tune.get_space(kernel).param("expansion").choices)
+    ts = [_tune.predict(kernel, shape, dtype, {"expansion": f}, dev)
+          for f in grid]
+    assert all(t > 0 for t in ts)
+    i = min(range(len(ts)), key=ts.__getitem__)
+    for j in range(i):
+        assert ts[j] >= ts[j + 1] * (1 - 1e-9), \
+            (grid, ts, "not non-increasing left of argmin")
+    for j in range(i, len(ts) - 1):
+        assert ts[j] <= ts[j + 1] * (1 + 1e-9), \
+            (grid, ts, "not non-decreasing right of argmin")

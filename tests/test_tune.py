@@ -1,0 +1,271 @@
+"""repro.tune: spaces, cost model, cache, tuner, engine auto-resolution.
+
+Acceptance checks for the autotuning subsystem (ISSUE 3):
+* every expansion kernel registers a tunable space whose defaults match
+  the historical hard-codes (expansion=8, row_block/n_block=512);
+* the roofline cost model reproduces the paper's f* = 8 on the Fig. 12
+  shape under the v5e device model;
+* the persistent cache round-trips through disk, survives corruption,
+  and makes tuning deterministic;
+* ``EngineConfig(expansion="auto")`` resolves through repro.tune on every
+  backend and produces BIT-IDENTICAL decompositions vs the same engine
+  with the resolved f pinned.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import tune
+from repro.engine import DecomposeEngine, EngineConfig, available_backends
+
+
+@pytest.fixture()
+def tmp_cache(tmp_path, monkeypatch):
+    """Point the default cache at a fresh file; the tuner's in-process lru
+    is keyed on the cache path, so each test resolves from scratch."""
+    path = str(tmp_path / "cache.json")
+    monkeypatch.setenv("REPRO_TUNE_CACHE", path)
+    return path
+
+
+# ---------------------------------------------------------------------------
+# Tunable spaces
+# ---------------------------------------------------------------------------
+
+def test_every_expansion_kernel_registers_a_space():
+    assert set(tune.available_spaces()) >= {
+        "lanczos_reorth", "matvec_expand", "lowrank_matmul",
+        "dkv_attention"}
+
+
+def test_space_defaults_match_historical_hardcodes():
+    assert tune.get_space("lanczos_reorth").default()["expansion"] == 8
+    mv = tune.get_space("matvec_expand").default()
+    assert (mv["expansion"], mv["row_block"]) == (8, 512)
+    lm = tune.get_space("lowrank_matmul").default()
+    assert (lm["expansion"], lm["n_block"]) == (8, 512)
+    assert tune.get_space("dkv_attention").default()["expansion"] == 8
+
+
+def test_space_candidates_deterministic_and_complete():
+    space = tune.get_space("matvec_expand")
+    c1, c2 = list(space.candidates()), list(space.candidates())
+    assert c1 == c2 and len(c1) == space.size()
+    assert space.default() in c1
+    with pytest.raises(KeyError):
+        tune.get_space("no-such-kernel")
+
+
+def test_candidates_for_pins_and_filters():
+    cands = tune.candidates_for("lanczos_reorth",
+                                fix={"backend": "pallas_interpret"})
+    assert cands and all(c["backend"] == "pallas_interpret" for c in cands)
+    # the compiled Mosaic backend is infeasible off-TPU and must be dropped
+    if jax.default_backend() != "tpu":
+        assert not any(c["backend"] == "pallas"
+                       for c in tune.candidates_for("lanczos_reorth"))
+
+
+# ---------------------------------------------------------------------------
+# Cost model
+# ---------------------------------------------------------------------------
+
+def test_cost_model_reproduces_paper_fstar_on_v5e():
+    """Fig. 12 shape (batch 64, S = H = 4096, rank 10) under the v5e
+    roofline: the model's argmin over the grid is the paper's f* = 8."""
+    grid = tune.get_space("lanczos_reorth").param("expansion").choices
+    ts = {f: tune.predict("lanczos_reorth", (64, 4096, 4096, 10),
+                          "bfloat16", {"expansion": f}, tune.V5E)
+          for f in grid}
+    assert min(ts, key=ts.get) == 8
+    assert ts[1] > ts[8]                 # expansion must actually pay
+
+
+def test_cost_model_penalizes_interpret_overhead():
+    """On the interpret-mode CPU device the per-grid-step cost dominates,
+    so large f must never look cheaper than small f."""
+    t1 = tune.predict("lanczos_reorth", (2, 64, 128), "float32",
+                      {"expansion": 1}, tune.CPU_INTERPRET)
+    t32 = tune.predict("lanczos_reorth", (2, 64, 128), "float32",
+                       {"expansion": 32}, tune.CPU_INTERPRET)
+    assert t32 > t1
+
+
+def test_cost_model_unknown_kernel_raises():
+    with pytest.raises(KeyError):
+        tune.predict("nope", (2, 2), "float32", {"expansion": 1}, tune.V5E)
+
+
+# ---------------------------------------------------------------------------
+# Cache
+# ---------------------------------------------------------------------------
+
+def test_cache_round_trip(tmp_cache):
+    c = tune.TuningCache(tmp_cache)
+    c.put("k1", {"best": {"expansion": 4}, "measured_s": 1e-3})
+    c.save()
+    c2 = tune.TuningCache(tmp_cache)
+    assert c2.get("k1") == {"best": {"expansion": 4}, "measured_s": 1e-3}
+    assert len(c2) == 1 and list(c2.keys()) == ["k1"]
+
+
+def test_cache_merge_save_preserves_other_writers(tmp_cache):
+    a, b = tune.TuningCache(tmp_cache), tune.TuningCache(tmp_cache)
+    a.put("ka", {"v": 1})
+    a.save()
+    b.put("kb", {"v": 2})
+    b.save()                              # must not clobber ka
+    c = tune.TuningCache(tmp_cache)
+    assert c.get("ka") == {"v": 1} and c.get("kb") == {"v": 2}
+
+
+def test_cache_corrupt_file_is_empty_not_fatal(tmp_cache):
+    with open(tmp_cache, "w") as fh:
+        fh.write("{not json")
+    c = tune.TuningCache(tmp_cache)
+    assert c.get("anything") is None
+    c.put("k", {"v": 1})
+    c.save()                              # overwrites the corrupt file
+    assert json.load(open(tmp_cache))["entries"]["k"] == {"v": 1}
+
+
+def test_shape_bucketing():
+    assert tune.shape_bucket((3, 33, 48)) == (4, 64, 64)
+    assert tune.shape_bucket((1, 64)) == (1, 64)
+    k1 = tune.entry_key("dev", "kern", (3, 33, 48), "float32")
+    k2 = tune.entry_key("dev", "kern", (4, 50, 64), "float32")
+    assert k1 == k2                       # same bucket, one entry
+
+
+# ---------------------------------------------------------------------------
+# Tuner
+# ---------------------------------------------------------------------------
+
+def test_tune_model_mode_is_deterministic(tmp_cache):
+    kw = dict(fix={"backend": "pallas_interpret"})
+    r1 = tune.tune("lanczos_reorth", (2, 48, 96), **kw)
+    r2 = tune.tune("lanczos_reorth", (2, 48, 96), **kw)
+    assert r1.best == r2.best
+    assert r1.source == "model" and r2.source == "cache"   # in-proc hit
+    r3 = tune.tune("lanczos_reorth", (2, 48, 96), force=True, **kw)
+    assert r3.best == r1.best             # pure cost model: same answer
+
+
+def test_tune_measured_persists_and_hits_cache(tmp_cache):
+    kw = dict(shape=(16, 32), dtype="float32", fix={"row_block": 128},
+              prune=2, reps=1)
+    r1 = tune.tune("matvec_expand", measure_candidates=True, **kw)
+    assert r1.source == "measured" and r1.measured_s > 0
+    assert any(m is not None for _, _, m in r1.table)
+    # a fresh process would read the persisted entry: simulate via a new
+    # cache object over the same file
+    c2 = tune.TuningCache(tmp_cache)
+    r2 = tune.tune("matvec_expand", measure_candidates=True, cache=c2, **kw)
+    assert r2.source == "cache" and r2.best == r1.best
+
+
+def test_tuned_expansion_is_cached_in_process(tmp_cache):
+    f1 = tune.tuned_expansion((2, 48, 96), backend="pallas_interpret")
+    f2 = tune.tuned_expansion((2, 50, 100), backend="pallas_interpret")
+    assert isinstance(f1, int) and f1 >= 1
+    assert f1 == f2                       # same shape bucket → same answer
+
+
+def test_resolve_backend_platform_heuristic_and_override(tmp_cache):
+    name = tune.resolve_backend()
+    assert name in available_backends()
+    if jax.default_backend() != "tpu":
+        assert name == "reference"
+    # a measured cache override wins
+    c = tune.default_cache()
+    c.put(f"{tune.device_kind()}/engine_backend",
+          {"best": {"backend": "pallas_vmap"}})
+    assert tune.resolve_backend() == "pallas_vmap"
+    c.put(f"{tune.device_kind()}/engine_backend",
+          {"best": {"backend": "not-a-backend"}})
+    assert tune.resolve_backend() in available_backends()   # ignored
+
+
+def test_pretune_warms_cache(tmp_cache):
+    out = tune.pretune({"lanczos_reorth": [(2, 48, 96)],
+                        "dkv_attention": [(4, 96, 16)]})
+    assert len(out) == 2
+    for res in out.values():
+        assert "expansion" in res.best
+
+
+# ---------------------------------------------------------------------------
+# Engine resolution: expansion="auto" / backend="auto"
+# ---------------------------------------------------------------------------
+
+def test_engine_config_rejects_bad_expansion():
+    with pytest.raises(ValueError):
+        EngineConfig(expansion="turbo")
+    with pytest.raises(ValueError):
+        EngineConfig(expansion=0)
+    assert EngineConfig(expansion="auto").expansion == "auto"
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas_interpret",
+                                     "pallas_vmap", "pallas"])
+def test_auto_expansion_resolves_on_every_backend(tmp_cache, backend):
+    """expansion="auto" must resolve through repro.tune to a concrete f on
+    ALL FOUR backends (construction + resolution; execution is covered
+    below for the backends this container can run)."""
+    eng = DecomposeEngine(EngineConfig(backend=backend, expansion="auto"))
+    f = eng.resolve_expansion(33, 48, batch=2)
+    assert isinstance(f, int) and f >= 1
+    assert repr(eng).count("expansion=auto") == 1
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas_interpret",
+                                     "pallas_vmap"])
+def test_auto_expansion_bit_identical_to_fixed_f(tmp_cache, backend):
+    """The acceptance property: an auto-tuned engine's decomposition is
+    BIT-identical to the same engine with the resolved f pinned."""
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 33, 48), jnp.float32)
+    auto = DecomposeEngine(EngineConfig(backend=backend, expansion="auto"))
+    f = auto.resolve_expansion(33, 48, batch=2)
+    fixed = DecomposeEngine(EngineConfig(backend=backend, expansion=f))
+    lr_a, lr_f = auto.decompose(x, 5), fixed.decompose(x, 5)
+    np.testing.assert_array_equal(np.asarray(lr_a.u), np.asarray(lr_f.u))
+    np.testing.assert_array_equal(np.asarray(lr_a.core),
+                                  np.asarray(lr_f.core))
+    np.testing.assert_array_equal(np.asarray(lr_a.vt), np.asarray(lr_f.vt))
+    # and the KV factorization path rides the same resolution
+    u_a, vt_a = auto.decompose_kv(x, 4)
+    u_f, vt_f = fixed.decompose_kv(x, 4)
+    np.testing.assert_array_equal(np.asarray(u_a), np.asarray(u_f))
+    np.testing.assert_array_equal(np.asarray(vt_a), np.asarray(vt_f))
+
+
+def test_auto_backend_engine_builds_and_runs(tmp_cache):
+    eng = DecomposeEngine(EngineConfig(backend="auto"))
+    assert eng.resolved_backend in available_backends()
+    x = jax.random.normal(jax.random.PRNGKey(4), (1, 16, 24))
+    lr = eng.decompose(x, 3)
+    assert lr.u.shape == (1, 16, 3)
+
+
+def test_serving_engine_accepts_auto_config(tmp_cache):
+    """The serving path jit-keys on the engine knobs; "auto" must thread
+    through prefill decomposition end to end."""
+    from repro.configs import all_archs
+    from repro.models import model_fns
+    from repro.serving import Engine, Request
+
+    cfg = all_archs()["deepseek-7b"].reduced()
+    params = model_fns(cfg).init(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, slots=2, max_len=64,
+                 decompose_engine=DecomposeEngine(EngineConfig(
+                     backend="auto", expansion="auto", kv_rank=6,
+                     kv_tail=4)))
+    rng = np.random.RandomState(0)
+    eng.submit(Request(uid=0, prompt=rng.randint(0, cfg.vocab, 8,
+                                                 dtype=np.int32),
+                       max_new_tokens=4))
+    done = eng.run()
+    assert len(done) == 1 and len(done[0].out_tokens) >= 4
