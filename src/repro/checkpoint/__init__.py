@@ -17,7 +17,9 @@ import json
 import os
 import re
 import shutil
+import tempfile
 import threading
+import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -27,6 +29,9 @@ import numpy as np
 Pytree = Any
 
 _MANIFEST = "manifest.json"
+_STAGING_PREFIX = ".staging.tmp-"
+# a staging dir untouched this long belongs to a dead writer, not a slow one
+_STAGING_STALE_S = 3600.0
 
 # np.save/np.load can't round-trip ml_dtypes (bfloat16 etc.) — store them
 # through a same-width uint view and restore via the manifest dtype string.
@@ -59,13 +64,26 @@ def _flatten_with_names(tree: Pytree) -> List[Tuple[str, Any]]:
 
 
 def save(tree: Pytree, directory: str, step: int) -> str:
-    """Synchronous atomic save.  Returns the final directory."""
-    final = os.path.join(directory, f"step_{step}")
-    tmp = final + ".tmp"
-    if os.path.exists(tmp):
-        shutil.rmtree(tmp)
-    os.makedirs(tmp, exist_ok=True)
+    """Synchronous atomic save.  Returns the final directory.
 
+    The staging directory is UNIQUE PER WRITER (``mkdtemp``), not the
+    shared ``step_N.tmp`` it used to be: an abandoned async writer (e.g.
+    left behind by a crash/restart cycle) racing a new save for the same
+    step must never delete or rename the directory another writer is still
+    filling.  Whichever writer renames first wins; the loser's staging dir
+    is discarded — both hold the same deterministic state for a given
+    step, so durability is unaffected."""
+    final = os.path.join(directory, f"step_{step}")
+    os.makedirs(directory, exist_ok=True)
+    tmp = tempfile.mkdtemp(dir=directory, prefix=_STAGING_PREFIX)
+    try:
+        return _save_into(tree, tmp, final, step)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+
+
+def _save_into(tree: Pytree, tmp: str, final: str, step: int) -> str:
     manifest: Dict[str, Any] = {"step": step, "leaves": {}}
     for name, leaf in _flatten_with_names(tree):
         arr = np.asarray(jax.device_get(leaf))
@@ -80,9 +98,18 @@ def save(tree: Pytree, directory: str, step: int) -> str:
     manifest["num_leaves"] = len(flat)
     with open(os.path.join(tmp, _MANIFEST), "w") as f:
         json.dump(manifest, f)
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)          # atomicity boundary
+    try:
+        os.rename(tmp, final)      # atomicity boundary
+    except OSError:
+        # final already exists: it can only have appeared through a
+        # completed rename (finals are never partially written), so a
+        # concurrent writer for the same step won with the same
+        # deterministic payload — never delete the durable winner, just
+        # drop our staging dir.  Anything else is a real I/O failure and
+        # must surface, or the caller would believe the step is durable.
+        shutil.rmtree(tmp, ignore_errors=True)
+        if not os.path.isdir(final):
+            raise
     return final
 
 
@@ -139,6 +166,20 @@ def gc_old(directory: str, keep: int = 3) -> None:
     for s in steps[:-keep] if keep else steps:
         shutil.rmtree(os.path.join(directory, f"step_{s}"),
                       ignore_errors=True)
+    # sweep staging dirs abandoned by hard-killed writers (in-process
+    # failures clean up in save(); a LIVE writer's dir is mtime-fresh —
+    # np.save touches it continuously — so the age gate never races one)
+    now = time.time()
+    for d in os.listdir(directory):
+        if not d.startswith(_STAGING_PREFIX):
+            continue
+        p = os.path.join(directory, d)
+        try:
+            stale = now - os.path.getmtime(p) > _STAGING_STALE_S
+        except OSError:
+            continue                        # renamed/removed under us
+        if stale:
+            shutil.rmtree(p, ignore_errors=True)
 
 
 class AsyncCheckpointer:

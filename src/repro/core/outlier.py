@@ -19,6 +19,9 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import os
+import tempfile
+import warnings
 from functools import partial
 from typing import Dict, Optional, Tuple
 
@@ -109,19 +112,44 @@ class ThresholdTable:
 
     # -- persistence -----------------------------------------------------
     def save(self, path: str) -> None:
-        with open(path, "w") as f:
-            json.dump({"default": self.default,
-                       "thresholds": {str(k): v
-                                      for k, v in self.thresholds.items()}},
-                      f, indent=2, sort_keys=True)
+        """Atomic write (tmp file + ``os.replace``, the same pattern as
+        ``tune.cache``): a crash mid-write leaves either the previous table
+        or the new one on disk, never a truncated JSON — this file is
+        calibrated offline once and consulted by every serving run."""
+        payload = {"default": self.default,
+                   "thresholds": {str(k): v
+                                  for k, v in self.thresholds.items()}}
+        d = os.path.dirname(os.path.abspath(path))
+        fd, tmp = tempfile.mkstemp(dir=d, prefix=".thresholds-",
+                                   suffix=".json.tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=2, sort_keys=True)
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
 
     @classmethod
     def load(cls, path: str) -> "ThresholdTable":
-        with open(path) as f:
-            d = json.load(f)
-        return cls(thresholds={int(k): float(v)
-                               for k, v in d["thresholds"].items()},
-                   default=float(d.get("default", 6.0)))
+        """Load a saved table; a corrupt/unreadable file degrades to the
+        built-in defaults with a warning (serving keeps running on the
+        conservative default threshold rather than crashing on a table a
+        pre-atomic-save writer truncated)."""
+        try:
+            with open(path) as f:
+                d = json.load(f)
+            return cls(thresholds={int(k): float(v)
+                                   for k, v in d["thresholds"].items()},
+                       default=float(d.get("default", 6.0)))
+        except (OSError, ValueError, KeyError, TypeError) as e:
+            warnings.warn(f"ThresholdTable.load({path!r}): unreadable or "
+                          f"corrupt table ({e!r}); falling back to defaults",
+                          RuntimeWarning, stacklevel=2)
+            return cls()
 
 
 def measured_extraction_frac(x: Array, threshold: float,

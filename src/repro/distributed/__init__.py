@@ -1,5 +1,6 @@
 """Distribution layer: sharding rule tables, gradient compression,
 collective helpers."""
-from .sharding import (batch_sharding, cache_sharding, dp_axes,
+from .sharding import (batch_sharding, cache_pspec, cache_sharding,
+                       constrain_cache, dp_axes, dp_name,
                        opt_state_sharding, param_spec, params_sharding,
                        replicated, token_sharding)

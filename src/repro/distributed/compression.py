@@ -19,12 +19,26 @@ and the error-feedback state so ``runtime.steps`` can wire it as a
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
 Pytree = Any
+
+
+def _path_seed(path) -> int:
+    """Stable per-leaf fold-in seed from the tree path.
+
+    MUST be process-invariant: every DP worker (its own Python process,
+    its own PYTHONHASHSEED) has to draw the SAME initial Q or the implicit
+    all-reduces of P/Q' average projections taken in different subspaces —
+    silently wrong gradients and no run-to-run reproducibility.  Python's
+    ``hash(str)`` is salted per process, so we digest with ``zlib.crc32``
+    instead (tests/test_compression.py runs the cross-process regression).
+    """
+    return zlib.crc32(str(path).encode("utf-8")) % (2 ** 31)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,7 +70,7 @@ def init_state(params: Pytree, cfg: PowerSGDConfig) -> Pytree:
             return {"e": None, "q": None}
         g2, _ = _reshape2d(jnp.zeros(p.shape, jnp.float32))
         key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed),
-                                 abs(hash(str(path))) % (2 ** 31))
+                                 _path_seed(path))
         q = jax.random.normal(key, (g2.shape[1], cfg.rank), jnp.float32)
         return {"e": jnp.zeros(p.shape, jnp.float32), "q": q}
     return jax.tree_util.tree_map_with_path(

@@ -38,6 +38,12 @@ def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
 
 
+def dp_name(mesh: Mesh):
+    """The DP super-axis as a PartitionSpec entry (tuple iff multi-pod)."""
+    dp = dp_axes(mesh)
+    return dp if len(dp) > 1 else dp[0]
+
+
 def axis_size(mesh: Mesh, name) -> int:
     if isinstance(name, tuple):
         out = 1
@@ -154,85 +160,122 @@ def opt_state_sharding(opt_shapes: Pytree, mesh: Mesh, cfg,
 def batch_sharding(batch_shapes: Pytree, mesh: Mesh) -> Pytree:
     """Train/prefill batches: leading batch dim over DP."""
     dp = dp_axes(mesh)
-    dp_name = dp if len(dp) > 1 else dp[0]
+    dpn = dp_name(mesh)
 
     def f(leaf):
         spec = [None] * leaf.ndim
         if leaf.shape and leaf.shape[0] % axis_size(mesh, dp) == 0:
-            spec[0] = dp_name
+            spec[0] = dpn
         elif leaf.ndim >= 2 and leaf.shape[0] == 1 \
                 and leaf.shape[1] % axis_size(mesh, dp) == 0:
-            spec[1] = dp_name            # batch-1 long context: shard S
+            spec[1] = dpn                # batch-1 long context: shard S
         return NamedSharding(mesh, P(*spec))
     return jax.tree_util.tree_map(f, batch_shapes)
 
 
-def cache_sharding(cache_shapes: Pytree, mesh: Mesh, cfg) -> Pytree:
-    """Decode caches.  Leaf patterns (by dict key):
+def cache_pspec(path_str: str, shape: Tuple[int, ...], mesh: Mesh,
+                seq_shard: bool = True) -> P:
+    """PartitionSpec for one decode-cache leaf.  Leaf patterns (by dict key):
     * k/v:   [..., B, T, kvh, hd] — B→DP (or T→"data" when B==1),
              kvh→"model" (else hd→"model", else replicated),
+    * k_u/v_u:   [..., B, T, r]   — B→DP (or T→"data" when B==1); the time
+             axis stays model-REPLICATED (§Perf C3, refuted: sharded-softmax
+             all-reduces of the [B,kvh,g,T] scores cost 2× the saved reads),
+    * k_vt/v_vt: [..., B, r, kvw] — B→DP, kvw→"model",
     * conv:  [..., B, W, ch]      — B→DP, ch→"model",
     * ssm:   [..., B, nh, hd, ds] — B→DP, nh→"model".
-    """
-    dp = dp_axes(mesh)
-    dp_name = dp if len(dp) > 1 else dp[0]
-    dp_sz = axis_size(mesh, dp)
 
-    def f(path, leaf):
-        ps = _path_str(path)
-        leaf_name = ps.rsplit("/", 1)[-1]
-        nd = leaf.ndim
-        spec = [None] * nd
-        if leaf_name in ("k", "v"):
-            b_dim, t_dim, kvh_dim, hd_dim = nd - 4, nd - 3, nd - 2, nd - 1
-            if leaf.shape[b_dim] % dp_sz == 0 and leaf.shape[b_dim] > 1:
-                spec[b_dim] = dp_name
-            elif leaf.shape[b_dim] == 1 \
-                    and leaf.shape[t_dim] % mesh.shape["data"] == 0:
-                spec[t_dim] = "data"     # sequence-sharded KV
-            if _fits(leaf.shape[kvh_dim], mesh, "model") \
-                    and leaf.shape[kvh_dim] > 1:
-                spec[kvh_dim] = "model"
-            elif _fits(leaf.shape[hd_dim], mesh, "model"):
-                spec[hd_dim] = "model"
-        elif leaf_name in ("k_u", "v_u"):      # [.., B, T, r]
-            b_dim, t_dim = nd - 3, nd - 2
-            if leaf.shape[b_dim] % dp_sz == 0 and leaf.shape[b_dim] > 1:
-                spec[b_dim] = dp_name
-            elif leaf.shape[b_dim] == 1 \
-                    and leaf.shape[t_dim] % mesh.shape["data"] == 0:
-                spec[t_dim] = "data"
-            # NOTE (§Perf C3, refuted): sharding U's time axis over
-            # "model" cuts U reads ~17% but the sharded-softmax
-            # all-reduces of the [B,kvh,g,T] scores cost 2x more than the
-            # saving — U stays model-replicated.
-        elif leaf_name in ("k_vt", "v_vt"):    # [.., B, r, kvw]
-            b_dim, w_dim = nd - 3, nd - 1
-            if leaf.shape[b_dim] % dp_sz == 0 and leaf.shape[b_dim] > 1:
-                spec[b_dim] = dp_name
-            if _fits(leaf.shape[w_dim], mesh, "model"):
-                spec[w_dim] = "model"
-        elif leaf_name == "conv":
-            b_dim, ch_dim = nd - 3, nd - 1
-            if leaf.shape[b_dim] % dp_sz == 0 and leaf.shape[b_dim] > 1:
-                spec[b_dim] = dp_name
-            if _fits(leaf.shape[ch_dim], mesh, "model"):
-                spec[ch_dim] = "model"
-        elif leaf_name == "ssm":
-            b_dim, nh_dim = nd - 4, nd - 3
-            if leaf.shape[b_dim] % dp_sz == 0 and leaf.shape[b_dim] > 1:
-                spec[b_dim] = dp_name
-            if _fits(leaf.shape[nh_dim], mesh, "model"):
-                spec[nh_dim] = "model"
-        return NamedSharding(mesh, P(*spec))
-    return jax.tree_util.tree_map_with_path(f, cache_shapes)
+    ``seq_shard=False`` disables the B==1 time-axis ("flash-decoding")
+    branch: it belongs to global-batch-1 long-context DECODE caches, not
+    to a serving engine's freshly prefilled single-request cache, which
+    must stay replicated until it is spliced into the slot-sharded live
+    cache.
+
+    Shape-only (works on ShapeDtypeStructs AND traced arrays, so the same
+    rules serve ``cache_sharding`` device placement and the
+    ``with_sharding_constraint`` calls inside the serving engine's jitted
+    step fns).
+    """
+    dpn = dp_name(mesh)
+    dp_sz = axis_size(mesh, dp_axes(mesh))
+    leaf_name = path_str.rsplit("/", 1)[-1]
+    nd = len(shape)
+    spec = [None] * nd
+    if leaf_name in ("k", "v"):
+        b_dim, t_dim, kvh_dim, hd_dim = nd - 4, nd - 3, nd - 2, nd - 1
+        if shape[b_dim] % dp_sz == 0 and shape[b_dim] > 1:
+            spec[b_dim] = dpn
+        elif seq_shard and shape[b_dim] == 1 \
+                and shape[t_dim] % mesh.shape["data"] == 0:
+            spec[t_dim] = "data"     # sequence-sharded KV
+        if _fits(shape[kvh_dim], mesh, "model") \
+                and shape[kvh_dim] > 1:
+            spec[kvh_dim] = "model"
+        elif _fits(shape[hd_dim], mesh, "model"):
+            spec[hd_dim] = "model"
+    elif leaf_name in ("k_u", "v_u"):      # [.., B, T, r]
+        b_dim, t_dim = nd - 3, nd - 2
+        if shape[b_dim] % dp_sz == 0 and shape[b_dim] > 1:
+            spec[b_dim] = dpn
+        elif seq_shard and shape[b_dim] == 1 \
+                and shape[t_dim] % mesh.shape["data"] == 0:
+            spec[t_dim] = "data"
+        # NOTE (§Perf C3, refuted): sharding U's time axis over
+        # "model" cuts U reads ~17% but the sharded-softmax
+        # all-reduces of the [B,kvh,g,T] scores cost 2x more than the
+        # saving — U stays model-replicated.
+    elif leaf_name in ("k_vt", "v_vt"):    # [.., B, r, kvw]
+        b_dim, w_dim = nd - 3, nd - 1
+        if shape[b_dim] % dp_sz == 0 and shape[b_dim] > 1:
+            spec[b_dim] = dpn
+        if _fits(shape[w_dim], mesh, "model"):
+            spec[w_dim] = "model"
+    elif leaf_name == "conv":
+        b_dim, ch_dim = nd - 3, nd - 1
+        if shape[b_dim] % dp_sz == 0 and shape[b_dim] > 1:
+            spec[b_dim] = dpn
+        if _fits(shape[ch_dim], mesh, "model"):
+            spec[ch_dim] = "model"
+    elif leaf_name == "ssm":
+        b_dim, nh_dim = nd - 4, nd - 3
+        if shape[b_dim] % dp_sz == 0 and shape[b_dim] > 1:
+            spec[b_dim] = dpn
+        if _fits(shape[nh_dim], mesh, "model"):
+            spec[nh_dim] = "model"
+    return P(*spec)
+
+
+def cache_sharding(cache_shapes: Pytree, mesh: Mesh, cfg,
+                   seq_shard: bool = True) -> Pytree:
+    """NamedSharding per decode-cache leaf (rules: :func:`cache_pspec`)."""
+    del cfg                              # rules are shape/name-driven
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, cache_pspec(_path_str(path), leaf.shape, mesh,
+                              seq_shard=seq_shard)),
+        cache_shapes)
+
+
+def constrain_cache(cache: Pytree, mesh: Optional[Mesh],
+                    seq_shard: bool = True) -> Pytree:
+    """``with_sharding_constraint`` every cache leaf to its
+    :func:`cache_pspec` — used INSIDE the serving engine's jitted step
+    functions so GSPMD keeps splice/fold/decode device-local along the
+    sharded batch axis.  No-op when ``mesh`` is None."""
+    if mesh is None:
+        return cache
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: jax.lax.with_sharding_constraint(
+            leaf, NamedSharding(mesh,
+                                cache_pspec(_path_str(path), leaf.shape,
+                                            mesh, seq_shard=seq_shard))),
+        cache)
 
 
 def token_sharding(mesh: Mesh, batch: int) -> NamedSharding:
     dp = dp_axes(mesh)
-    dp_name = dp if len(dp) > 1 else dp[0]
     if batch % axis_size(mesh, dp) == 0 and batch > 1:
-        return NamedSharding(mesh, P(dp_name))
+        return NamedSharding(mesh, P(dp_name(mesh)))
     return NamedSharding(mesh, P(None))
 
 

@@ -13,7 +13,7 @@ is built exactly once and then threaded through models/runtime/serving.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Union
+from typing import Any, Optional, Union
 
 from ..core.outlier import ThresholdTable
 from ..core.policy import DecompositionPolicy, LayerPolicy
@@ -50,6 +50,15 @@ class EngineConfig:
                         (prefill/decode interleaving policy), and one
                         admission batch takes at most ``sched_max_admit``
                         requests (0 = as many as there are free slots).
+    * ``mesh``        — optional ``jax.sharding.Mesh``: the engine runs its
+                        jitted Lanczos pipeline DP-sharded over the batch
+                        axis (explicit in/out shardings; ``shard_map`` for
+                        Pallas kernel backends so each device launches its
+                        own grid), and a serving engine built from this
+                        config shards its decode caches with
+                        ``distributed.sharding.cache_sharding``.  None (the
+                        default) is the single-device path, bit-identical
+                        to pre-mesh behavior.
     """
     policy: Optional[DecompositionPolicy] = None
     backend: str = "reference"
@@ -62,6 +71,7 @@ class EngineConfig:
     sched_bucket: int = 16
     sched_admit_every: int = 1
     sched_max_admit: int = 0
+    mesh: Optional[Any] = None          # jax.sharding.Mesh (hashable)
 
     def __post_init__(self):
         if self.expansion != "auto" and (

@@ -28,6 +28,8 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..core import lanczos as lz
 from ..core import outlier as ol
@@ -43,15 +45,63 @@ Array = jax.Array
 
 
 @functools.lru_cache(maxsize=None)
-def _padded_z0(h_dim: int, h_pad: int) -> Array:
+def _padded_z0(h_dim: int, h_pad: int) -> np.ndarray:
     """Fixed start direction of the UNPADDED width, zero-extended: pad
     components then stay exactly zero through every re-orth step, so all
     backends (padded or not) run the same arithmetic.  Cached per width so
     the per-layer hot path doesn't re-dispatch the eager normal+pad; the
     value is identical to the default the jitted core generates (same key,
-    same shape, deterministic threefry)."""
-    z0 = jax.random.normal(jax.random.PRNGKey(0), (h_dim,), jnp.float32)
-    return jnp.pad(z0, (0, h_pad - h_dim))
+    same shape, deterministic threefry).
+
+    The cache holds the HOST-side numpy value, never a committed device
+    array: jit places it per call site, so the same entry serves every
+    device/mesh and the cache cannot pin stale device buffers (it used to
+    hold device arrays keyed only on widths — wrong device under a mesh
+    and a per-width buffer leak)."""
+    with jax.ensure_compile_time_eval():     # concrete even under a trace
+        z0 = np.asarray(jax.random.normal(jax.random.PRNGKey(0), (h_dim,),
+                                          jnp.float32))
+    return np.pad(z0, (0, h_pad - h_dim))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_decompose(mesh, batch_spec: P, rank: int, iters: int, hooks,
+                       use_shard_map: bool):
+    """Jitted Lanczos pipeline with EXPLICIT in/out shardings on ``mesh``.
+
+    ``batch_spec`` shards the flat [B, S, H] batch axis over the mesh's DP
+    super-axis (P() = replication fallback when B doesn't divide).  Two
+    lowerings, same math:
+
+    * plain jit + in/out shardings — GSPMD partitions the batched einsum
+      steps (reference backend; every op is batch-parallel so no
+      collectives appear),
+    * ``shard_map`` over DP — each device runs the decomposition on ITS
+      batch shard with a device-local Pallas grid (kernel backends: the
+      grid is sized by the LOCAL batch, which a global-view lowering
+      cannot express).
+
+    Cached per (mesh, spec, rank, iters, hooks, lowering) so serving's
+    per-prefill hot path reuses one executable.
+    """
+    dp = batch_spec[0] if len(batch_spec) else None
+
+    def run(xf: Array, z0: Array):
+        return lz.decompose(xf, rank, iters=iters, batched_hooks=hooks,
+                            z0=z0)
+
+    if use_shard_map and dp is not None:
+        from jax.experimental.shard_map import shard_map
+        in_specs = (P(dp, None, None), P())
+        out_specs = LowRank(P(dp, None, None), P(dp, None), P(dp, None, None))
+        return jax.jit(shard_map(run, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=False))
+    x_sh = NamedSharding(mesh, P(dp, None, None))
+    z_sh = NamedSharding(mesh, P())
+    out_sh = LowRank(NamedSharding(mesh, P(dp, None, None)),
+                     NamedSharding(mesh, P(dp, None)),
+                     NamedSharding(mesh, P(dp, None, None)))
+    return jax.jit(run, in_shardings=(x_sh, z_sh), out_shardings=out_sh)
 
 
 class DecomposeEngine:
@@ -136,12 +186,45 @@ class DecomposeEngine:
             z0 = _padded_z0(h_dim, h_pad)
         else:
             xp, z0 = x, None        # jitted core generates the same z0
-        lr = lz.decompose(xp, rank, iters=iters,
-                          batched_hooks=hooks, z0=z0)
+        if self.config.mesh is not None:
+            lr = self._decompose_sharded(xp, rank, iters, hooks, z0)
+        else:
+            lr = lz.decompose(xp, rank, iters=iters,
+                              batched_hooks=hooks, z0=z0)
         if pad:
             lr = LowRank(lr.u[..., :s_dim, :], lr.core,
                          lr.vt[..., :h_dim])
         return lr
+
+    def _decompose_sharded(self, xp: Array, rank: int,
+                           iters: Optional[int], hooks, z0) -> LowRank:
+        """Run the batched Lanczos pipeline DP-sharded over ``config.mesh``.
+
+        The flat batch axis shards over the DP super-axis when it divides
+        (replication fallback otherwise — the same divisibility guard as
+        every rule in ``distributed.sharding``).  The per-element math is
+        identical to the unsharded path: the explicit ``z0`` equals the
+        default the jitted core generates, every op is batch-parallel, and
+        kernel backends go through ``shard_map`` so each device launches a
+        grid over its LOCAL batch shard.
+        """
+        from ..distributed import sharding as sh
+        mesh = self.config.mesh
+        iters = rank if iters is None else iters
+        batch_shape = xp.shape[:-2]
+        flat = xp.reshape((-1,) + xp.shape[-2:])
+        if z0 is None:
+            # same key/shape as the jitted core's default → same values
+            z0 = _padded_z0(flat.shape[-1], flat.shape[-1])
+        dp_sz = sh.axis_size(mesh, sh.dp_axes(mesh))
+        shard = flat.shape[0] % dp_sz == 0 and flat.shape[0] > 0
+        spec = P(sh.dp_name(mesh)) if shard else P()
+        fn = _sharded_decompose(mesh, spec, rank, iters, hooks,
+                                self.backend.requires_padding)
+        lr = fn(flat, np.asarray(z0, np.float32))
+        return LowRank(lr.u.reshape(batch_shape + lr.u.shape[1:]),
+                       lr.core.reshape(batch_shape + lr.core.shape[1:]),
+                       lr.vt.reshape(batch_shape + lr.vt.shape[1:]))
 
     # -- stage 2: policy-driven multi-track activation decomposition ------
     def decompose_activation(self, x: Array, layer_idx: Optional[int] = None,

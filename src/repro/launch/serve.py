@@ -26,6 +26,7 @@ from ..configs.base import get_arch
 from ..engine import DecomposeEngine, EngineConfig, available_backends
 from ..models import api
 from ..serving import Engine, Request
+from .mesh import parse_mesh
 
 
 def main() -> None:
@@ -60,8 +61,14 @@ def main() -> None:
                     help="decode rounds between admission checks")
     ap.add_argument("--max-admit", type=int, default=0,
                     help="max requests per admission batch (0=free slots)")
+    ap.add_argument("--mesh", default="none",
+                    help="serving mesh: 'none' (default), 'host' (all "
+                         "local devices on the data axis), or 'DxM' (e.g. "
+                         "8x1; force host devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8)")
     args = ap.parse_args()
 
+    mesh = parse_mesh(args.mesh)
     cfg = get_arch(args.arch).reduced()
     fns = api.model_fns(cfg)
     params = fns.init(jax.random.PRNGKey(0), cfg)
@@ -71,7 +78,8 @@ def main() -> None:
         backend=args.backend, expansion=expansion,
         kv_rank=args.decompose_kv_rank, kv_tail=args.dkv_tail,
         kv_exact=args.dkv_exact, sched_bucket=args.sched_bucket,
-        sched_admit_every=args.admit_every, sched_max_admit=args.max_admit))
+        sched_admit_every=args.admit_every, sched_max_admit=args.max_admit,
+        mesh=mesh))
 
     if expansion == "auto" and not args.no_pretune:
         # Serving warmup: resolve the tuned operating points for the
@@ -114,7 +122,10 @@ def main() -> None:
     for r in sorted(done, key=lambda r: r.uid):
         print(f"req {r.uid}: {r.out_tokens}")
     s = eng.stats
-    print(f"engine: {dengine}  admission={args.admission}")
+    mesh_desc = "none" if mesh is None else \
+        "x".join(str(mesh.shape[a]) for a in mesh.axis_names)
+    print(f"engine: {dengine}  admission={args.admission}  "
+          f"mesh={mesh_desc} ({len(jax.devices())} devices)")
     print(f"stats: prefills={s.prefills} batches={s.prefill_batches} "
           f"decode_steps={s.decode_steps} folds={s.tail_folds} "
           f"tokens={s.tokens_out} wall={s.wall_s:.2f}s "

@@ -78,6 +78,15 @@ def cache_batch_axes(cfg: ArchConfig):
     return jax.tree_util.tree_map(axis, a, b)
 
 
+def cache_shardings(cfg: ArchConfig, cache, mesh, seq_shard: bool = True):
+    """NamedSharding tree for any family's decode cache (dense k/v AND the
+    low-rank ``k_u``/``k_vt`` leaves); the serving engine places every
+    cache it allocates through this (with ``seq_shard=False`` — slot-axis
+    DP only).  Rules live in ``distributed.sharding.cache_pspec``."""
+    from ..distributed import sharding as sh
+    return sh.cache_sharding(cache, mesh, cfg, seq_shard=seq_shard)
+
+
 def splice_cache(cfg: ArchConfig, old, new, slot_indices,
                  src_indices=None):
     """Scatter batch rows ``src_indices`` (default ``0…n−1``) of ``new``

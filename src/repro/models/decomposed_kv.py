@@ -27,6 +27,16 @@ requests without touching live slots.
 Approximation surface: the low-rank prefix (rank r of the RoPE'd K/V rows).
 ``prefill_dkv`` at full rank reproduces dense attention exactly
 (tests/test_decomposed_kv.py).
+
+Sharding invariants (mesh-parallel serving, DESIGN.md §9): every op in this
+module is BATCH-LOCAL — the tail write is a vmapped
+``dynamic_update_slice`` along each slot's own row, ``compress_tail``'s
+scatter blocks are built per slot, and ``splice_dkv`` scatters along the
+batch axis only — so a serving engine that DP-shards the slot axis (and
+puts kvw on "model") never induces a cross-device gather on the decode hot
+path.  ``k_u``/``v_u`` time axes stay model-replicated (the refuted §Perf
+C3 experiment: sharded-softmax all-reduces over the [B,kvh,g,T] scores
+cost 2× the saved U reads).
 """
 from __future__ import annotations
 

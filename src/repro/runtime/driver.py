@@ -73,6 +73,7 @@ def train_loop(cfg: ArchConfig, shape: ShapeSpec, *, total_steps: int,
     restarts = 0
     losses: List[float] = []
     watchdog = StragglerWatchdog()
+    saver = None
 
     while True:
         try:
@@ -127,6 +128,14 @@ def train_loop(cfg: ArchConfig, shape: ShapeSpec, *, total_steps: int,
             print_fn(f"[driver] failure at restart #{restarts}: {e}")
             try:
                 prefetch.stop()
+            except Exception:
+                pass
+            # drain the in-flight async save BEFORE the restart re-reads /
+            # re-writes the checkpoint dir — an abandoned writer thread
+            # racing the resumed loop's saves was a real corruption window
+            # (write errors it reports are moot: we're restarting anyway)
+            try:
+                saver.wait()
             except Exception:
                 pass
             if restarts > max_restarts:

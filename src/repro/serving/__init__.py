@@ -25,6 +25,17 @@ global scalar.
 The :class:`Scheduler` dispatches FIFO with prefill-length bucketing (one
 plen bucket per admission batch); ``EngineStats`` tracks per-request
 first-token and inter-token latency.
+
+Mesh-parallel serving: when the DecomposeEngine's config carries a
+``mesh``, every cache (dense k/v AND the low-rank ``k_u``/``k_vt``
+factors) is allocated on ``distributed.sharding.cache_sharding`` — slots
+over the DP super-axis, KV heads / kv width over "model" — and every
+jitted step fn constrains its cache inputs/outputs to the same specs, so
+splice admission, per-slot ``frozen_len`` masking, and ``compress_tail``
+folds all stay device-local along the batch axis (no gather-to-host; the
+tail write is a vmapped per-slot ``dynamic_update_slice``).  Greedy
+outputs are byte-identical to the single-device engine
+(tests/test_serving_conformance.py runs the 8-host-device twin).
 """
 from __future__ import annotations
 
@@ -127,54 +138,96 @@ def _pow2(n: int) -> int:
     return 1 << max(0, n - 1).bit_length()
 
 
+def _constrain(mesh):
+    """Cache-tree ``with_sharding_constraint`` closure for the jitted step
+    fns (identity when ``mesh`` is None — the single-device path traces the
+    exact pre-mesh graph).  ``seq_shard=False``: the batch-1 time-axis
+    ("flash-decoding") rule is for global-batch-1 long-context decode, not
+    serving — a freshly prefilled single-request cache must stay replicated
+    until spliced, not bounce through a sequence reshard per admission."""
+    if mesh is None:
+        return lambda c: c
+    from ..distributed import sharding as sh
+    return lambda c: sh.constrain_cache(c, mesh, seq_shard=False)
+
+
 @functools.lru_cache(maxsize=None)
-def _jitted_steps(fns: api.ModelFns, cfg: ArchConfig, max_len: int):
+def _jitted_steps(fns: api.ModelFns, cfg: ArchConfig, max_len: int,
+                  mesh=None):
     """Jitted (decode, prefill) shared across Engine instances of the same
-    config — XLA executables are reused instead of re-traced per engine."""
-    decode = jax.jit(lambda p, t, c, pos: fns.decode_step(p, cfg, t, c, pos))
-    prefill = jax.jit(lambda p, *a: fns.prefill(p, cfg, *a, max_len))
-    return decode, prefill
+    (config, mesh) — XLA executables are reused instead of re-traced per
+    engine.  Under a mesh both the incoming and outgoing cache trees are
+    sharding-constrained to ``distributed.sharding.cache_pspec``, so GSPMD
+    keeps every per-slot update device-local along the batch axis."""
+    con = _constrain(mesh)
+
+    def decode(p, t, c, pos):
+        lg, nc = fns.decode_step(p, cfg, t, con(c), pos)
+        return lg, con(nc)
+
+    def prefill(p, *a):
+        lg, c = fns.prefill(p, cfg, *a, max_len)
+        return lg, con(c)
+
+    return jax.jit(decode), jax.jit(prefill)
 
 
 @functools.lru_cache(maxsize=None)
-def _jitted_dkv_decode(cfg: ArchConfig):
+def _jitted_dkv_decode(cfg: ArchConfig, mesh=None):
     from ..models import decomposed_kv as DK
-    return jax.jit(lambda p, t, c, pos, fl: DK.decode_step_dkv(
-        p, cfg, t, c, pos, frozen_len=fl))
+    con = _constrain(mesh)
+
+    def step(p, t, c, pos, fl):
+        lg, nc = DK.decode_step_dkv(p, cfg, t, con(c), pos, frozen_len=fl)
+        return lg, con(nc)
+
+    return jax.jit(step)
 
 
 @functools.lru_cache(maxsize=None)
 def _jitted_dkv_prefill(cfg: ArchConfig, backend: str, expansion: int,
                         rank: int, tail: int, iters_extra: int,
-                        exact: bool):
+                        exact: bool, mesh=None):
     """Jitted decomposed-KV prefill (forward + Lanczos/SVD factorization in
     ONE compiled program — ~100× over the eager path on small configs).
     Keyed on the decomposition-relevant engine knobs so equivalently
-    configured serving engines share executables."""
+    configured serving engines share executables.  With a mesh the inner
+    DecomposeEngine runs the factorization DP-sharded over the
+    layers×batch axis and the fresh cache comes out sharding-constrained."""
     from ..models import decomposed_kv as DK
     eng = DecomposeEngine(EngineConfig(
         backend=backend, expansion=expansion, kv_rank=rank, kv_tail=tail,
-        kv_iters_extra=iters_extra))
-    return jax.jit(lambda p, tk: DK.prefill_dkv(
-        p, cfg, tk, rank, tail=tail, exact=exact, engine=eng))
+        kv_iters_extra=iters_extra, mesh=mesh))
+    con = _constrain(mesh)
+
+    def prefill(p, tk):
+        lg, c = DK.prefill_dkv(p, cfg, tk, rank, tail=tail, exact=exact,
+                               engine=eng)
+        return lg, con(c)
+
+    return jax.jit(prefill)
 
 
 @functools.lru_cache(maxsize=None)
-def _jitted_dkv_compress(cfg: ArchConfig, rank: int):
+def _jitted_dkv_compress(cfg: ArchConfig, rank: int, mesh=None):
     from ..models import decomposed_kv as DK
-    return jax.jit(lambda c, fl, fm: DK.compress_tail(
-        c, cfg, rank, frozen_len=fl, fold=fm))
+    con = _constrain(mesh)
+    return jax.jit(lambda c, fl, fm: con(DK.compress_tail(
+        con(c), cfg, rank, frozen_len=fl, fold=fm)))
 
 
 @functools.lru_cache(maxsize=None)
-def _jitted_splices():
+def _jitted_splices(mesh=None):
     """Jitted cache-splice kernels (slot/src index vectors are traced, so
-    one executable serves every admission with the same shape profile)."""
+    one executable serves every admission with the same shape profile).
+    The LIVE side keeps its batch sharding; the fresh side is typically
+    smaller than the slot batch and stays wherever prefill left it."""
     from ..models import decomposed_kv as DK
+    con = _constrain(mesh)
     dkv = jax.jit(lambda live, fresh, idx, src:
-                  DK.splice_dkv(live, fresh, idx, src))
+                  con(DK.splice_dkv(con(live), fresh, idx, src)))
     fam = jax.jit(lambda old, new, idx, src, cfg:
-                  api.splice_cache(cfg, old, new, idx, src),
+                  con(api.splice_cache(cfg, con(old), new, idx, src)),
                   static_argnums=(4,))
     return dkv, fam
 
@@ -220,11 +273,17 @@ class Engine:
         self.dkv_tail = dkv_tail
         self.dkv_exact = self.dengine.config.kv_exact \
             if dkv_exact is None else dkv_exact
+        # Mesh-parallel serving: the engine config's mesh shards every
+        # cache along the batch (slot) axis over the DP super-axis (and KV
+        # heads / kv width over "model") per distributed.sharding's spec
+        # tables; None keeps the single-device path bit-identical.
+        self.mesh = self.dengine.config.mesh
         if self.dkv_rank:
             assert cfg.family == "dense", "decomposed KV: dense family"
             self.cache = None            # built at first prefill
         else:
-            self.cache = self.fns.init_cache(cfg, slots, max_len)
+            self.cache = self._place(self.fns.init_cache(cfg, slots,
+                                                         max_len))
         # per-slot state: pos is the next write position, frozen_len the
         # length of the slot's low-rank prefix (dkv path only)
         self.pos = np.zeros((slots,), np.int32)
@@ -237,17 +296,26 @@ class Engine:
         self.stats = EngineStats()
         self._round = 0
 
-        self._decode, self._prefill = _jitted_steps(self.fns, cfg, max_len)
-        self._splice_dkv, self._splice_fam = _jitted_splices()
+        self._decode, self._prefill = _jitted_steps(self.fns, cfg, max_len,
+                                                    self.mesh)
+        self._splice_dkv, self._splice_fam = _jitted_splices(self.mesh)
         # frozen_len is a traced [B] vector now, so the dkv step jits
         # cleanly (no retrace per tail fold)
         if self.dkv_rank:
             ec = self.dengine.config
-            self._decode_dkv = _jitted_dkv_decode(cfg)
+            self._decode_dkv = _jitted_dkv_decode(cfg, self.mesh)
             self._prefill_dkv = _jitted_dkv_prefill(
                 cfg, ec.backend, ec.expansion, self.dkv_rank, self.dkv_tail,
-                ec.kv_iters_extra, self.dkv_exact)
-            self._compress_dkv = _jitted_dkv_compress(cfg, self.dkv_rank)
+                ec.kv_iters_extra, self.dkv_exact, self.mesh)
+            self._compress_dkv = _jitted_dkv_compress(cfg, self.dkv_rank,
+                                                      self.mesh)
+
+    def _place(self, cache):
+        """device_put a freshly built cache onto its mesh shardings."""
+        if self.mesh is None:
+            return cache
+        return jax.device_put(cache, api.cache_shardings(
+            self.cfg, cache, self.mesh, seq_shard=False))
 
     # -- public API ------------------------------------------------------
     @property
@@ -346,10 +414,9 @@ class Engine:
             from ..models import decomposed_kv as DK
             logits, fresh = self._prefill_dkv(self.params, jnp.asarray(toks))
             if self.cache is None:
-                self.cache = DK.init_cache(self.cfg, self.slots,
-                                           fresh["k_u"].shape[2],
-                                           fresh["k_u"].shape[-1],
-                                           tail=self.dkv_tail)
+                self.cache = self._place(DK.init_cache(
+                    self.cfg, self.slots, fresh["k_u"].shape[2],
+                    fresh["k_u"].shape[-1], tail=self.dkv_tail))
             idx = np.asarray(slots_idx, np.int32)
             src = np.arange(len(slots_idx), dtype=np.int32)
             self.cache = self._splice_dkv(self.cache, fresh, idx, src)

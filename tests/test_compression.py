@@ -1,9 +1,15 @@
-"""PowerSGD gradient compression: exactness limits, error feedback, ratio."""
+"""PowerSGD gradient compression: exactness limits, error feedback, ratio,
+cross-process Q-init determinism."""
+import os
+import subprocess
+import sys
+import textwrap
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.distributed.compression import (PowerSGDConfig,
+from repro.distributed.compression import (PowerSGDConfig, _path_seed,
                                            compress_decompress,
                                            compression_ratio, init_state)
 
@@ -64,3 +70,53 @@ def test_compression_ratio():
     params = {"w": jnp.zeros((4096, 4096))}
     r = compression_ratio(params, cfg)
     assert r > 400       # 4096^2 / (4*(4096+4096)) = 512
+
+
+# ---------------------------------------------------------------------------
+# Cross-process determinism (the PYTHONHASHSEED regression)
+# ---------------------------------------------------------------------------
+
+_Q_SCRIPT = textwrap.dedent("""
+    import jax, jax.numpy as jnp, numpy as np, sys
+    from repro.distributed.compression import PowerSGDConfig, init_state
+    params = {"layers": {"attn": {"wq": {"w": jnp.zeros((64, 1024))},
+                                  "wo": {"w": jnp.zeros((64, 1024))}},
+                         "mlp": [{"w": jnp.zeros((32, 2048))}]}}
+    st = init_state(params, PowerSGDConfig(rank=2, min_elems=0))
+    qs = [np.asarray(l["q"]) for l in jax.tree_util.tree_leaves(
+              st, is_leaf=lambda x: isinstance(x, dict) and "q" in x)]
+    np.save(sys.argv[1], np.concatenate([q.ravel() for q in qs]))
+""")
+
+
+def test_powersgd_q_init_bit_identical_across_processes(tmp_path):
+    """Every DP worker is its own Python process with its own (randomized)
+    PYTHONHASHSEED; PowerSGD's per-leaf Q inits MUST agree bit-for-bit
+    across them or the implicit all-reduces average projections taken in
+    different subspaces.  Two fresh interpreters under explicitly
+    DIFFERENT hash seeds must write identical Q bytes (would fail with the
+    old ``abs(hash(str(path)))`` fold-in)."""
+    outs = []
+    for i, seed in enumerate(("0", "12345")):
+        out = tmp_path / f"q{i}.npy"
+        env = dict(os.environ,
+                   PYTHONHASHSEED=seed,
+                   PYTHONPATH="src" + os.pathsep
+                   + os.environ.get("PYTHONPATH", ""))
+        subprocess.run([sys.executable, "-c", _Q_SCRIPT, str(out)],
+                       check=True, env=env, timeout=300,
+                       cwd=os.path.dirname(os.path.dirname(__file__)))
+        outs.append(np.load(out))
+    assert outs[0].shape[0] > 0
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
+def test_path_seed_is_stable_digest():
+    """The fold-in seed is a pure function of the path string (crc32), not
+    of Python's per-process string hashing."""
+    path = jax.tree_util.tree_flatten_with_path(
+        {"a": {"b": jnp.zeros((2, 2))}})[0][0][0]
+    s = _path_seed(path)
+    assert s == _path_seed(path)
+    import zlib
+    assert s == zlib.crc32(str(path).encode("utf-8")) % (2 ** 31)

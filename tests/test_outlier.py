@@ -62,6 +62,35 @@ def test_threshold_table_roundtrip(tmp_path):
     assert tt2.get(99) == tt.default
 
 
+def test_threshold_table_save_is_atomic(tmp_path):
+    """Save goes through tmp + os.replace: after overwriting an existing
+    table no temp droppings remain and the payload is the new table."""
+    import os
+    path = str(tmp_path / "t.json")
+    tt = ThresholdTable()
+    tt.set(0, 1.5)
+    tt.save(path)
+    tt.set(0, 7.5)
+    tt.save(path)                      # overwrite in place
+    assert ThresholdTable.load(path).get(0) == 7.5
+    assert os.listdir(tmp_path) == ["t.json"]   # no .tmp litter
+
+
+def test_threshold_table_load_tolerates_corruption(tmp_path):
+    """A truncated/garbage table degrades to defaults with a warning — a
+    serving run must not crash on a file a pre-atomic writer mangled."""
+    import pytest
+    path = str(tmp_path / "t.json")
+    with open(path, "w") as f:
+        f.write('{"default": 6.0, "thresho')      # crash mid-write
+    with pytest.warns(RuntimeWarning, match="corrupt"):
+        tt = ThresholdTable.load(path)
+    assert tt.thresholds == {} and tt.default == 6.0
+    with pytest.warns(RuntimeWarning):
+        tt2 = ThresholdTable.load(str(tmp_path / "missing.json"))
+    assert tt2.get(5) == tt2.default
+
+
 def test_measured_extraction_energy():
     a = spiky_matrix(jax.random.PRNGKey(3), scale=50.0)
     frac = measured_extraction_frac(a, 5.0, 3)

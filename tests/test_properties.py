@@ -193,3 +193,83 @@ def test_property_cost_model_u_shaped_in_f(b, s, h, dtype, kernel, dev):
     for j in range(i, len(ts) - 1):
         assert ts[j] <= ts[j + 1] * (1 + 1e-9), \
             (grid, ts, "not non-decreasing right of argmin")
+
+
+# ---------------------------------------------------------------------------
+# Sharding rule invariants (8-device host-serving mesh)
+# ---------------------------------------------------------------------------
+
+from jax.sharding import AbstractMesh, PartitionSpec as ShP
+
+from repro.distributed import sharding as _sh
+
+_SMESHES = [AbstractMesh((("data", 8), ("model", 1))),
+            AbstractMesh((("data", 2), ("model", 4))),
+            AbstractMesh((("pod", 2), ("data", 2), ("model", 2)))]
+
+
+def _axis_sz(mesh, axis):
+    return _sh.axis_size(mesh, axis)
+
+
+@settings(max_examples=40, deadline=None)
+@given(mesh_i=st.integers(0, len(_SMESHES) - 1),
+       name=st.sampled_from(["k", "v", "k_u", "v_u", "k_vt", "v_vt",
+                             "conv", "ssm"]),
+       dims=st.lists(st.integers(1, 24), min_size=3, max_size=5))
+def test_property_cache_spec_dims_always_divide(mesh_i, name, dims):
+    """Every axis cache_pspec shards divides its mesh axis exactly — the
+    divisibility guard holds for EVERY leaf family and ANY shape, so a
+    mesh-serving engine can never be handed an unshardable cache."""
+    mesh = _SMESHES[mesh_i]
+    nd_min = {"k": 4, "v": 4, "ssm": 4}.get(name, 3)
+    shape = tuple(dims[:max(nd_min, len(dims))])
+    if len(shape) < nd_min:
+        shape = shape + (8,) * (nd_min - len(shape))
+    spec = _sh.cache_pspec(name, shape, mesh)
+    assert len(spec) == len(shape)
+    for dim, axis in zip(shape, spec):
+        if axis is not None:
+            assert dim % _axis_sz(mesh, axis) == 0, (name, shape, spec)
+
+
+@settings(max_examples=40, deadline=None)
+@given(mesh_i=st.integers(0, len(_SMESHES) - 1),
+       b=st.integers(1, 32), t=st.integers(1, 64), r=st.integers(1, 16))
+def test_property_dkv_u_time_axis_model_replicated(mesh_i, b, t, r):
+    """k_u/v_u NEVER shard over "model" (the refuted §Perf C3 layout), and
+    batch-1 caches shard time over "data" exactly when it divides."""
+    mesh = _SMESHES[mesh_i]
+    spec = _sh.cache_pspec("k_u", (4, b, t, r), mesh)
+    assert "model" not in jax.tree_util.tree_leaves(list(spec))
+    if b == 1:
+        expect = "data" if t % mesh.shape["data"] == 0 else None
+        assert spec[2] == expect
+    dp_sz = _axis_sz(mesh, _sh.dp_axes(mesh))
+    if b > 1 and b % dp_sz == 0:
+        assert spec[1] == _sh.dp_name(mesh)
+
+
+@settings(max_examples=40, deadline=None)
+@given(mesh_i=st.integers(0, len(_SMESHES) - 1),
+       dims=st.lists(st.integers(1, 64), min_size=1, max_size=4),
+       presharded=st.booleans())
+def test_property_zero1_first_divisible_dim(mesh_i, dims, presharded):
+    """_zero1 adds the DP axis to exactly the FIRST unsharded dim that
+    divides the DP size (and is > 1); all other dims keep their spec."""
+    mesh = _SMESHES[mesh_i]
+    shape = tuple(dims)
+    base = [None] * len(shape)
+    if presharded and len(shape) and shape[-1] % mesh.shape["model"] == 0:
+        base[-1] = "model"
+    spec = _sh._zero1(ShP(*base), shape, mesh)
+    dp = _sh.dp_axes(mesh)
+    dp_sz = _axis_sz(mesh, dp)
+    dp_entry = _sh.dp_name(mesh)
+    expect_i = next((i for i, (d, s) in enumerate(zip(shape, base))
+                     if s is None and d % dp_sz == 0 and d > 1), None)
+    for i, (s0, s1) in enumerate(zip(base, spec)):
+        if i == expect_i:
+            assert s1 == dp_entry
+        else:
+            assert s1 == s0, (shape, base, spec)

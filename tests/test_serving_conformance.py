@@ -11,7 +11,20 @@ Also here: splice-admission conformance for a non-dense family (MoE) —
 admitting while another slot is live must not perturb the live sequence's
 tokens — and the §2.3 parity of ``decompose_kv(exact=True)`` vs Lanczos
 at near-full rank.
+
+Mesh-parallel conformance: serving on an 8-host-device (8, 1) mesh —
+caches DP-sharded over the slot axis, factorization DP-sharded over
+layers×batch — must produce BYTE-IDENTICAL greedy tokens to the 1-device
+engine, across tail-fold boundaries and staggered admissions.  The
+8-device twin runs in a subprocess (the device count locks at jax init;
+tier-1 must keep seeing 1 device).
 """
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -106,6 +119,126 @@ def test_moe_splice_admission_token_level():
                        slots=2)
     assert st.prefill_batches == 2       # admitted while slot 0 was live
     assert mixed[0] == solo[0], "live MoE sequence corrupted by admission"
+
+
+# ---------------------------------------------------------------------------
+# Mesh-parallel serving conformance (tentpole)
+# ---------------------------------------------------------------------------
+
+DKV_RANK, DKV_TAIL, MESH_SLOTS, MESH_NEW = 8, 4, 8, 12
+MESH_PROMPT_LENS = (12, 7, 15)
+
+
+def _serve_dkv_staggered(cfg, params, prompts, *, mesh, slots=MESH_SLOTS):
+    """Staggered arrivals (admissions land mid-decode) on the dkv engine,
+    rank well below full so tail folds are REAL retruncations."""
+    from repro.engine import DecomposeEngine, EngineConfig
+    de = DecomposeEngine(EngineConfig(kv_rank=DKV_RANK, kv_tail=DKV_TAIL,
+                                      mesh=mesh))
+    eng = Engine(cfg, params, slots=slots, max_len=MAX_LEN,
+                 decompose_kv_rank=DKV_RANK, dkv_tail=DKV_TAIL,
+                 decompose_engine=de)
+    done = []
+    eng.submit(Request(uid=0, prompt=prompts[0], max_new_tokens=MESH_NEW))
+    arrivals = {3 * i: i for i in range(1, len(prompts))}
+    for step in range(200):
+        if step in arrivals:
+            i = arrivals[step]
+            eng.submit(Request(uid=i, prompt=prompts[i],
+                               max_new_tokens=MESH_NEW))
+        done.extend(eng.step())
+        if len(done) == len(prompts) and not any(eng.live):
+            break
+    assert eng.stats.tail_folds > 0          # fold boundaries were crossed
+    assert eng.stats.prefill_batches >= 2    # admissions landed while live
+    return {r.uid: r.out_tokens for r in done}, eng
+
+
+_SHARDED_SCRIPT = textwrap.dedent("""
+    import os, sys, json
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, numpy as np
+    sys.path.insert(0, os.path.dirname(os.path.abspath(sys.argv[2])))
+    from test_serving_conformance import (MESH_PROMPT_LENS,
+                                          _serve_dkv_staggered)
+    from repro.configs import all_archs
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import model_fns
+
+    assert len(jax.devices()) == 8
+    cfg = all_archs()["deepseek-7b"].reduced()
+    params = model_fns(cfg).init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(0, cfg.vocab, n, dtype=np.int32)
+               for n in MESH_PROMPT_LENS]
+    toks, eng = _serve_dkv_staggered(cfg, params, prompts,
+                                     mesh=make_host_mesh(8, 1))
+    ku = eng.cache["k_u"]
+    json.dump({"tokens": {str(u): t for u, t in toks.items()},
+               "ku_nshards": len(ku.addressable_shards),
+               "ku_spec": str(ku.sharding.spec)},
+              open(sys.argv[1], "w"))
+""")
+
+
+def test_sharded_serving_byte_identical_to_1_device(dense_model, tmp_path):
+    """THE mesh-serving conformance gate: greedy tokens from the 8-host-
+    device DP-sharded engine (subprocess — device count locks at jax init)
+    are byte-identical to this process's 1-device engine on the same
+    staggered schedule, and the live cache really was 8-way sharded."""
+    cfg, params = dense_model
+    prompts = _prompts(cfg, lens=MESH_PROMPT_LENS)
+    local, _ = _serve_dkv_staggered(cfg, params, prompts, mesh=None)
+
+    out = tmp_path / "sharded.json"
+    env = dict(os.environ,
+               PYTHONPATH="src" + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+    env.pop("XLA_FLAGS", None)           # the script forces its own 8
+    subprocess.run(
+        [sys.executable, "-c", _SHARDED_SCRIPT, str(out),
+         os.path.abspath(__file__)],
+        check=True, env=env, timeout=900,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    got = json.load(open(out))
+    assert got["ku_nshards"] == 8        # slot axis genuinely 8-way DP
+    assert "data" in got["ku_spec"]
+    assert {int(k): v for k, v in got["tokens"].items()} == local, \
+        f"sharded tokens diverged: {got['tokens']} vs {local}"
+
+
+@pytest.mark.skipif(len(jax.devices()) < 8,
+                    reason="needs 8 devices (CI distributed job forces "
+                           "XLA_FLAGS=--xla_force_host_platform_device_"
+                           "count=8)")
+def test_sharded_serving_inprocess_8dev(dense_model):
+    """In-process twin of the subprocess gate for the CI distributed job:
+    same schedule, sharded vs unsharded engines in ONE process, plus the
+    batched-admission case (all 8 slots admitted at once ⇒ the Lanczos
+    factorization batch itself DP-shards)."""
+    from repro.launch.mesh import make_host_mesh
+    cfg, params = dense_model
+    mesh = make_host_mesh(8, 1)
+    prompts = _prompts(cfg, lens=MESH_PROMPT_LENS)
+    a, _ = _serve_dkv_staggered(cfg, params, prompts, mesh=None)
+    b, eng = _serve_dkv_staggered(cfg, params, prompts, mesh=mesh)
+    assert a == b
+    assert len(eng.cache["k_u"].addressable_shards) == 8
+    # batched admission: one prefill of 8 × 12-token prompts
+    many = _prompts(cfg, lens=(12,) * MESH_SLOTS, seed=1)
+
+    def gang_all(mesh):
+        from repro.engine import DecomposeEngine, EngineConfig
+        de = DecomposeEngine(EngineConfig(kv_rank=DKV_RANK, kv_tail=DKV_TAIL,
+                                          mesh=mesh))
+        eng = Engine(cfg, params, slots=MESH_SLOTS, max_len=MAX_LEN,
+                     decompose_kv_rank=DKV_RANK, dkv_tail=DKV_TAIL,
+                     decompose_engine=de)
+        for i, p in enumerate(many):
+            eng.submit(Request(uid=i, prompt=p, max_new_tokens=MESH_NEW))
+        return {r.uid: r.out_tokens for r in eng.run()}
+
+    assert gang_all(None) == gang_all(mesh)
 
 
 def test_exact_svd_vs_lanczos_near_full_rank():
