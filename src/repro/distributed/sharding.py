@@ -183,7 +183,13 @@ def cache_pspec(path_str: str, shape: Tuple[int, ...], mesh: Mesh,
              all-reduces of the [B,kvh,g,T] scores cost 2× the saved reads),
     * k_vt/v_vt: [..., B, r, kvw] — B→DP, kvw→"model",
     * conv:  [..., B, W, ch]      — B→DP, ch→"model",
-    * ssm:   [..., B, nh, hd, ds] — B→DP, nh→"model".
+    * ssm:   [..., B, nh, hd, ds] — B→DP, nh→"model",
+    * k_u_pages/v_u_pages: [..., P, page, r] — REPLICATED: pages are
+             shared across slots (prefix reuse), so the page axis must
+             not follow the DP slot sharding — any slot on any device may
+             gather any page,
+    * k_pages/v_pages: [..., TP, page, kvh, hd] — page axis replicated
+             (same reason), kvh→"model" (else hd→"model") like k/v.
 
     ``seq_shard=False`` disables the B==1 time-axis ("flash-decoding")
     branch: it belongs to global-batch-1 long-context DECODE caches, not
@@ -230,6 +236,14 @@ def cache_pspec(path_str: str, shape: Tuple[int, ...], mesh: Mesh,
             spec[b_dim] = dpn
         if _fits(shape[w_dim], mesh, "model"):
             spec[w_dim] = "model"
+    elif leaf_name in ("k_u_pages", "v_u_pages"):   # [.., P, page, r]
+        pass                     # pool pages replicated (shared via refs)
+    elif leaf_name in ("k_pages", "v_pages"):   # [.., TP, page, kvh, hd]
+        kvh_dim, hd_dim = nd - 2, nd - 1
+        if _fits(shape[kvh_dim], mesh, "model") and shape[kvh_dim] > 1:
+            spec[kvh_dim] = "model"
+        elif _fits(shape[hd_dim], mesh, "model"):
+            spec[hd_dim] = "model"
     elif leaf_name == "conv":
         b_dim, ch_dim = nd - 3, nd - 1
         if shape[b_dim] % dp_sz == 0 and shape[b_dim] > 1:

@@ -43,6 +43,12 @@ class EngineConfig:
                         serving knobs (rank 0 disables); ``kv_exact``
                         switches prefill factorization to direct SVD
                         (near-full-rank regime, §2.3).
+    * ``kv_page`` / ``kv_pool_pages`` / ``kv_prefix_cache`` — paged-cache
+                        geometry (``serving.Engine(paged=True)``):
+                        rows per page, total pool pages (0 = sized from
+                        slots × max_len with fold headroom), and the
+                        prefix-cache entry capacity (0 = no prefix
+                        reuse).
     * ``sched_*``     — serving-scheduler knobs: prefill lengths round up
                         to multiples of ``sched_bucket`` (bounds the set of
                         prefill shapes, hence re-jits), admission is
@@ -68,6 +74,9 @@ class EngineConfig:
     kv_tail: int = 128
     kv_iters_extra: int = 8
     kv_exact: bool = False
+    kv_page: int = 16                   # rows per page (paged serving)
+    kv_pool_pages: int = 0              # page-pool size (0 = auto-sized)
+    kv_prefix_cache: int = 0            # prefix-cache entries (0 = off)
     sched_bucket: int = 16
     sched_admit_every: int = 1
     sched_max_admit: int = 0

@@ -140,6 +140,106 @@ def dkv_attention_stats(inner: jax.Array, k_u: jax.Array, v_u: jax.Array,
     return a, m, l
 
 
+def _dkv_paged_kernel(ids_ref, inner_ref, ku_ref, vu_ref, a_out, m_out,
+                      l_out, m_s, l_s, a_s, *, n: int, page: int,
+                      t_valid: int):
+    """grid = (n,) PAGES for ONE (batch, kv-head) slice.
+
+    The block index maps read the prefetched page-id vector, so each grid
+    step DMAs page ``ids[j]`` straight out of the U pools — the gather
+    happens in the BlockSpec, no [T, r] contiguous stream is ever
+    materialized.  Page j covers logical rows ``j·page … (j+1)·page``;
+    rows at or beyond ``t_valid`` (block-table padding, partially filled
+    last page) are masked out of the running softmax exactly as in
+    :func:`_dkv_kernel`.
+    """
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, -1e30)
+        l_s[...] = jnp.zeros_like(l_s)
+        a_s[...] = jnp.zeros_like(a_s)
+
+    inner = inner_ref[...].astype(jnp.float32)          # [g, r]
+    ku = ku_ref[0].astype(jnp.float32)                  # [page, r]
+    s_blk = jnp.dot(inner, ku.T,
+                    preferred_element_type=jnp.float32)  # [g, page]
+    rows = j * page + jax.lax.broadcasted_iota(jnp.int32, s_blk.shape, 1)
+    valid = rows < t_valid
+    s_blk = jnp.where(valid, s_blk, -1e30)
+
+    m_old = m_s[...]
+    m_new = jnp.maximum(m_old, jnp.max(s_blk, axis=1, keepdims=True))
+    c = jnp.exp(m_old - m_new)
+    p = jnp.where(valid, jnp.exp(s_blk - m_new), 0.0)
+    vu = vu_ref[0].astype(jnp.float32)                  # [page, r]
+    a_s[...] = a_s[...] * c + jnp.dot(p, vu,
+                                      preferred_element_type=jnp.float32)
+    l_s[...] = l_s[...] * c + jnp.sum(p, axis=1, keepdims=True)
+    m_s[...] = m_new
+
+    @pl.when(j == n - 1)
+    def _fin():
+        a_out[...] = a_s[...]
+        m_out[...] = m_s[...]
+        l_out[...] = l_s[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "t_valid"))
+def dkv_attention_stats_paged(inner: jax.Array, k_u_pages: jax.Array,
+                              v_u_pages: jax.Array, page_ids: jax.Array,
+                              *, t_valid: int,
+                              interpret: Optional[bool] = None):
+    """Rank-space flash stats THROUGH a page table (paged serving).
+
+    inner [g, r]; k_u_pages / v_u_pages [P, page, r] pools; page_ids [n]
+    int32 (a slot's block-table row) → (a [g, r], m [g, 1], l [g, 1]).
+
+    Bit-compatible with :func:`dkv_attention_stats` at ``expansion=n`` on
+    the gathered rows: the grid tiles the logical sequence page-by-page
+    with identical online-softmax block math, but the U blocks are DMA'd
+    by PREFETCHED page id (``pltpu.PrefetchScalarGridSpec``) instead of
+    streamed contiguously — vLLM-style paged attention in rank space.
+    """
+    interpret = resolve_interpret(interpret)
+    g, r = inner.shape
+    n = page_ids.shape[0]
+    page = k_u_pages.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((g, r), lambda j, ids: (0, 0)),
+            pl.BlockSpec((1, page, r), lambda j, ids: (ids[j], 0, 0)),
+            pl.BlockSpec((1, page, r), lambda j, ids: (ids[j], 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((g, r), lambda j, ids: (0, 0)),
+            pl.BlockSpec((g, 1), lambda j, ids: (0, 0)),
+            pl.BlockSpec((g, 1), lambda j, ids: (0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),      # running max
+            pltpu.VMEM((g, 1), jnp.float32),      # running denom
+            pltpu.VMEM((g, r), jnp.float32),      # rank-space accumulator
+        ],
+    )
+    a, m, l = pl.pallas_call(
+        functools.partial(_dkv_paged_kernel, n=n, page=page,
+                          t_valid=t_valid),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((g, r), jnp.float32),
+            jax.ShapeDtypeStruct((g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((g, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(page_ids.astype(jnp.int32), inner, k_u_pages, v_u_pages)
+    return a, m, l
+
+
 def merge_with_tail(a, m, l, v_vt, tail_scores, tail_v):
     """Flash-combine the prefix rank-space stats with exact dense-tail
     attention.  tail_scores [g, tl] (already masked), tail_v [tl, d].

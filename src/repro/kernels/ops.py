@@ -172,6 +172,19 @@ def dkv_attention_stats(inner, k_u, v_u, *, expansion: int = 8,
                                     interpret=interp, t_valid=t)
 
 
+def dkv_attention_stats_paged(inner, k_u_pages, v_u_pages, page_ids, *,
+                              t_valid: int,
+                              interpret: Optional[bool] = None):
+    """Paged twin of :func:`dkv_attention_stats`: U blocks are DMA'd by
+    prefetched page id out of the pools (no contiguous stream), one grid
+    step per block-table entry; bit-compatible with the contiguous kernel
+    at ``expansion == len(page_ids)`` on the gathered rows."""
+    interp = INTERPRET if interpret is None else interpret
+    return _dkv.dkv_attention_stats_paged(inner, k_u_pages, v_u_pages,
+                                          page_ids, t_valid=t_valid,
+                                          interpret=interp)
+
+
 merge_with_tail = _dkv.merge_with_tail
 
 

@@ -43,6 +43,21 @@ def main() -> None:
                     help="dense recent-token tail length")
     ap.add_argument("--dkv-exact", action="store_true",
                     help="direct-SVD KV factorization (near-full rank)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged decomposed-KV cache (block tables over "
+                         "fixed-size page pools instead of a static slab)")
+    ap.add_argument("--pages", type=int, default=0,
+                    help="page-pool size in pages (0 = auto-sized from "
+                         "slots x max-len with fold headroom)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="rows per page (prefix U rows / dense tail rows)")
+    ap.add_argument("--prefix-cache", type=int, default=0,
+                    help="shared-prefix cache capacity in entries (0 = "
+                         "off; hits admit with tail-only work, skipping "
+                         "the prefix forward pass AND its Lanczos)")
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="stop token id: requests finish (and free their "
+                         "slot) the moment they emit it")
     ap.add_argument("--backend", default="reference",
                     choices=available_backends() + ["auto"],
                     help="decomposition backend for the engine "
@@ -77,7 +92,9 @@ def main() -> None:
     dengine = DecomposeEngine(EngineConfig(
         backend=args.backend, expansion=expansion,
         kv_rank=args.decompose_kv_rank, kv_tail=args.dkv_tail,
-        kv_exact=args.dkv_exact, sched_bucket=args.sched_bucket,
+        kv_exact=args.dkv_exact, kv_page=args.page_size,
+        kv_pool_pages=args.pages, kv_prefix_cache=args.prefix_cache,
+        sched_bucket=args.sched_bucket,
         sched_admit_every=args.admit_every, sched_max_admit=args.max_admit,
         mesh=mesh))
 
@@ -110,7 +127,8 @@ def main() -> None:
     eng = Engine(cfg, params, slots=args.slots, max_len=args.max_len,
                  decompose_kv_rank=args.decompose_kv_rank,
                  dkv_tail=args.dkv_tail, decompose_engine=dengine,
-                 admission=args.admission)
+                 admission=args.admission, paged=args.paged,
+                 eos_id=args.eos_id)
 
     rng = np.random.RandomState(0)
     for i in range(args.requests):
@@ -128,9 +146,20 @@ def main() -> None:
           f"mesh={mesh_desc} ({len(jax.devices())} devices)")
     print(f"stats: prefills={s.prefills} batches={s.prefill_batches} "
           f"decode_steps={s.decode_steps} folds={s.tail_folds} "
-          f"tokens={s.tokens_out} wall={s.wall_s:.2f}s "
+          f"tokens={s.tokens_out} stopped_eos={s.stopped_eos} "
+          f"stopped_budget={s.stopped_budget} wall={s.wall_s:.2f}s "
           f"tok/s={s.tokens_out / max(s.wall_s, 1e-9):.1f} "
           f"ttft={s.mean_ttft_s * 1e3:.1f}ms itl={s.mean_itl_s * 1e3:.1f}ms")
+    if eng.pager is not None:
+        pg = eng.pager
+        line = (f"paged: page={pg.page} pool={pg.num_pages}p "
+                f"free={pg.alloc.free_pages}p "
+                f"pool_bytes={pg.pool_bytes}")
+        if pg.prefix is not None:
+            line += (f" prefix_hits={s.prefix_hits} "
+                     f"prefix_misses={s.prefix_misses} "
+                     f"entries={len(pg.prefix)}")
+        print(line)
 
 
 if __name__ == "__main__":

@@ -28,6 +28,13 @@ Approximation surface: the low-rank prefix (rank r of the RoPE'd K/V rows).
 ``prefill_dkv`` at full rank reproduces dense attention exactly
 (tests/test_decomposed_kv.py).
 
+A PAGED twin of the slab layout lives at the bottom of this module
+(``init_paged_cache`` / ``gather_pages`` / ``decode_step_dkv_paged`` /
+``compress_tail_paged`` / ``prefill_suffix_dkv``): prefix U rows and dense
+tail rows sit in fixed-size page pools addressed by per-slot block tables,
+enabling refcounted SHARING of frozen prefix pages across requests
+(serving.paged) while replaying the slab arithmetic bit-for-bit.
+
 Sharding invariants (mesh-parallel serving, DESIGN.md §9): every op in this
 module is BATCH-LOCAL — the tail write is a vmapped
 ``dynamic_update_slice`` along each slot's own row, ``compress_tail``'s
@@ -202,8 +209,16 @@ def decode_step_dkv(p: Params, cfg, token: Array, cache: Params,
     return T.logits_head(p, x, cfg)[:, 0], new_cache
 
 
+def fold_rank(rank: int, r_in: int, t_frozen: int, tl: int) -> int:
+    """The rank a fold retruncates to — host-side mirror of the cap
+    inside :func:`compress_tail` (configured rank, bounded by the
+    concatenated factor width and the row count).  The serving engine uses
+    it to track per-slot effective rank without touching device data."""
+    return min(rank, r_in + tl, t_frozen + tl)
+
+
 def compress_tail(cache: Params, cfg, rank: int,
-                  frozen_len=None, fold=None) -> Params:
+                  frozen_len=None, fold=None, new_frozen=None) -> Params:
     """Fold the dense tail into the low-rank prefix (rank-concat +
     retruncate).
 
@@ -217,17 +232,34 @@ def compress_tail(cache: Params, cfg, rank: int,
     prefix, factors, and tail untouched (time axis still grows by ``tl``
     so shapes stay static; the serving engine slices back to
     ``max(frozen_len)``).
+
+    ``new_frozen`` (per-slot mode, int32 [B]: each folding slot's
+    post-fold prefix length, i.e. its ``pos``) zeroes the retruncated U
+    rows at or beyond the new frozen length.  Those rows reconstruct to
+    ~0 anyway (they fold zero tail rows), but the explicit zero enforces
+    the module invariant "prefix rows beyond frozen_len are zero" BITWISE
+    — which is what lets the paged engine store exactly
+    ``ceil(frozen_len/page)`` pages per slot and still replay the slot
+    engine's arithmetic identically.
     """
     from ..core.lowrank import LowRank, retruncate
     nl, b, tl, kvh, hd = cache["tail"]["k"].shape
     kvw = kvh * hd
     r_in = cache["k_u"].shape[-1]
     t_frozen = cache["k_u"].shape[2]
-    # retruncate's output rank caps at both the concatenated factor width
-    # and the row count; non-folding slots keep all r_in columns, so the
-    # common output rank is the max of the two (zero-padded, never sliced)
+    # A fold RETRUNCATES BACK to the configured rank: r_fold caps at
+    # ``rank`` (and at the concatenated factor width / row count, which
+    # bound the content rank).  Uniform mode folds every slot, so the
+    # output width is exactly r_fold — a cache whose factors were inflated
+    # past ``rank`` by heterogeneous splices shrinks back on the next fold
+    # instead of ratcheting (the old ``r_out = max(r_in, r_fold)``
+    # permanently kept the widest rank any splice ever introduced).
+    # Per-slot mode must keep the non-folding slots' r_in columns
+    # bit-identical, so the ARRAY stays max-width there; folded slots'
+    # columns beyond r_fold are zero and the serving engine slices the
+    # rank axis down to the widest live slot (``rank_eff`` bookkeeping).
     r_fold = min(rank, r_in + tl, t_frozen + tl)
-    r_out = max(r_in, r_fold)
+    r_out = r_fold if frozen_len is None else max(r_in, r_fold)
 
     if frozen_len is None:
         offsets = jnp.full((b,), t_frozen, jnp.int32)
@@ -259,6 +291,15 @@ def compress_tail(cache: Params, cfg, rank: int,
             a, [(0, 0)] * ax + [(0, r_out - a.shape[ax])]
             + [(0, 0)] * (a.ndim - ax - 1))
         u_new, vt_new = pad_r(lr.scaled_u(), 3), pad_r(lr.vt, 2)
+        if new_frozen is not None:
+            nf = jnp.asarray(new_frozen, jnp.int32).reshape(b)
+            row_ok = jnp.arange(t_frozen + tl)[None, :] < nf[:, None]
+            u_new = jnp.where(row_ok[None, :, :, None], u_new, 0.0)
+        if frozen_len is None:
+            # uniform mode: every slot folds, so the retruncated factors
+            # ARE the output (width exactly r_fold <= rank — no keep
+            # branch, which could be wider than r_out)
+            return u_new, vt_new
         # non-folding slots keep their (time-padded, rank-padded) factors
         keep_u, keep_vt = pad_r(u_pad, 3), pad_r(vt2, 2)
         fm = fold_m[None, :, None, None]
@@ -315,3 +356,272 @@ def splice_dkv(live: Params, fresh: Params, slot_indices,
         fresh["tail"][k][:, src].astype(live["tail"][k].dtype))
         for k in live["tail"]}
     return out
+
+
+# ---------------------------------------------------------------------------
+# Paged layout (vLLM-style block tables over the decomposed cache)
+# ---------------------------------------------------------------------------
+#
+# Instead of one [slots, max_len, …] slab, the low-rank prefix U rows and
+# the dense tail live in fixed-size PAGE POOLS indexed by per-slot page
+# lists (block tables, host-side):
+#
+#   k_u_pages / v_u_pages  [nl, P,  page, r]          prefix U row pool
+#   k_vt / v_vt            [nl, B,  r,    kvw]        per-slot factors
+#   tail.k_pages / v_pages [nl, TP, page, kvh, hd]    dense tail row pool
+#
+# Page id 0 is a reserved WRITE SINK: block-table padding and the scatter
+# targets of non-folding slots point at it, so one jitted scatter serves
+# every fold without masking.  The sink's content is kept ALL-ZERO by
+# construction (fold scatters mask non-folding rows to zero), because
+# gather_pages' block-table padding reads it as if it were zero rows.  A
+# page holds the same row range for EVERY layer (one block table per
+# slot, not per layer), so the layer scan consumes gathered pages exactly
+# like slab rows.
+#
+# Token-exactness contract: ``gather_pages`` + row/rank slicing to the
+# slot engine's slab geometry reproduces the slab ARRAYS bit-for-bit
+# (rows beyond a slot's frozen_len are zero — see ``new_frozen`` in
+# :func:`compress_tail`), so paged decode/fold arithmetic is the slot
+# engine's arithmetic, and shared prefix pages are safe to alias across
+# slots because folds scatter into FRESH pages (copy-on-write).
+
+
+def init_paged_cache(cfg, batch: int, num_pages: int, page: int, rank: int,
+                     num_tail_pages: int) -> Params:
+    """Page pools + per-slot factor slots for the paged decomposed cache."""
+    kvw = cfg.num_kv_heads * cfg.resolved_head_dim
+    nl, dt = cfg.num_layers, cfg.jax_dtype
+    z = jnp.zeros
+    return {
+        "k_u_pages": z((nl, num_pages, page, rank), dt),
+        "v_u_pages": z((nl, num_pages, page, rank), dt),
+        "k_vt": z((nl, batch, rank, kvw), dt),
+        "v_vt": z((nl, batch, rank, kvw), dt),
+        "tail": {
+            "k_pages": z((nl, num_tail_pages, page, cfg.num_kv_heads,
+                          cfg.resolved_head_dim), dt),
+            "v_pages": z((nl, num_tail_pages, page, cfg.num_kv_heads,
+                          cfg.resolved_head_dim), dt),
+        },
+    }
+
+
+def gather_pages(pool: Array, bt: Array, rows: Optional[int] = None
+                 ) -> Array:
+    """pool [nl, P, page, …], bt int32 [B, n] → rows [nl, B, t, …].
+
+    Concatenates each slot's pages along the time axis; ``rows`` (static)
+    pads with zeros or slices so the result matches a target slab length
+    regardless of the block-table width.
+    """
+    g = pool[:, bt]                                  # [nl, B, n, page, ...]
+    nl, b, n, pg = g.shape[:4]
+    g = g.reshape(nl, b, n * pg, *g.shape[4:])
+    if rows is not None:
+        if rows <= n * pg:
+            g = g[:, :, :rows]
+        else:
+            w = [(0, 0), (0, 0), (0, rows - n * pg)] \
+                + [(0, 0)] * (g.ndim - 3)
+            g = jnp.pad(g, w)
+    return g
+
+
+def scatter_pages(pool: Array, rows: Array, bt: Array) -> Array:
+    """Write rows [nl, B, t, …] back into pool pages ``bt`` [B, n].
+
+    ``t`` is zero-padded or sliced to ``n·page``; duplicate page ids (the
+    id-0 write sink shared by padding and non-folding slots) are allowed —
+    every sink write is zeros, so the sink stays all-zero regardless of
+    scatter order.
+    """
+    nl, b, t = rows.shape[:3]
+    n, page = bt.shape[1], pool.shape[2]
+    want = n * page
+    if t < want:
+        w = [(0, 0), (0, 0), (0, want - t)] + [(0, 0)] * (rows.ndim - 3)
+        rows = jnp.pad(rows, w)
+    elif t > want:
+        rows = rows[:, :, :want]
+    rows = rows.reshape(nl, b, n, page, *rows.shape[3:])
+    return pool.at[:, bt].set(rows.astype(pool.dtype))
+
+
+def write_prefix_pages(pool: Array, u: Array, bt: Array, src: Array
+                       ) -> Array:
+    """Scatter freshly prefilled U factors (batch rows ``src`` of
+    u [nl, nb, s, r_eff]) into pool pages ``bt`` [m, n]; the rank axis is
+    zero-padded to the pool width (zero columns are inert)."""
+    r = pool.shape[-1]
+    u = u[:, src]
+    if u.shape[-1] < r:
+        u = jnp.pad(u, [(0, 0)] * (u.ndim - 1) + [(0, r - u.shape[-1])])
+    return scatter_pages(pool, u, bt)
+
+
+def _gathered_cache(cache: Params, bt_u: Array, bt_t: Array, t_need: int,
+                    r_need: int, tail_len: int) -> Params:
+    """Materialize the slot-engine slab view of a paged cache (sliced to
+    the mirrored slab geometry, so downstream math is bit-identical)."""
+    return {
+        "k_u": gather_pages(cache["k_u_pages"], bt_u, t_need)[..., :r_need],
+        "v_u": gather_pages(cache["v_u_pages"], bt_u, t_need)[..., :r_need],
+        "k_vt": cache["k_vt"][:, :, :r_need],
+        "v_vt": cache["v_vt"][:, :, :r_need],
+        "tail": {
+            "k": gather_pages(cache["tail"]["k_pages"], bt_t, tail_len),
+            "v": gather_pages(cache["tail"]["v_pages"], bt_t, tail_len),
+        },
+    }
+
+
+def decode_step_dkv_paged(p: Params, cfg, token: Array, cache: Params,
+                          pos: Array, frozen_len, bt_u: Array, bt_t: Array,
+                          t_need: int, r_need: int, tail_len: int
+                          ) -> Tuple[Array, Params]:
+    """One-token decode through the page tables: gather each slot's pages
+    into the slab view, run the slot-engine step, scatter the updated tail
+    rows back into the tail pool.  ``t_need``/``r_need``/``tail_len`` are
+    the slot engine's (static) slab dims — the host mirrors them so the
+    gathered arrays equal the slab bit-for-bit."""
+    slab = _gathered_cache(cache, bt_u, bt_t, t_need, r_need, tail_len)
+    logits, upd = decode_step_dkv(p, cfg, token, slab, pos, frozen_len)
+    new = dict(cache)
+    new["tail"] = {
+        "k_pages": scatter_pages(cache["tail"]["k_pages"],
+                                 upd["tail"]["k"], bt_t),
+        "v_pages": scatter_pages(cache["tail"]["v_pages"],
+                                 upd["tail"]["v"], bt_t),
+    }
+    return logits, new
+
+
+def compress_tail_paged(cache: Params, cfg, rank: int, frozen_len, fold,
+                        new_frozen, bt_u: Array, bt_u_new: Array,
+                        bt_t: Array, t_need: int, r_need: int,
+                        tail_len: int) -> Params:
+    """Paged tail fold: gather the slab view, run :func:`compress_tail`
+    (identical arithmetic), then scatter the retruncated prefix rows into
+    FRESH pages ``bt_u_new`` — old pages are never written, so prefix
+    pages shared with other slots or the prefix cache stay intact
+    (copy-on-write).  Non-folding slots' rows in ``bt_u_new`` point at the
+    id-0 sink.  Returns the new pool cache; the caller updates block
+    tables and releases the folded slots' old page refs."""
+    slab = _gathered_cache(cache, bt_u, bt_t, t_need, r_need, tail_len)
+    folded = compress_tail(slab, cfg, rank, frozen_len=frozen_len,
+                           fold=fold, new_frozen=new_frozen)
+    r_pool = cache["k_u_pages"].shape[-1]
+    pad_r = lambda a, ax: a if a.shape[ax] >= r_pool else jnp.pad(
+        a, [(0, 0)] * ax + [(0, r_pool - a.shape[ax])]
+        + [(0, 0)] * (a.ndim - ax - 1))
+    fm = jnp.asarray(fold).reshape(-1)[None, :, None, None]
+    # Only FOLDING slots' rows are scattered (their rows at/beyond the new
+    # frozen length are already zeroed via ``new_frozen``); non-folding
+    # slots' rows — whose bt_u_new entries all point at the id-0 sink —
+    # scatter as ZEROS.  This keeps the sink page all-zero FOREVER, which
+    # gather_pages' block-table padding relies on: a sink read must
+    # return exact zeros, not the residue of a previous fold.
+    u_sc = lambda key: jnp.where(fm, pad_r(folded[key], 3), 0.0)
+    vt_sel = lambda key: jnp.where(
+        fm, pad_r(folded[key], 2).astype(cache[key].dtype),
+        cache[key])
+    return {
+        "k_u_pages": scatter_pages(cache["k_u_pages"], u_sc("k_u"),
+                                   bt_u_new),
+        "v_u_pages": scatter_pages(cache["v_u_pages"], u_sc("v_u"),
+                                   bt_u_new),
+        "k_vt": vt_sel("k_vt"),
+        "v_vt": vt_sel("v_vt"),
+        "tail": {
+            "k_pages": scatter_pages(cache["tail"]["k_pages"],
+                                     folded["tail"]["k"], bt_t),
+            "v_pages": scatter_pages(cache["tail"]["v_pages"],
+                                     folded["tail"]["v"], bt_t),
+        },
+    }
+
+
+def prefill_suffix_dkv(p: Params, cfg, tokens: Array, prefix: Params,
+                       start: Array, slen: Array, tail_len: int
+                       ) -> Tuple[Array, Params]:
+    """Tail-only prefill for a prefix-cache hit (the paper's "decompose
+    once, consume many times" economics applied across REQUESTS).
+
+    ``tokens`` [B, S] is each slot's suffix beyond its matched frozen
+    prefix, RIGHT-padded (rows at or beyond ``slen[b]`` are pad; causal
+    masking keeps real rows from attending them).  ``prefix`` carries the
+    gathered cached factors {k_u/v_u [nl, B, L, r], k_vt/v_vt
+    [nl, B, r, kvw]}; ``start`` [B] (= the matched prefix length, the
+    slot's frozen_len) sets absolute RoPE positions ``start + i``.
+
+    Returns (logits at each slot's LAST real row [B, V], dense tails
+    [nl, B, tail_len, kvh, hd] with rows >= slen zeroed) — exactly the
+    per-slot state a full prefill of prefix+suffix would have produced,
+    without re-running the prefix forward OR its Lanczos factorization.
+    """
+    b, s = tokens.shape
+    nh, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    g = nh // kvh
+    scale = hd ** -0.5
+    start = jnp.asarray(start, jnp.int32)
+    slen = jnp.asarray(slen, jnp.int32)
+    x = p["embed"]["w"][tokens] * jnp.asarray(
+        cfg.d_model ** 0.5 if cfg.tie_embeddings else 1.0, cfg.jax_dtype)
+    positions = start[:, None] + jnp.arange(s)[None, :]
+    row = jnp.arange(s)
+    live_row = row[None, :] < slen[:, None]              # [B, S] real rows
+    causal = row[:, None] >= row[None, :]                # [S, S]
+    t_pre = prefix["k_u"].shape[2]
+    pre_valid = jnp.arange(t_pre)[None, :] < start[:, None]
+
+    def scan_fn(x, inp):
+        lp, ku, kvt, vu, vvt = inp
+        h = T._norm(lp["attn_norm"], x, cfg)
+        q = L._split_heads(L.dense(lp["attn"]["wq"], h), nh)
+        k = L._split_heads(L.dense(lp["attn"]["wk"], h), kvh)
+        v = L._split_heads(L.dense(lp["attn"]["wv"], h), kvh)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        qg = q.reshape(b, s, kvh, g, hd).astype(jnp.float32)
+
+        # prefix scores through the cached factors
+        kvt4 = kvt.astype(jnp.float32).reshape(b, -1, kvh, hd)
+        inner = jnp.einsum("bskgd,brkd->bskgr", qg, kvt4)
+        sc_pre = jnp.einsum("bskgr,btr->bskgt", inner,
+                            ku.astype(jnp.float32)) * scale
+        sc_pre = jnp.where(pre_valid[:, None, None, None, :], sc_pre, -1e30)
+
+        # within-suffix causal scores (exact)
+        kf = k.astype(jnp.float32)
+        sc_suf = jnp.einsum("bskgd,btkd->bskgt", qg, kf) * scale
+        sc_suf = jnp.where(causal[None, :, None, None, :], sc_suf, -1e30)
+
+        pr = jax.nn.softmax(
+            jnp.concatenate([sc_pre, sc_suf], axis=-1), axis=-1)
+        p_pre, p_suf = pr[..., :t_pre], pr[..., t_pre:]
+        tmp = jnp.einsum("bskgt,btr->bskgr", p_pre,
+                         vu.astype(jnp.float32))
+        vvt4 = vvt.astype(jnp.float32).reshape(b, -1, kvh, hd)
+        out = jnp.einsum("bskgr,brkd->bskgd", tmp, vvt4)
+        out = out + jnp.einsum("bskgt,btkd->bskgd", p_suf,
+                               v.astype(jnp.float32))
+        out = out.reshape(b, s, nh * hd)
+        x = x + L.dense(lp["attn"]["wo"], out.astype(x.dtype))
+        x = x + L.mlp(lp["mlp"], T._norm(lp["mlp_norm"], x, cfg),
+                      cfg.activation)
+
+        # suffix K/V become the slot's dense tail; pad rows zeroed so
+        # later folds see exactly what a full prefill would have left
+        zmask = live_row[:, :, None, None]
+        tk = jnp.where(zmask, k, 0).astype(cfg.jax_dtype)
+        tv = jnp.where(zmask, v, 0).astype(cfg.jax_dtype)
+        pad = [(0, 0), (0, tail_len - s), (0, 0), (0, 0)]
+        return x, {"k": jnp.pad(tk, pad), "v": jnp.pad(tv, pad)}
+
+    x, tails = L.xscan(scan_fn, x,
+                       (p["layers"], prefix["k_u"], prefix["k_vt"],
+                        prefix["v_u"], prefix["v_vt"]))
+    x_last = jnp.take_along_axis(
+        x, jnp.maximum(slen - 1, 0)[:, None, None], axis=1)
+    return T.logits_head(p, x_last, cfg)[:, 0], tails

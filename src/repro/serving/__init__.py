@@ -23,8 +23,25 @@ re-synchronize fold cadence.  ``frozen_len`` is a per-slot vector, not a
 global scalar.
 
 The :class:`Scheduler` dispatches FIFO with prefill-length bucketing (one
-plen bucket per admission batch); ``EngineStats`` tracks per-request
-first-token and inter-token latency.
+plen bucket per admission LAUNCH; ``_admit`` drains further buckets into
+the remaining free slots, so mixed-length queues no longer idle slots
+behind the head bucket); ``EngineStats`` tracks per-request first-token
+and inter-token latency, and wall time accrues per ``step()``.  Requests
+stop the moment they emit ``eos_id`` (or any of ``stop_tokens``) — the
+slot frees immediately — with stopped-vs-budget finishes counted
+separately.
+
+``paged=True`` (decomposed-KV only) swaps the ``[slots, max_len, …]``
+slab for the paged layout of ``serving.paged``: prefix U rows and dense
+tail rows live in fixed-size page pools behind per-slot block tables, a
+refcounted :class:`~repro.serving.paged.PageAllocator` recycles pages
+across requests, and an optional hash-based prefix cache
+(``EngineConfig.kv_prefix_cache``) admits a request whose padded prompt
+extends a cached frozen prefix with TAIL-ONLY work — shared pages are
+spliced by refcount, skipping both the prefix forward pass and its
+Lanczos factorization.  With the prefix cache off, paged decode/fold
+replays the slab engine's arithmetic bit-for-bit
+(tests/test_serving_conformance.py).
 
 Mesh-parallel serving: when the DecomposeEngine's config carries a
 ``mesh``, every cache (dense k/v AND the low-rank ``k_u``/``k_vt``
@@ -42,7 +59,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Callable, List, Optional
+from typing import Callable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -60,6 +77,8 @@ class Request:
     uid: int
     prompt: np.ndarray               # [S] int32
     max_new_tokens: int = 16
+    eos_id: Optional[int] = None     # stop token (None = engine default)
+    stop_tokens: Tuple[int, ...] = ()   # extra stop tokens
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     # -- latency accounting (monotonic perf_counter stamps, 0.0 = not yet)
@@ -76,7 +95,13 @@ class EngineStats:
     decode_steps: int = 0
     tokens_out: int = 0
     tail_folds: int = 0              # per-slot compress_tail events
-    wall_s: float = 0.0
+    stopped_eos: int = 0             # finished on a stop token
+    stopped_budget: int = 0          # finished on max_new_tokens / max_len
+    prefix_hits: int = 0             # admissions served from the prefix cache
+    prefix_misses: int = 0           # lookups that fell through to prefill
+    wall_s: float = 0.0              # accrued PER step() — benchmarks and
+    #                                  the serve CLI driving step() directly
+    #                                  see real tok/s, not inf
     ttft_s: List[float] = dataclasses.field(default_factory=list)
     itl_s: List[float] = dataclasses.field(default_factory=list)
 
@@ -212,8 +237,8 @@ def _jitted_dkv_prefill(cfg: ArchConfig, backend: str, expansion: int,
 def _jitted_dkv_compress(cfg: ArchConfig, rank: int, mesh=None):
     from ..models import decomposed_kv as DK
     con = _constrain(mesh)
-    return jax.jit(lambda c, fl, fm: con(DK.compress_tail(
-        con(c), cfg, rank, frozen_len=fl, fold=fm)))
+    return jax.jit(lambda c, fl, fm, nf: con(DK.compress_tail(
+        con(c), cfg, rank, frozen_len=fl, fold=fm, new_frozen=nf)))
 
 
 @functools.lru_cache(maxsize=None)
@@ -245,11 +270,14 @@ class Engine:
                  dkv_tail: Optional[int] = None,
                  decompose_engine: Optional[DecomposeEngine] = None,
                  admission: str = "per_slot",
-                 dkv_exact: Optional[bool] = None):
+                 dkv_exact: Optional[bool] = None,
+                 eos_id: Optional[int] = None,
+                 paged: bool = False):
         assert admission in ("per_slot", "gang"), admission
         self.cfg, self.params = cfg, params
         self.slots, self.max_len = slots, max_len
         self.admission = admission
+        self.eos_id = eos_id             # default stop token for requests
         self.fns = api.model_fns(cfg)
         self.sampler = sampler or (lambda lg, k: jnp.argmax(lg, -1)
                                    .astype(jnp.int32))
@@ -285,10 +313,28 @@ class Engine:
             self.cache = self._place(self.fns.init_cache(cfg, slots,
                                                          max_len))
         # per-slot state: pos is the next write position, frozen_len the
-        # length of the slot's low-rank prefix (dkv path only)
+        # length of the slot's low-rank prefix, rank_eff its effective
+        # factor rank (dkv path only — lets the engine slice the rank
+        # axis back down when wide-rank occupants leave or fold)
         self.pos = np.zeros((slots,), np.int32)
         self.frozen_len = np.zeros((slots,), np.int32)
+        self.rank_eff = np.zeros((slots,), np.int32)
         self.live: List[Optional[Request]] = [None] * slots
+        # paged mode: block-table cache + page allocator + prefix cache
+        self.pager = None
+        if paged:
+            assert self.dkv_rank, "paged serving runs on the decomposed " \
+                "KV cache (set decompose_kv_rank / kv_rank)"
+            assert admission == "per_slot", "paged serving is per-slot"
+            from .paged import PagedDKV
+            ecfg = self.dengine.config
+            self.pager = PagedDKV(
+                cfg, slots=slots, max_len=max_len, rank=self.dkv_rank,
+                tail=self.dkv_tail, page=ecfg.kv_page,
+                pool_pages=ecfg.kv_pool_pages,
+                prefix_capacity=ecfg.kv_prefix_cache, mesh=self.mesh)
+            if self.mesh is not None:
+                self.pager.cache = self._place(self.pager.cache)
         ecfg = self.dengine.config
         self.sched = Scheduler(bucket=ecfg.sched_bucket,
                                max_admit=ecfg.sched_max_admit)
@@ -334,16 +380,22 @@ class Engine:
     def step(self) -> List[Request]:
         """One scheduling iteration: admit if due (per the interleaving
         policy), then decode one token on every live slot.  Returns the
-        requests that finished this step."""
-        if self._round % self.admit_every == 0 or not any(self.live):
-            self._admit()
-        self._round += 1
-        if not any(self.live):
-            return []
-        return self._decode_round()
+        requests that finished this step.  Wall time accrues HERE, so
+        ``step()``-driven callers (benchmarks, the serve CLI loop) get the
+        same tok/s accounting as ``run()``."""
+        t0 = time.perf_counter()
+        try:
+            finished: List[Request] = []
+            if self._round % self.admit_every == 0 or not any(self.live):
+                finished.extend(self._admit())
+            self._round += 1
+            if any(self.live):
+                finished.extend(self._decode_round())
+            return finished
+        finally:
+            self.stats.wall_s += time.perf_counter() - t0
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
-        t0 = time.perf_counter()
         finished: List[Request] = []
         for _ in range(max_steps):
             finished.extend(self.step())
@@ -351,50 +403,159 @@ class Engine:
                 # drained: admission on an all-free engine always takes at
                 # least the queue head, so an empty queue means done
                 break
-        self.stats.wall_s += time.perf_counter() - t0
         return finished
 
     # -- internals ---------------------------------------------------------
-    def _admit(self) -> int:
-        free = [i for i, r in enumerate(self.live) if r is None]
-        if not free or not len(self.sched):
-            return 0
-        has_live = any(r is not None for r in self.live)
-        if self.admission == "gang" and has_live and \
-                (self.dkv_rank or self.cfg.family != "dense"):
-            # legacy gang restriction, kept only for the A/B benchmark:
-            # splice-merge used to exist for the dense dense-cache path only
-            return 0
-        batch = self.sched.next_batch(len(free))
-        if not batch:
-            return 0
-        slots_idx = free[:len(batch)]
-        maxp = max(len(r.prompt) for r in batch)
-        plen = self.sched.bucket_of(maxp)
-        if plen >= self.max_len:
-            # bucket rounds past the cache: fall back to the exact length
-            # (one extra jit shape near the cap beats losing decode room)
-            plen = maxp
+    def _stops(self, req: Request) -> frozenset:
+        eos = req.eos_id if req.eos_id is not None else self.eos_id
+        toks = set(req.stop_tokens)
+        if eos is not None:
+            toks.add(eos)
+        return frozenset(toks)
 
+    def _finish(self, slot: int, req: Request, now: float, *,
+                eos: bool) -> None:
+        """Free a slot the moment its request stops (token or budget)."""
+        req.done = True
+        req.t_done = now
+        self.live[slot] = None
+        if self.pager is not None:
+            self.pager.free_slot(slot)
+        if eos:
+            self.stats.stopped_eos += 1
+        else:
+            self.stats.stopped_budget += 1
+
+    def _check_stop(self, slot: int, req: Request, now: float) -> bool:
+        """Stop-token / budget check after a token was appended."""
+        if req.out_tokens and req.out_tokens[-1] in self._stops(req):
+            self._finish(slot, req, now, eos=True)
+            return True
+        if (len(req.out_tokens) >= req.max_new_tokens
+                or self.pos[slot] >= self.max_len - 1):
+            self._finish(slot, req, now, eos=False)
+            return True
+        return False
+
+    def _admit(self) -> List[Request]:
+        """Admission: drain the queue into the free slots, ONE prefill
+        launch per length bucket, so other-bucket requests no longer wait
+        behind the head bucket while slots sit idle."""
+        finished: List[Request] = []
+        while True:
+            free = [i for i, r in enumerate(self.live) if r is None]
+            if not free or not len(self.sched):
+                break
+            has_live = any(r is not None for r in self.live)
+            if self.admission == "gang" and has_live and \
+                    (self.dkv_rank or self.cfg.family != "dense"):
+                # legacy gang restriction, kept only for the A/B benchmark:
+                # splice-merge used to exist for the dense-cache path only
+                break
+            batch = self.sched.next_batch(len(free))
+            if not batch:
+                break
+            maxp = max(len(r.prompt) for r in batch)
+            plen = self.sched.bucket_of(maxp)
+            if plen >= self.max_len:
+                # bucket rounds past the cache: fall back to the exact
+                # length (one extra jit shape near the cap beats losing
+                # decode room)
+                plen = maxp
+            looks = None
+            if self.pager is not None:
+                # prefix lookups FIRST (page refs taken per hit), so the
+                # reservation below only counts the MISSES' pages and its
+                # evictions can never invalidate this batch's hits
+                looks = self._lookup_prefixes(batch, plen)
+                n_miss = sum(1 for g in looks if g is None)
+                if not self._reserve_pages(n_miss, len(batch), plen):
+                    # page pool can't take this batch yet — drop the hit
+                    # refs, requeue at the FRONT (FIFO preserved) and
+                    # wait for slots to drain
+                    for got in looks:
+                        if got is not None:
+                            self.pager.alloc.release(got[2])
+                    self.sched._q = batch + self.sched._q
+                    break
+            finished.extend(self._admit_batch(batch, free, plen, has_live,
+                                              looks))
+            if self.admission == "gang":
+                break                # legacy: one gang per admission
+        return finished
+
+    def _lookup_prefixes(self, batch: List[Request], plen: int) -> list:
+        """Prefix-cache lookups for one admission batch.  Each hit's
+        shared page refs are taken IMMEDIATELY — before any reservation
+        eviction or same-batch miss insertion can release them — and
+        handed to ``_admit_paged`` (or dropped on deferral)."""
+        pg = self.pager
+        out: list = []
+        for req in batch:
+            got = None
+            if pg.prefix is not None:
+                pad = plen - len(req.prompt)
+                padded = np.zeros(plen, np.int32)
+                padded[pad:] = req.prompt
+                found = pg.prefix.lookup(padded, self.dkv_tail, pad)
+                if found is not None:
+                    ent, match_len = found
+                    share = ent.pages[:match_len // pg.page]
+                    pg.alloc.ref(share)
+                    got = (ent, match_len, share)
+            out.append(got)
+        if pg.prefix is not None:
+            self.stats.prefix_hits += sum(g is not None for g in out)
+            self.stats.prefix_misses += sum(g is None for g in out)
+        return out
+
+    def _reserve_pages(self, n_miss: int, n_req: int, plen: int) -> bool:
+        """Can the pools take this batch (``n_miss`` full prefills plus a
+        tail per request)?  Evicts prefix-cache entries LRU-first if that
+        frees enough — hits are unaffected, they already hold refs."""
+        pg = self.pager
+        need_u = n_miss * pg.pages_for(plen)
+        need_t = n_req * pg.ntp
+        while pg.alloc.free_pages < need_u and pg.prefix is not None \
+                and len(pg.prefix):
+            pg.prefix._evict()
+        return pg.alloc.free_pages >= need_u \
+            and pg.talloc.free_pages >= need_t
+
+    def _admit_batch(self, batch: List[Request], free: List[int],
+                     plen: int, has_live: bool,
+                     looks: Optional[list] = None) -> List[Request]:
+        slots_idx = free[:len(batch)]
         if self.admission == "gang":
             logits = self._admit_gang(batch, slots_idx, plen, has_live)
-            rows = slots_idx
+            nxt = np.asarray(self.sampler(logits, 1))[slots_idx]
+            fls = np.full(len(batch), plen if self.dkv_rank else 0,
+                          np.int32)
+        elif self.pager is not None:
+            nxt, fls = self._admit_paged(batch, slots_idx, plen, looks)
         else:
             logits = self._admit_per_slot(batch, slots_idx, plen)
-            rows = list(range(len(batch)))
+            nxt = np.asarray(self.sampler(logits, 1))[:len(batch)]
+            fls = np.full(len(batch), plen if self.dkv_rank else 0,
+                          np.int32)
 
         now = time.perf_counter()
-        nxt = np.asarray(self.sampler(logits, 1))
-        for row, slot, req in zip(rows, slots_idx, batch):
+        finished: List[Request] = []
+        for j, (slot, req) in enumerate(zip(slots_idx, batch)):
             self.live[slot] = req
             self.pos[slot] = plen
-            self.frozen_len[slot] = plen if self.dkv_rank else 0
-            req.out_tokens.append(int(nxt[row]))
+            self.frozen_len[slot] = fls[j]
+            req.out_tokens.append(int(nxt[j]))
             req.t_first = req.t_last = now
             self.stats.ttft_s.append(now - req.t_submit)
+            # the FIRST token can already be a stop token (or the whole
+            # budget): finish and free the slot immediately
+            if self._check_stop(slot, req, now):
+                finished.append(req)
         self.stats.prefills += len(batch)
-        self.stats.prefill_batches += 1
-        return len(batch)
+        if self.pager is None:
+            self.stats.prefill_batches += 1
+        return finished
 
     def _toks(self, batch: List[Request], rows: int, plen: int,
               row_of: Callable[[int], int]) -> np.ndarray:
@@ -420,6 +581,7 @@ class Engine:
             idx = np.asarray(slots_idx, np.int32)
             src = np.arange(len(slots_idx), dtype=np.int32)
             self.cache = self._splice_dkv(self.cache, fresh, idx, src)
+            self.rank_eff[slots_idx] = fresh["k_u"].shape[-1]
         else:
             args = self._prefill_args(jnp.asarray(toks))
             logits, fresh = self._prefill(self.params, *args)
@@ -428,6 +590,107 @@ class Engine:
             self.cache = self._splice_fam(self.cache, fresh, idx, src,
                                           self.cfg)
         return logits
+
+    def _admit_paged(self, batch: List[Request], slots_idx: List[int],
+                     plen: int, looks: Optional[list]):
+        """Paged admission: the precomputed prefix lookups (``looks``,
+        from ``_lookup_prefixes`` — hit page refs already taken) split
+        the batch into HITS (tail-only suffix prefill over refcounted
+        shared pages — no prefix forward pass, no Lanczos) and MISSES
+        (the slot engine's exact prefill path — same jitted fn, same pow2
+        batch padding, so the factors are bit-identical — scattered into
+        fresh pages and registered in the prefix cache).  Returns (first
+        token, frozen length) per request."""
+        pg = self.pager
+        n = len(batch)
+        padded = self._toks(batch, n, plen, lambda j: j)
+        nxt = np.zeros(n, np.int32)
+        fls = np.full(n, plen, np.int32)
+        hits: dict = {}            # (L, r_eff) -> [(j, entry, share), ...]
+        misses: List[int] = []
+        for j in range(n):
+            got = looks[j] if looks is not None else None
+            if got is not None:
+                ent, match_len, share = got
+                hits.setdefault((match_len, ent.r_eff),
+                                []).append((j, ent, share))
+            else:
+                misses.append(j)
+
+        # hits first: they only consume tail pages, and their factor
+        # pages already carry this batch's refs
+        for (match_len, r_ent), group in sorted(hits.items()):
+            m = len(group)
+            stoks = np.zeros((m, plen - match_len), np.int32)
+            ent_bt, bt_t, idx = [], [], []
+            for gi, (j, ent, share) in enumerate(group):
+                slot = slots_idx[j]
+                stoks[gi] = padded[j][match_len:]
+                tpages = pg.talloc.alloc(pg.ntp)
+                assert tpages is not None, "tail pages after _reserve_pages"
+                pg.bt_u[slot], pg.bt_t[slot] = list(share), tpages
+                ent_bt.append(share)
+                bt_t.append(tpages)
+                idx.append(slot)
+                self.rank_eff[slot] = r_ent
+                fls[j] = match_len
+            k_vt = jnp.stack([ent.k_vt for _, ent, _ in group], axis=1)
+            v_vt = jnp.stack([ent.v_vt for _, ent, _ in group], axis=1)
+            start = np.full(m, match_len, np.int32)
+            slen = np.full(m, plen - match_len, np.int32)
+            logits, pg.cache = pg._suffix(
+                self.params, jnp.asarray(stoks), pg.cache,
+                np.asarray(ent_bt, np.int32), k_vt, v_vt,
+                jnp.asarray(start), jnp.asarray(slen),
+                np.asarray(bt_t, np.int32), np.asarray(idx, np.int32),
+                match_len, r_ent)
+            toks_next = np.asarray(self.sampler(logits, 1))
+            for gi, (j, _, _) in enumerate(group):
+                nxt[j] = toks_next[gi]
+            pg.slab_t = max(pg.slab_t, match_len)
+            pg.slab_r = max(pg.slab_r, r_ent)
+            self.stats.prefill_batches += 1
+
+        if misses:
+            nb = min(_pow2(len(misses)), max(self.slots, 1))
+            mtoks = np.zeros((nb, plen), np.int32)
+            for mi, j in enumerate(misses):
+                mtoks[mi] = padded[j]
+            logits, fresh = self._prefill_dkv(self.params,
+                                              jnp.asarray(mtoks))
+            r_eff = fresh["k_u"].shape[-1]
+            npg = pg.pages_for(plen)
+            bt_u, bt_t, idx = [], [], []
+            for j in misses:
+                slot = slots_idx[j]
+                pages = pg.alloc.alloc(npg)
+                tpages = pg.talloc.alloc(pg.ntp)
+                assert pages is not None and tpages is not None, \
+                    "page reservation failed after _reserve_pages"
+                pg.bt_u[slot], pg.bt_t[slot] = pages, tpages
+                bt_u.append(pages)
+                bt_t.append(tpages)
+                idx.append(slot)
+                self.rank_eff[slot] = r_eff
+            src = np.arange(len(misses), dtype=np.int32)
+            pg.cache = pg._admit(pg.cache, fresh["k_u"], fresh["v_u"],
+                                 fresh["k_vt"], fresh["v_vt"],
+                                 np.asarray(bt_u, np.int32),
+                                 np.asarray(bt_t, np.int32),
+                                 np.asarray(idx, np.int32), src)
+            toks_next = np.asarray(self.sampler(logits, 1))
+            for mi, j in enumerate(misses):
+                nxt[j] = toks_next[mi]
+            pg.slab_t = max(pg.slab_t, plen)
+            pg.slab_r = max(pg.slab_r, r_eff)
+            if pg.prefix is not None:
+                for mi, j in enumerate(misses):
+                    pg.prefix.insert(padded[j], pg.bt_u[slots_idx[j]],
+                                     fresh["k_vt"][:, mi],
+                                     fresh["v_vt"][:, mi], r_eff,
+                                     n_pad=plen - len(batch[j].prompt))
+            self.stats.prefill_batches += 1
+        return nxt, fls
 
     def _admit_gang(self, batch: List[Request], slots_idx: List[int],
                     plen: int, has_live: bool) -> Array:
@@ -440,6 +703,7 @@ class Engine:
         if self.dkv_rank:
             logits, self.cache = self._prefill_dkv(self.params,
                                                    jnp.asarray(toks))
+            self.rank_eff[slots_idx] = self.cache["k_u"].shape[-1]
         else:
             args = self._prefill_args(jnp.asarray(toks))
             logits, cache = self._prefill(self.params, *args)
@@ -464,6 +728,84 @@ class Engine:
             return (frames, toks)
         return (toks,)
 
+    def _fold_slots(self, live_m: np.ndarray, fold: np.ndarray) -> None:
+        """Per-slot tail fold on the SLAB cache (non-paged path)."""
+        from ..models import decomposed_kv as DK
+        r_in = int(self.cache["k_u"].shape[-1])
+        t_frozen = int(self.cache["k_u"].shape[2])
+        new_frozen = np.where(fold, self.pos,
+                              self.frozen_len).astype(np.int32)
+        self.cache = self._compress_dkv(self.cache,
+                                        jnp.asarray(self.frozen_len),
+                                        jnp.asarray(fold),
+                                        jnp.asarray(new_frozen))
+        self.frozen_len = new_frozen
+        self.rank_eff = np.where(
+            fold, DK.fold_rank(self.dkv_rank, r_in, t_frozen,
+                               self.dkv_tail),
+            self.rank_eff).astype(np.int32)
+        self.stats.tail_folds += int(fold.sum())
+        # keep only the rows AND factor columns live slots reference — a
+        # finished slot's stale frozen_len/rank must not pin memory, and
+        # the rank axis shrinks back to the configured kv_rank once
+        # wide-rank splices drain (the old behavior ratcheted forever)
+        t_need = int(self.frozen_len[live_m].max())
+        r_need = int(self.rank_eff[live_m].max())
+        for key in ("k_u", "v_u"):
+            self.cache[key] = self.cache[key][:, :, :t_need, :r_need]
+        for key in ("k_vt", "v_vt"):
+            self.cache[key] = self.cache[key][:, :, :r_need]
+
+    def _fold_slots_paged(self, live_m: np.ndarray, must: np.ndarray,
+                          fold: np.ndarray) -> np.ndarray:
+        """Paged tail fold: retruncated prefixes land in FRESH pages
+        (copy-on-write — shared/prefix-cache pages are never rewritten);
+        the folded slots' old page refs are released after the scatter.
+        Falls back to must-only folds when the pool can't take the
+        opportunistic co-folds."""
+        from ..models import decomposed_kv as DK
+        pg = self.pager
+
+        def grab(mask):
+            idxs = [int(i) for i in np.where(mask)[0]]
+            need = {i: pg.pages_for(int(self.pos[i])) for i in idxs}
+            if sum(need.values()) > pg.alloc.free_pages:
+                return None
+            return {i: pg.alloc.alloc(n) for i, n in need.items()}
+
+        newp = grab(fold)
+        if newp is None:
+            fold = must
+            newp = grab(fold)
+        while newp is None and pg.prefix is not None and len(pg.prefix):
+            pg.prefix._evict()
+            newp = grab(fold)
+        if newp is None:
+            raise RuntimeError(
+                "paged KV pool exhausted during a tail fold — raise "
+                "kv_pool_pages (or lower slots/max_len)")
+        npn = max(len(v) for v in newp.values())
+        bt_new = pg.bt_array([newp.get(i, []) for i in range(self.slots)],
+                             npn)
+        new_frozen = np.where(fold, self.pos,
+                              self.frozen_len).astype(np.int32)
+        pg.cache = pg._fold(
+            pg.cache, jnp.asarray(self.frozen_len), jnp.asarray(fold),
+            jnp.asarray(new_frozen), jnp.asarray(pg.bt_array(pg.bt_u)),
+            jnp.asarray(bt_new), jnp.asarray(pg.bt_array(pg.bt_t, pg.ntp)),
+            pg.slab_t, pg.slab_r, self.dkv_tail)
+        r_fold = DK.fold_rank(self.dkv_rank, pg.slab_r, pg.slab_t,
+                              self.dkv_tail)
+        for i, pages in newp.items():
+            pg.alloc.release(pg.bt_u[i])
+            pg.bt_u[i] = pages
+            self.rank_eff[i] = r_fold
+        self.frozen_len = new_frozen
+        self.stats.tail_folds += int(fold.sum())
+        pg.slab_t = int(self.frozen_len[live_m].max())
+        pg.slab_r = int(self.rank_eff[live_m].max())
+        return fold
+
     def _decode_round(self) -> List[Request]:
         tok = np.zeros((self.slots,), np.int32)
         for i, req in enumerate(self.live):
@@ -482,20 +824,22 @@ class Engine:
                 # A co-folded slot's unused tail rows are zeros and fold
                 # as zero rows — exactness is unaffected.
                 fold = must | (live_m & (occ >= max(1, self.dkv_tail // 2)))
-                self.cache = self._compress_dkv(self.cache,
-                                                jnp.asarray(self.frozen_len),
-                                                jnp.asarray(fold))
-                self.frozen_len = np.where(fold, self.pos,
-                                           self.frozen_len).astype(np.int32)
-                self.stats.tail_folds += int(fold.sum())
-                # keep only the rows live slots reference (a finished
-                # slot's stale frozen_len must not pin prefix memory)
-                t_need = int(self.frozen_len[live_m].max())
-                for key in ("k_u", "v_u"):
-                    self.cache[key] = self.cache[key][:, :, :t_need]
-            logits, self.cache = self._decode_dkv(
-                self.params, jnp.asarray(tok), self.cache,
-                jnp.asarray(self.pos), jnp.asarray(self.frozen_len))
+                if self.pager is not None:
+                    self._fold_slots_paged(live_m, must, fold)
+                else:
+                    self._fold_slots(live_m, fold)
+            if self.pager is not None:
+                pg = self.pager
+                logits, pg.cache = pg._decode(
+                    self.params, jnp.asarray(tok), pg.cache,
+                    jnp.asarray(self.pos), jnp.asarray(self.frozen_len),
+                    jnp.asarray(pg.bt_array(pg.bt_u)),
+                    jnp.asarray(pg.bt_array(pg.bt_t, pg.ntp)),
+                    pg.slab_t, pg.slab_r, self.dkv_tail)
+            else:
+                logits, self.cache = self._decode_dkv(
+                    self.params, jnp.asarray(tok), self.cache,
+                    jnp.asarray(self.pos), jnp.asarray(self.frozen_len))
         else:
             logits, self.cache = self._decode(self.params, jnp.asarray(tok),
                                               self.cache,
@@ -512,10 +856,9 @@ class Engine:
             self.stats.tokens_out += 1
             self.stats.itl_s.append(now - req.t_last)
             req.t_last = now
-            if (len(req.out_tokens) >= req.max_new_tokens
-                    or self.pos[i] >= self.max_len - 1):
-                req.done = True
-                req.t_done = now
+            # EOS / stop tokens end a request the moment they are emitted
+            # (the old loop only stopped on budget or cache exhaustion,
+            # so every request burned its full max_new_tokens)
+            if self._check_stop(i, req, now):
                 done.append(req)
-                self.live[i] = None
         return done

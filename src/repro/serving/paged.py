@@ -1,0 +1,379 @@
+"""Paged decomposed-KV cache: page allocator, prefix cache, paged state.
+
+The slot engine's ``[slots, max_len, …]`` slab wastes HBM on short
+sequences and caps long ones; worse, it re-runs prefill AND the Lanczos
+factorization for every admitted prompt even when millions of requests
+share one system prompt.  This module supplies the vLLM-style fix on top
+of ``models.decomposed_kv``'s page pools:
+
+* :class:`PageAllocator` — refcounted free-list over page ids.  Id 0 is
+  reserved as the WRITE SINK (block-table padding and non-folding slots'
+  fold-scatter targets); real pages are 1..num_pages-1.
+* :class:`PrefixCache` — hash-keyed store of frozen decomposed prefixes
+  at page granularity.  One insertion registers every page-aligned
+  boundary of the prompt as a match point (vLLM's per-block hash chain,
+  flattened); lookup returns the LONGEST cached prefix of a new padded
+  prompt whose remaining suffix fits in the dense tail.  Entries hold
+  page refs, so slot lifecycle (folds free a slot's old pages) never
+  invalidates cached pages — folds copy-on-write into fresh pages.
+* :class:`PagedDKV` — per-engine paged state: pools, block tables, the
+  two allocators, and the HOST MIRROR of the slot engine's slab geometry
+  (``slab_t``/``slab_r``) that makes paged arithmetic bit-identical to
+  the slab engine's (see models/decomposed_kv.py).
+
+A prefix-cache hit admits with TAIL-ONLY work: the matched pages are
+spliced by reference (refcount bump), the per-slot Vᵀ factors are copied
+from the entry, and only the suffix tokens run a forward pass
+(``prefill_suffix_dkv``) — no prefix forward, no Lanczos.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import hashlib
+from collections import OrderedDict
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import decomposed_kv as DK
+
+SINK = 0                             # reserved write-sink page id
+
+
+class PageAllocator:
+    """Refcounted free-list allocator over page ids ``1..num_pages-1``.
+
+    ``alloc`` returns None when the pool can't satisfy the request (the
+    caller defers admission); ``release`` decrements and returns a page
+    to the free list at refcount zero; releasing an unallocated page
+    raises (double-free guard).
+    """
+
+    def __init__(self, num_pages: int):
+        assert num_pages >= 2, "need at least one real page beside the sink"
+        self.num_pages = num_pages
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+        self._ref: Dict[int, int] = {}
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def live_refs(self) -> Dict[int, int]:
+        return dict(self._ref)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self._ref[p] = 1
+        return pages
+
+    def ref(self, pages: List[int]) -> None:
+        for p in pages:
+            if p not in self._ref:
+                raise ValueError(f"ref of unallocated page {p}")
+            self._ref[p] += 1
+
+    def release(self, pages: List[int]) -> None:
+        for p in pages:
+            rc = self._ref.get(p)
+            if rc is None:
+                raise ValueError(f"double free of page {p}")
+            if rc == 1:
+                del self._ref[p]
+                self._free.append(p)
+            else:
+                self._ref[p] = rc - 1
+
+
+@dataclasses.dataclass
+class PrefixEntry:
+    tokens: np.ndarray               # the full padded prompt (int32)
+    pages: List[int]                 # FULL pages: rows 0..len(pages)·page
+    k_vt: jax.Array                  # [nl, r_eff, kvw]
+    v_vt: jax.Array
+    r_eff: int
+    n_pad: int = 0                   # left-pad rows (bucket rounding)
+
+
+class PrefixCache:
+    """LRU cache of frozen decomposed prefixes, matched at page-aligned
+    boundaries of the PADDED prompt.
+
+    Matching operates on the padded token sequence (the serving engine
+    left-pads prompts to the scheduler bucket, and the cached factors
+    were computed over exactly those rows), so prompts share a prefix
+    when their padded forms do — equal-length prompts behind a common
+    system prompt, or identical prompts resubmitted.
+    """
+
+    def __init__(self, capacity: int, page: int, alloc: PageAllocator):
+        self.capacity = max(1, capacity)
+        self.page = page
+        self.alloc = alloc
+        self._entries: "OrderedDict[bytes, PrefixEntry]" = OrderedDict()
+        self._by_prefix: Dict[Tuple[int, bytes], PrefixEntry] = {}
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @staticmethod
+    def _digest(tokens: np.ndarray) -> bytes:
+        return hashlib.sha1(np.ascontiguousarray(
+            tokens.astype(np.int32)).tobytes()).digest()
+
+    def _boundaries(self, n_tokens: int, n_pad: int = 0):
+        """Page-aligned match lengths: every full page, suffix non-empty,
+        and the shared prefix must reach past the left-pad region — a
+        boundary lying entirely inside the bucket padding would "match"
+        unrelated prompts that merely share a pad count (their pad rows
+        are identical tokens, but the entry's low-rank basis was fit to
+        ITS real rows, not the query's)."""
+        top = (n_tokens - 1) // self.page * self.page
+        lo = n_pad // self.page * self.page + self.page
+        return range(lo, top + 1, self.page)
+
+    def lookup(self, padded: np.ndarray, max_suffix: int, n_pad: int = 0
+               ) -> Optional[Tuple[PrefixEntry, int]]:
+        """Longest cached prefix of ``padded`` whose suffix (the rest of
+        the prompt) fits in ``max_suffix`` tail rows and which covers at
+        least one of the query's REAL tokens (``n_pad`` = its left-pad
+        row count)."""
+        n = len(padded)
+        for ln in reversed(self._boundaries(n, n_pad)):
+            if n - ln > max_suffix:
+                break                # shorter matches only lengthen it
+            ent = self._by_prefix.get((ln, self._digest(padded[:ln])))
+            if ent is not None and np.array_equal(ent.tokens[:ln],
+                                                  padded[:ln]):
+                self._entries.move_to_end(self._digest(ent.tokens))
+                self.hits += 1
+                return ent, ln
+        self.misses += 1
+        return None
+
+    def insert(self, padded: np.ndarray, pages: List[int], k_vt, v_vt,
+               r_eff: int, n_pad: int = 0) -> None:
+        """Register a freshly decomposed prompt.  Takes its own page refs
+        on the full pages it covers; evicts LRU entries past capacity."""
+        key = self._digest(padded)
+        if key in self._entries:
+            self._entries.move_to_end(key)
+            return
+        bounds = list(self._boundaries(len(padded), n_pad))
+        if not bounds:
+            return                   # no boundary past padding + 1 page
+        ent = PrefixEntry(tokens=np.array(padded, np.int32),
+                          pages=list(pages[:bounds[-1] // self.page]),
+                          k_vt=k_vt, v_vt=v_vt, r_eff=r_eff, n_pad=n_pad)
+        self.alloc.ref(ent.pages)
+        self._entries[key] = ent
+        for ln in bounds:
+            self._by_prefix[(ln, self._digest(padded[:ln]))] = ent
+        while len(self._entries) > self.capacity:
+            self._evict()
+
+    def _evict(self) -> None:
+        key, ent = self._entries.popitem(last=False)
+        for ln in self._boundaries(len(ent.tokens), ent.n_pad):
+            k = (ln, self._digest(ent.tokens[:ln]))
+            if self._by_prefix.get(k) is ent:
+                del self._by_prefix[k]
+        self.alloc.release(ent.pages)
+        self.evictions += 1
+        # re-expose boundaries the evicted entry SHADOWED: an older live
+        # entry sharing a prefix re-registers, so its pages don't sit
+        # pinned-but-unreachable behind deleted keys
+        for other in self._entries.values():
+            for ln in self._boundaries(len(other.tokens), other.n_pad):
+                k = (ln, self._digest(other.tokens[:ln]))
+                self._by_prefix.setdefault(k, other)
+
+    def drop_all(self) -> None:
+        while self._entries:
+            self._evict()
+
+
+# ---------------------------------------------------------------------------
+# Jitted paged step functions (lru-shared across engines, like serving's)
+# ---------------------------------------------------------------------------
+
+def _constrain(mesh):
+    if mesh is None:
+        return lambda c: c
+    from ..distributed import sharding as sh
+    return lambda c: sh.constrain_cache(c, mesh, seq_shard=False)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_paged_decode(cfg, mesh=None):
+    con = _constrain(mesh)
+
+    def step(p, t, c, pos, fl, bt_u, bt_t, t_need, r_need, tail_len):
+        lg, nc = DK.decode_step_dkv_paged(p, cfg, t, con(c), pos, fl,
+                                          bt_u, bt_t, t_need, r_need,
+                                          tail_len)
+        return lg, con(nc)
+
+    return jax.jit(step, static_argnums=(7, 8, 9))
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_paged_fold(cfg, rank: int, mesh=None):
+    con = _constrain(mesh)
+
+    def fold(c, fl, fm, nf, bt_u, bt_new, bt_t, t_need, r_need, tail_len):
+        return con(DK.compress_tail_paged(con(c), cfg, rank, fl, fm, nf,
+                                          bt_u, bt_new, bt_t, t_need,
+                                          r_need, tail_len))
+
+    return jax.jit(fold, static_argnums=(7, 8, 9))
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_paged_admit(mesh=None):
+    """Write a fresh prefill into the pools: U rows into pages ``bt_u``,
+    Vᵀ into the slot rows ``idx``, and ZERO the slots' tail pages (pages
+    are recycled across requests; a fresh slot's tail must read zero)."""
+    con = _constrain(mesh)
+
+    def admit(c, k_u, v_u, k_vt, v_vt, bt_u, bt_t, idx, src):
+        c = con(c)
+        r = c["k_vt"].shape[2]
+        pad = lambda a: a if a.shape[2] >= r else jnp.pad(
+            a, ((0, 0), (0, 0), (0, r - a.shape[2]), (0, 0)))
+        ztail = jnp.zeros((c["tail"]["k_pages"].shape[0], bt_t.shape[0],
+                           bt_t.shape[1] * c["tail"]["k_pages"].shape[2])
+                          + c["tail"]["k_pages"].shape[3:],
+                          c["tail"]["k_pages"].dtype)
+        return con({
+            "k_u_pages": DK.write_prefix_pages(c["k_u_pages"], k_u, bt_u,
+                                               src),
+            "v_u_pages": DK.write_prefix_pages(c["v_u_pages"], v_u, bt_u,
+                                               src),
+            "k_vt": c["k_vt"].at[:, idx].set(
+                pad(k_vt[:, src]).astype(c["k_vt"].dtype)),
+            "v_vt": c["v_vt"].at[:, idx].set(
+                pad(v_vt[:, src]).astype(c["v_vt"].dtype)),
+            "tail": {
+                "k_pages": DK.scatter_pages(c["tail"]["k_pages"], ztail,
+                                            bt_t),
+                "v_pages": DK.scatter_pages(c["tail"]["v_pages"], ztail,
+                                            bt_t),
+            },
+        })
+
+    return jax.jit(admit)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_paged_suffix(cfg, mesh=None):
+    """Prefix-cache hit admission: gather the entry's pages, run the
+    tail-only suffix prefill, splice Vᵀ + tail rows into the pools."""
+    con = _constrain(mesh)
+
+    def hit(p, toks, c, ent_bt, k_vt, v_vt, start, slen, bt_t, idx, L,
+            r_ent):
+        c = con(c)
+        prefix = {
+            "k_u": DK.gather_pages(c["k_u_pages"], ent_bt, L)[..., :r_ent],
+            "v_u": DK.gather_pages(c["v_u_pages"], ent_bt, L)[..., :r_ent],
+            "k_vt": k_vt[:, :, :r_ent], "v_vt": v_vt[:, :, :r_ent],
+        }
+        tail_store = bt_t.shape[1] * c["tail"]["k_pages"].shape[2]
+        logits, tails = DK.prefill_suffix_dkv(p, cfg, toks, prefix, start,
+                                              slen, tail_store)
+        r = c["k_vt"].shape[2]
+        pad = lambda a: a if a.shape[2] >= r else jnp.pad(
+            a, ((0, 0), (0, 0), (0, r - a.shape[2]), (0, 0)))
+        return logits, con({
+            "k_u_pages": c["k_u_pages"], "v_u_pages": c["v_u_pages"],
+            "k_vt": c["k_vt"].at[:, idx].set(
+                pad(k_vt).astype(c["k_vt"].dtype)),
+            "v_vt": c["v_vt"].at[:, idx].set(
+                pad(v_vt).astype(c["v_vt"].dtype)),
+            "tail": {
+                "k_pages": DK.scatter_pages(c["tail"]["k_pages"],
+                                            tails["k"], bt_t),
+                "v_pages": DK.scatter_pages(c["tail"]["v_pages"],
+                                            tails["v"], bt_t),
+            },
+        })
+
+    return jax.jit(hit, static_argnums=(10, 11))
+
+
+# ---------------------------------------------------------------------------
+# Per-engine paged state
+# ---------------------------------------------------------------------------
+
+class PagedDKV:
+    """Pools + block tables + allocators + slab-geometry mirror for one
+    serving engine.  All bookkeeping is host-side python/numpy; device
+    work happens only in the jitted functions above."""
+
+    def __init__(self, cfg, *, slots: int, max_len: int, rank: int,
+                 tail: int, page: int, pool_pages: int = 0,
+                 prefix_capacity: int = 0, mesh=None):
+        kvw = cfg.num_kv_heads * cfg.resolved_head_dim
+        self.cfg, self.mesh = cfg, mesh
+        self.page = max(1, page)
+        self.rank = min(rank, kvw)
+        self.tail = tail
+        self.ntp = -(-tail // self.page)          # tail pages per slot
+        per_slot = 2 * (-(-max_len // self.page))
+        self.num_pages = pool_pages or slots * per_slot + 1
+        self.num_tail_pages = slots * self.ntp + 1
+        self.alloc = PageAllocator(self.num_pages)
+        self.talloc = PageAllocator(self.num_tail_pages)
+        self.cache = DK.init_paged_cache(cfg, slots, self.num_pages,
+                                         self.page, self.rank,
+                                         self.num_tail_pages)
+        self.bt_u: List[List[int]] = [[] for _ in range(slots)]
+        self.bt_t: List[List[int]] = [[] for _ in range(slots)]
+        self.prefix: Optional[PrefixCache] = (
+            PrefixCache(prefix_capacity, self.page, self.alloc)
+            if prefix_capacity else None)
+        # host mirror of the slot engine's slab geometry — decode/fold
+        # gathers slice to exactly these dims for bit-identical math
+        self.slab_t = 0
+        self.slab_r = 0
+        self._decode = _jitted_paged_decode(cfg, mesh)
+        self._fold = _jitted_paged_fold(cfg, self.rank, mesh)
+        self._admit = _jitted_paged_admit(mesh)
+        self._suffix = _jitted_paged_suffix(cfg, mesh)
+
+    # -- block-table helpers ---------------------------------------------
+    def pages_for(self, n_rows: int) -> int:
+        return -(-max(0, n_rows) // self.page)
+
+    def bt_array(self, lists: List[List[int]], width: int = 0) -> np.ndarray:
+        width = width or max([len(p) for p in lists] + [1])
+        a = np.full((len(lists), width), SINK, np.int32)
+        for i, ps in enumerate(lists):
+            a[i, :len(ps)] = ps
+        return a
+
+    def free_slot(self, slot: int) -> None:
+        if self.bt_u[slot]:
+            self.alloc.release(self.bt_u[slot])
+            self.bt_u[slot] = []
+        if self.bt_t[slot]:
+            self.talloc.release(self.bt_t[slot])
+            self.bt_t[slot] = []
+
+    @property
+    def pool_bytes(self) -> int:
+        leaves = jax.tree_util.tree_leaves(self.cache)
+        return sum(x.size * x.dtype.itemsize for x in leaves)

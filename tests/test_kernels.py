@@ -199,6 +199,32 @@ def test_dkv_attention_stats_padding_is_bit_exact():
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("perm_seed,t_valid", [(0, 32), (1, 27), (2, 9)])
+def test_dkv_attention_stats_paged_matches_contiguous(perm_seed, t_valid):
+    """Paged stats (blocks DMA'd by prefetched page id through the block
+    table) are BIT-IDENTICAL to the contiguous kernel run on the gathered
+    rows at expansion == n_pages: same block partitioning, same online-
+    softmax math — only the addressing differs.  Covers permuted page
+    order and a partially filled last page (t_valid < n·page)."""
+    P, page, g, r, n = 12, 8, 4, 16, 4
+    rng = np.random.RandomState(50 + perm_seed)
+    pools_k = jnp.asarray(rng.randn(P, page, r).astype(np.float32))
+    pools_v = jnp.asarray(rng.randn(P, page, r).astype(np.float32))
+    inner = jnp.asarray(rng.randn(g, r).astype(np.float32))
+    ids = jnp.asarray(rng.permutation(np.arange(1, P))[:n].astype(np.int32))
+    a_p, m_p, l_p = ops.dkv_attention_stats_paged(
+        inner, pools_k, pools_v, ids, t_valid=t_valid)
+    from repro.kernels import dkv_attention as _dkv
+    gath_k = pools_k[ids].reshape(-1, r)
+    gath_v = pools_v[ids].reshape(-1, r)
+    a_c, m_c, l_c = _dkv.dkv_attention_stats(inner, gath_k, gath_v,
+                                             expansion=n, t_valid=t_valid,
+                                             interpret=True)
+    assert (np.asarray(a_p) == np.asarray(a_c)).all()
+    assert (np.asarray(m_p) == np.asarray(m_c)).all()
+    assert (np.asarray(l_p) == np.asarray(l_c)).all()
+
+
 def test_dkv_merge_with_tail_exact():
     """Kernel stats + dense-tail merge == softmax over the full sequence."""
     g, r, t, tl, d = 4, 8, 256, 16, 32

@@ -131,7 +131,8 @@ def test_property_engine_finishes_once_no_leaks_monotone(data):
     arrive = sorted(data.draw(st.lists(st.integers(0, 6), min_size=n,
                                        max_size=n)))
     dkv = data.draw(st.booleans())
-    kw = dict(decompose_kv_rank=6, dkv_tail=2) if dkv else {}
+    paged = dkv and data.draw(st.booleans())
+    kw = dict(decompose_kv_rank=6, dkv_tail=2, paged=paged) if dkv else {}
     eng = Engine(cfg, params, slots=2, max_len=48, **kw)
     rng = np.random.RandomState(0)
     reqs = [Request(uid=i, prompt=rng.randint(0, cfg.vocab, l,
@@ -157,6 +158,96 @@ def test_property_engine_finishes_once_no_leaks_monotone(data):
     assert all(r.done for r in finished)
     assert eng.live == [None] * eng.slots, "slot leak"
     assert eng.stats.prefills == n
+    if paged:                        # every page returned after drain
+        assert eng.pager.alloc.free_pages == eng.pager.num_pages - 1
+        assert eng.pager.talloc.free_pages == eng.pager.num_tail_pages - 1
+
+
+# ---------------------------------------------------------------------------
+# Page-allocator invariants (pure python — no device work)
+# ---------------------------------------------------------------------------
+
+from repro.serving.paged import PageAllocator  # noqa: E402
+
+
+@settings(max_examples=60, deadline=None)
+@given(data=st.data())
+def test_property_page_allocator_refcounts_no_leaks(data):
+    """Under random alloc/ref/release traffic: page 0 (the write sink) is
+    never handed out, no page is ever handed to two owners at once,
+    conservation holds (free + live == pool), releasing an unallocated
+    page raises (double-free guard), and a full drain returns EVERY page
+    to the free list."""
+    n = data.draw(st.integers(2, 48))
+    al = PageAllocator(n)
+    total = n - 1
+    held = []                     # (pages, extra_refs) per allocation
+    for _ in range(data.draw(st.integers(1, 80))):
+        op = data.draw(st.sampled_from(["alloc", "ref", "release",
+                                        "release"]))
+        if op == "alloc":
+            k = data.draw(st.integers(0, total))
+            got = al.alloc(k)
+            if got is None:
+                assert k > 0          # alloc(0) always succeeds
+            else:
+                assert len(got) == k and 0 not in got
+                live = [p for pages, _ in held for p in pages]
+                assert not set(got) & set(live), "page double-handed"
+                held.append((got, 0))
+        elif op == "ref" and held:
+            i = data.draw(st.integers(0, len(held) - 1))
+            pages, extra = held[i]
+            if pages:
+                al.ref(pages)
+                held[i] = (pages, extra + 1)
+        elif op == "release" and held:
+            i = data.draw(st.integers(0, len(held) - 1))
+            pages, extra = held[i]
+            al.release(pages)
+            if extra:
+                held[i] = (pages, extra - 1)
+            else:
+                held.pop(i)
+        live_count = len({p for pages, _ in held for p in pages})
+        assert al.free_pages + live_count == total, "page conservation"
+    # drain: release every remaining ref; the pool must come back whole
+    for pages, extra in held:
+        for _ in range(extra + 1):
+            al.release(pages)
+    assert al.free_pages == total, "leaked pages after drain"
+    assert not al.live_refs
+    with pytest.raises(ValueError):
+        al.release([1])               # double free raises
+
+
+@settings(max_examples=30, deadline=None)
+@given(lens=st.lists(st.integers(5, 24), min_size=1, max_size=6),
+       page=st.sampled_from([2, 4, 8]), cap=st.integers(1, 3))
+def test_property_prefix_cache_capacity_and_refs(lens, page, cap):
+    """PrefixCache never exceeds its capacity, holds exactly one ref per
+    page of each live entry, and dropping every entry returns the pool to
+    its pre-insert state."""
+    from repro.serving.paged import PrefixCache
+    al = PageAllocator(256)
+    pc = PrefixCache(cap, page, al)
+    slots = []
+    rng = np.random.RandomState(0)
+    for n in lens:
+        toks = rng.randint(0, 100, n).astype(np.int32)
+        pages = al.alloc(-(-n // page))
+        pc.insert(toks, pages, None, None, r_eff=4)
+        slots.append(pages)
+    assert len(pc) <= cap
+    want = sum(len(e.pages) for e in pc._entries.values())
+    # slots still hold their own refs; entry refs are ON TOP of them
+    over = sum(rc - 1 for rc in al.live_refs.values())
+    assert over == want, "entries must hold exactly one ref per page"
+    pc.drop_all()
+    assert sum(rc - 1 for rc in al.live_refs.values()) == 0
+    for pages in slots:
+        al.release(pages)
+    assert al.free_pages == 255
 
 
 # ---------------------------------------------------------------------------

@@ -111,3 +111,148 @@ def test_oversized_prompt_rejected_at_submit():
     import pytest
     with pytest.raises(ValueError):
         eng.submit(Request(uid=0, prompt=np.zeros(32, np.int32)))
+
+
+# ---------------------------------------------------------------------------
+# Decode-loop correctness fixes (PR 5)
+# ---------------------------------------------------------------------------
+
+def _const_sampler(tok):
+    import jax.numpy as jnp
+    return lambda lg, k: jnp.full((lg.shape[0],), tok, jnp.int32)
+
+
+def test_eos_stops_request_and_frees_slot():
+    """A request finishes the moment it emits eos_id — not after burning
+    its whole max_new_tokens budget — and its slot frees immediately."""
+    cfg, eng = _engine(slots=2)
+    eng.sampler = _const_sampler(7)
+    eng.eos_id = 7
+    eng.submit(Request(uid=0, prompt=np.arange(8, dtype=np.int32),
+                       max_new_tokens=50))
+    done = eng.run()
+    assert len(done) == 1 and done[0].done
+    assert done[0].out_tokens == [7]     # stopped at the very first token
+    assert eng.live == [None] * 2        # slot freed at once
+    assert eng.stats.stopped_eos == 1
+    assert eng.stats.stopped_budget == 0
+
+
+def test_per_request_stop_tokens_and_budget_counters():
+    """Request-level eos/stop_tokens override the engine default; finishes
+    are attributed to stopped_eos vs stopped_budget correctly."""
+    cfg, eng = _engine(slots=2)
+    eng.sampler = _const_sampler(9)
+    eng.submit(Request(uid=0, prompt=np.arange(6, dtype=np.int32),
+                       max_new_tokens=40, stop_tokens=(9,)))
+    eng.submit(Request(uid=1, prompt=np.arange(6, dtype=np.int32),
+                       max_new_tokens=3))        # no stop: runs its budget
+    done = {r.uid: r for r in eng.run()}
+    assert done[0].out_tokens == [9]
+    assert len(done[1].out_tokens) == 3
+    assert eng.stats.stopped_eos == 1
+    assert eng.stats.stopped_budget == 1
+
+
+def test_wall_s_accrues_per_step():
+    """step()-driven callers (benchmarks, the serve CLI) must see real
+    wall time — the old accounting lived only inside run() and reported
+    tok/s = inf everywhere else."""
+    cfg, eng = _engine(slots=2)
+    eng.submit(Request(uid=0, prompt=np.arange(4, dtype=np.int32),
+                       max_new_tokens=4))
+    done = []
+    while len(done) < 1:
+        done.extend(eng.step())
+    assert eng.stats.wall_s > 0.0
+    assert eng.stats.tokens_out / eng.stats.wall_s < float("inf")
+
+
+def test_multi_bucket_admission_fills_free_slots():
+    """A mixed-length queue no longer idles free slots behind the head
+    request's bucket: one admission drains further buckets (one prefill
+    launch per bucket)."""
+    cfg = all_archs()["llama2-7b"].reduced()
+    fns = model_fns(cfg)
+    params = fns.init(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, slots=4, max_len=96)
+    rng = np.random.RandomState(0)
+    for i, n in enumerate((4, 4, 20, 20)):       # two plen buckets
+        eng.submit(Request(uid=i, prompt=rng.randint(0, cfg.vocab, n,
+                                                     dtype=np.int32),
+                           max_new_tokens=3))
+    assert eng.sched.bucket_of(4) != eng.sched.bucket_of(20)
+    eng.step()
+    assert sum(r is not None for r in eng.live) == 4, \
+        "free slots idled while another bucket waited"
+    assert eng.stats.prefill_batches == 2        # one launch per bucket
+    done = eng.run()
+    assert sorted(r.uid for r in done) == [0, 1, 2, 3]
+
+
+def test_fold_retruncates_back_to_configured_kv_rank():
+    """Regression for the rank ratchet: after a wider-rank splice (e.g. a
+    migrated cache or a config change), the next fold retruncates every
+    folding slot back to the configured kv_rank and the engine slices the
+    rank axis down once no live slot needs the extra width."""
+    from repro.models import decomposed_kv as DK
+    cfg = all_archs()["deepseek-7b"].reduced()
+    params = model_fns(cfg).init(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, slots=2, max_len=64,
+                 decompose_kv_rank=8, dkv_tail=4)
+    rng = np.random.RandomState(0)
+    eng.submit(Request(uid=0, prompt=rng.randint(0, cfg.vocab, 12,
+                                                 dtype=np.int32),
+                       max_new_tokens=12))
+    eng.step()                                    # admit: rank-8 factors
+    assert eng.cache["k_u"].shape[-1] == 8
+    # heterogeneous splice: widen slot 1's factors to rank 12 directly
+    import jax.numpy as jnp
+    t = eng.cache["k_u"].shape[2]
+    wide = {
+        "k_u": jnp.ones(eng.cache["k_u"].shape[:-1] + (12,)) * 0.01,
+        "v_u": jnp.ones(eng.cache["v_u"].shape[:-1] + (12,)) * 0.01,
+        "k_vt": jnp.ones(eng.cache["k_vt"].shape[:-2] + (12,) +
+                         eng.cache["k_vt"].shape[-1:]) * 0.01,
+        "v_vt": jnp.ones(eng.cache["v_vt"].shape[:-2] + (12,) +
+                         eng.cache["v_vt"].shape[-1:]) * 0.01,
+        "tail": {k: jnp.zeros_like(v) for k, v in eng.cache["tail"].items()},
+    }
+    eng.cache = DK.splice_dkv(eng.cache, wide, np.array([1]), np.array([1]))
+    assert eng.cache["k_u"].shape[-1] == 12       # splice padded both sides
+    eng.rank_eff[1] = 12
+    eng.live[1] = Request(uid=99, prompt=np.arange(4, dtype=np.int32),
+                          max_new_tokens=2)
+    eng.pos[1] = t
+    eng.frozen_len[1] = t
+    done = eng.run()
+    assert sorted(r.uid for r in done) == [0, 99]
+    assert eng.stats.tail_folds > 0
+    # the wide occupant drained and folds retruncated: width is back to
+    # the configured kv_rank (the old max(r_in, r_fold) kept 12 forever)
+    assert eng.cache["k_u"].shape[-1] == 8
+    assert eng.cache["k_vt"].shape[-2] == 8
+
+
+def test_compress_tail_uniform_retruncates_to_rank():
+    """Unit twin of the ratchet regression: uniform-mode compress_tail on
+    factors wider than the configured rank comes back at exactly rank."""
+    from repro.models import decomposed_kv as DK
+    cfg = all_archs()["deepseek-7b"].reduced()
+    kvw = cfg.num_kv_heads * cfg.resolved_head_dim
+    nl, b, t, tl, r_in, rank = cfg.num_layers, 2, 12, 4, 12, 8
+    rng = np.random.RandomState(1)
+    cache = {
+        "k_u": rng.randn(nl, b, t, r_in).astype(np.float32),
+        "k_vt": rng.randn(nl, b, r_in, kvw).astype(np.float32),
+        "v_u": rng.randn(nl, b, t, r_in).astype(np.float32),
+        "v_vt": rng.randn(nl, b, r_in, kvw).astype(np.float32),
+        "tail": {"k": rng.randn(nl, b, tl, cfg.num_kv_heads,
+                                cfg.resolved_head_dim).astype(np.float32),
+                 "v": rng.randn(nl, b, tl, cfg.num_kv_heads,
+                                cfg.resolved_head_dim).astype(np.float32)},
+    }
+    out = DK.compress_tail(cache, cfg, rank)
+    assert out["k_u"].shape[-1] == rank           # was max(r_in, r_fold)=12
+    assert out["k_vt"].shape[-2] == rank
+    assert out["k_u"].shape[2] == t + tl

@@ -129,15 +129,16 @@ DKV_RANK, DKV_TAIL, MESH_SLOTS, MESH_NEW = 8, 4, 8, 12
 MESH_PROMPT_LENS = (12, 7, 15)
 
 
-def _serve_dkv_staggered(cfg, params, prompts, *, mesh, slots=MESH_SLOTS):
+def _serve_dkv_staggered(cfg, params, prompts, *, mesh, slots=MESH_SLOTS,
+                         paged=False):
     """Staggered arrivals (admissions land mid-decode) on the dkv engine,
     rank well below full so tail folds are REAL retruncations."""
     from repro.engine import DecomposeEngine, EngineConfig
     de = DecomposeEngine(EngineConfig(kv_rank=DKV_RANK, kv_tail=DKV_TAIL,
-                                      mesh=mesh))
+                                      kv_page=4, mesh=mesh))
     eng = Engine(cfg, params, slots=slots, max_len=MAX_LEN,
                  decompose_kv_rank=DKV_RANK, dkv_tail=DKV_TAIL,
-                 decompose_engine=de)
+                 decompose_engine=de, paged=paged)
     done = []
     eng.submit(Request(uid=0, prompt=prompts[0], max_new_tokens=MESH_NEW))
     arrivals = {3 * i: i for i in range(1, len(prompts))}
@@ -171,12 +172,17 @@ _SHARDED_SCRIPT = textwrap.dedent("""
     rng = np.random.RandomState(0)
     prompts = [rng.randint(0, cfg.vocab, n, dtype=np.int32)
                for n in MESH_PROMPT_LENS]
-    toks, eng = _serve_dkv_staggered(cfg, params, prompts,
-                                     mesh=make_host_mesh(8, 1))
+    mesh = make_host_mesh(8, 1)
+    toks, eng = _serve_dkv_staggered(cfg, params, prompts, mesh=mesh)
+    ptoks, peng = _serve_dkv_staggered(cfg, params, prompts, mesh=mesh,
+                                       paged=True)
     ku = eng.cache["k_u"]
     json.dump({"tokens": {str(u): t for u, t in toks.items()},
+               "paged_tokens": {str(u): t for u, t in ptoks.items()},
                "ku_nshards": len(ku.addressable_shards),
-               "ku_spec": str(ku.sharding.spec)},
+               "ku_spec": str(ku.sharding.spec),
+               "paged_free": peng.pager.alloc.free_pages,
+               "paged_total": peng.pager.num_pages - 1},
               open(sys.argv[1], "w"))
 """)
 
@@ -205,6 +211,10 @@ def test_sharded_serving_byte_identical_to_1_device(dense_model, tmp_path):
     assert "data" in got["ku_spec"]
     assert {int(k): v for k, v in got["tokens"].items()} == local, \
         f"sharded tokens diverged: {got['tokens']} vs {local}"
+    # the 8-device PAGED twin matches too (and returned every page)
+    assert {int(k): v for k, v in got["paged_tokens"].items()} == local, \
+        f"sharded PAGED tokens diverged: {got['paged_tokens']} vs {local}"
+    assert got["paged_free"] == got["paged_total"], "leaked pages on mesh"
 
 
 @pytest.mark.skipif(len(jax.devices()) < 8,
@@ -239,6 +249,240 @@ def test_sharded_serving_inprocess_8dev(dense_model):
         return {r.uid: r.out_tokens for r in eng.run()}
 
     assert gang_all(None) == gang_all(mesh)
+
+
+# ---------------------------------------------------------------------------
+# Paged-cache conformance (paged engine vs slot engine, prefix cache)
+# ---------------------------------------------------------------------------
+
+
+def test_paged_matches_slot_engine_staggered(dense_model):
+    """THE paged gate: block-table serving is greedy-token-EXACT vs the
+    slot engine at equal kv_rank (rank 8 — folds are real retruncations),
+    across tail-fold boundaries and staggered mid-decode admissions.  The
+    paged engine replays the slab arithmetic bit-for-bit (gathers slice
+    to the mirrored slab geometry), so this holds at ANY rank, not just
+    the near-full exact regime."""
+    cfg, params = dense_model
+    prompts = _prompts(cfg, lens=MESH_PROMPT_LENS)
+    slot, _ = _serve_dkv_staggered(cfg, params, prompts, mesh=None,
+                                   slots=2)
+    paged, eng = _serve_dkv_staggered(cfg, params, prompts, mesh=None,
+                                      slots=2, paged=True)
+    assert eng.stats.tail_folds > 0
+    assert paged == slot, f"paged diverged: {paged} vs {slot}"
+    # every page returned to the pool after the queue drained
+    assert eng.pager.alloc.free_pages == eng.pager.num_pages - 1
+    assert eng.pager.talloc.free_pages == eng.pager.num_tail_pages - 1
+
+
+def test_paged_matches_slot_engine_batched(dense_model):
+    """Full-batch admission twin (all slots admitted in one prefill) plus
+    slots > len(queue): the pow2 prefill padding and page write path must
+    not perturb tokens."""
+    cfg, params = dense_model
+    prompts = _prompts(cfg)
+
+    def serve(paged):
+        from repro.engine import DecomposeEngine, EngineConfig
+        de = DecomposeEngine(EngineConfig(kv_rank=DKV_RANK,
+                                          kv_tail=DKV_TAIL, kv_page=4))
+        eng = Engine(cfg, params, slots=4, max_len=MAX_LEN,
+                     decompose_kv_rank=DKV_RANK, dkv_tail=DKV_TAIL,
+                     decompose_engine=de, paged=paged)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(uid=i, prompt=p, max_new_tokens=MAX_NEW))
+        return {r.uid: r.out_tokens for r in eng.run()}, eng
+
+    slot, _ = serve(False)
+    paged, eng = serve(True)
+    assert eng.stats.tail_folds > 0
+    assert paged == slot
+    assert eng.pager.alloc.free_pages == eng.pager.num_pages - 1
+
+
+def test_paged_matches_slot_mixed_page_counts(dense_model):
+    """Regression: staggered admissions from DIFFERENT plen buckets give
+    the slots different block-table widths, so decode/fold gathers read
+    the id-0 sink page through the block-table padding.  A fold must
+    never leave residue in the sink (non-folding slots' rows scatter as
+    zeros) or the shorter slot's next fold retruncates garbage and its
+    tokens drift off the slot engine's."""
+    cfg, params = dense_model
+
+    def serve(paged):
+        from repro.engine import DecomposeEngine, EngineConfig
+        de = DecomposeEngine(EngineConfig(kv_rank=DKV_RANK,
+                                          kv_tail=DKV_TAIL, kv_page=4))
+        eng = Engine(cfg, params, slots=2, max_len=MAX_LEN,
+                     decompose_kv_rank=DKV_RANK, dkv_tail=DKV_TAIL,
+                     decompose_engine=de, paged=paged)
+        rng = np.random.RandomState(7)
+        # bucket 16 vs bucket 32 → 4 vs 8 pages per slot
+        eng.submit(Request(uid=0, prompt=rng.randint(0, cfg.vocab, 12,
+                                                     dtype=np.int32),
+                           max_new_tokens=20))
+        done = []
+        for step in range(200):
+            if step == 3:
+                eng.submit(Request(uid=1,
+                                   prompt=rng.randint(0, cfg.vocab, 20,
+                                                      dtype=np.int32),
+                                   max_new_tokens=8))
+            done.extend(eng.step())
+            if len(done) == 2 and not any(eng.live):
+                break
+        assert eng.stats.tail_folds >= 2
+        return {r.uid: r.out_tokens for r in done}
+
+    slot = serve(False)
+    paged = serve(True)
+    assert paged == slot, f"sink-page residue corrupted decode: " \
+                          f"{paged} vs {slot}"
+
+
+def test_prefix_cache_never_matches_padding_only(dense_model):
+    """Regression: two UNRELATED short prompts share only their bucket
+    left-padding (12 zero rows at bucket 16).  A boundary lying entirely
+    inside the pad region must not count as a shared prefix — the cached
+    low-rank basis was fit to the OTHER prompt's real rows — so the
+    lookup must miss and tokens must match the prefix-cache-off engine."""
+    cfg, params = dense_model
+    rng = np.random.RandomState(3)
+    prompts = [rng.randint(0, cfg.vocab, 4, dtype=np.int32)
+               for _ in range(2)]
+    assert not np.array_equal(prompts[0], prompts[1])
+
+    def serve(prefix_cap):
+        from repro.engine import DecomposeEngine, EngineConfig
+        de = DecomposeEngine(EngineConfig(kv_rank=8, kv_tail=16, kv_page=4,
+                                          kv_prefix_cache=prefix_cap))
+        eng = Engine(cfg, params, slots=1, max_len=MAX_LEN,
+                     decompose_kv_rank=8, dkv_tail=16,
+                     decompose_engine=de, paged=True)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(uid=i, prompt=p, max_new_tokens=6))
+        done = eng.run()
+        return {r.uid: r.out_tokens for r in done}, eng
+
+    off, _ = serve(0)
+    on, eng = serve(4)
+    assert eng.stats.prefix_hits == 0, \
+        "padding-only boundary must not match unrelated prompts"
+    assert on == off
+
+
+def test_paged_prefix_cache_hit_miss_evict(dense_model):
+    """Prefix-cache conformance: a shared-system-prompt workload admits
+    later requests as HITS (refcounted page splice + tail-only suffix
+    prefill — no prefix forward, no Lanczos) with greedy tokens matching
+    the prefix-cache-off engine at near-full exact rank; capacity-1
+    forces LRU eviction; no pages leak after the queue drains.
+
+    (Hit and miss keep the suffix rows on different sides of the
+    factorization — both exact vs dense to ~1e-6 — so greedy near-ties
+    CAN flip; the fixed seed below is verified tie-free, like the other
+    exact-rank suites in this file.)"""
+    cfg, params = dense_model
+    rng = np.random.RandomState(1)
+    sys_prompt = rng.randint(0, cfg.vocab, 12, dtype=np.int32)
+    prompts = [np.concatenate([sys_prompt,
+                               rng.randint(0, cfg.vocab, 3, dtype=np.int32)])
+               for _ in range(4)]
+
+    def serve(prefix_cap):
+        from repro.engine import DecomposeEngine, EngineConfig
+        de = DecomposeEngine(EngineConfig(
+            kv_rank=48, kv_tail=8, kv_page=4, kv_exact=True,
+            kv_prefix_cache=prefix_cap))
+        eng = Engine(cfg, params, slots=2, max_len=MAX_LEN,
+                     decompose_kv_rank=48, dkv_tail=8, dkv_exact=True,
+                     decompose_engine=de, paged=True)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(uid=i, prompt=p, max_new_tokens=8))
+        done = eng.run()
+        return {r.uid: r.out_tokens for r in done}, eng
+
+    off, _ = serve(0)
+    on, eng = serve(8)
+    assert eng.stats.prefix_hits >= 2            # later arrivals hit
+    assert eng.stats.prefix_misses >= 1          # first arrival missed
+    assert on == off, f"prefix-cache hits diverged: {on} vs {off}"
+    # cached pages outlive their slots (entries hold refs, slots drained)
+    assert len(eng.pager.prefix) >= 1
+    assert any(rc >= 1 for rc in eng.pager.alloc.live_refs.values())
+    used = eng.pager.num_pages - 1 - eng.pager.alloc.free_pages
+    assert used == sum(len(e.pages)
+                       for e in eng.pager.prefix._entries.values())
+    eng.pager.prefix.drop_all()                  # release the cache's refs
+    assert eng.pager.alloc.free_pages == eng.pager.num_pages - 1
+
+    # capacity-1: the second distinct prompt evicts the first (LRU)
+    evict, eng1 = serve(1)
+    assert eng1.pager.prefix.evictions >= 1
+    assert len(eng1.pager.prefix) == 1
+    assert evict == off                          # eviction never corrupts
+
+
+def test_paged_prefix_hit_skips_prefill_work(dense_model):
+    """A full-page hit admits with tail-only work: the hit admission runs
+    NO decomposition (stats show a hit, and the slot's frozen factors are
+    the cached entry's pages — refcount 2 while both referents live)."""
+    cfg, params = dense_model
+    rng = np.random.RandomState(1)
+    prompt = rng.randint(0, cfg.vocab, 15, dtype=np.int32)
+
+    from repro.engine import DecomposeEngine, EngineConfig
+    de = DecomposeEngine(EngineConfig(kv_rank=48, kv_tail=8, kv_page=4,
+                                      kv_exact=True, kv_prefix_cache=4))
+    eng = Engine(cfg, params, slots=2, max_len=MAX_LEN,
+                 decompose_kv_rank=48, dkv_tail=8, dkv_exact=True,
+                 decompose_engine=de, paged=True)
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=4))
+    eng.run()
+    assert eng.stats.prefix_misses == 1
+    eng.submit(Request(uid=1, prompt=prompt.copy(), max_new_tokens=4))
+    eng.step()                                   # admission lands
+    assert eng.stats.prefix_hits == 1
+    slot = next(i for i, r in enumerate(eng.live) if r is not None)
+    shared = eng.pager.bt_u[slot]
+    refs = eng.pager.alloc.live_refs
+    assert shared and all(refs[p] >= 2 for p in shared), \
+        "hit slot must alias the cached entry's pages, not copy them"
+    eng.run()
+    # copy-on-write: if the slot folded, the shared pages are untouched
+    assert all(p in refs or p in eng.pager.alloc.live_refs
+               for p in shared)
+
+
+def test_paged_hit_survives_same_batch_eviction(dense_model):
+    """Regression: one admission batch carrying a HIT on the LRU entry
+    plus a MISS whose insertion evicts that entry (capacity 1).  The hit
+    takes its page refs BEFORE the miss inserts, so eviction only drops
+    the cache's refs — the hit slot keeps valid pages and the engine
+    neither crashes nor leaks."""
+    cfg, params = dense_model
+    rng = np.random.RandomState(1)
+    p1 = rng.randint(0, cfg.vocab, 15, dtype=np.int32)
+    p2 = rng.randint(0, cfg.vocab, 15, dtype=np.int32)
+
+    from repro.engine import DecomposeEngine, EngineConfig
+    de = DecomposeEngine(EngineConfig(kv_rank=48, kv_tail=8, kv_page=4,
+                                      kv_exact=True, kv_prefix_cache=1))
+    eng = Engine(cfg, params, slots=2, max_len=MAX_LEN,
+                 decompose_kv_rank=48, dkv_tail=8, dkv_exact=True,
+                 decompose_engine=de, paged=True)
+    eng.submit(Request(uid=0, prompt=p1, max_new_tokens=4))
+    eng.run()                                    # populates the cache
+    # one batch: hit on p1's entry + miss that evicts it (capacity 1)
+    eng.submit(Request(uid=1, prompt=p1.copy(), max_new_tokens=6))
+    eng.submit(Request(uid=2, prompt=p2, max_new_tokens=6))
+    done = {r.uid: r for r in eng.run()}
+    assert eng.stats.prefix_hits == 1
+    assert eng.pager.prefix.evictions >= 1
+    assert len(done[1].out_tokens) == 6 and len(done[2].out_tokens) == 6
+    eng.pager.prefix.drop_all()
+    assert eng.pager.alloc.free_pages == eng.pager.num_pages - 1
 
 
 def test_exact_svd_vs_lanczos_near_full_rank():
