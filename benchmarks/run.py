@@ -23,12 +23,14 @@ TUNE_SHAPES = {
     "matvec_expand": [(1024, 2048)],
     "lowrank_matmul": [(16, 1024, 1024)],
     "dkv_attention": [(8, 1024, 32)],
+    "decode_block": [(8, 128, 512)],       # (slots, horizon, kv width)
 }
 TUNE_SHAPES_QUICK = {
     "lanczos_reorth": [(2, 48, 96)],
     "matvec_expand": [(128, 256)],
     "lowrank_matmul": [(8, 128, 128)],
     "dkv_attention": [(4, 96, 16)],
+    "decode_block": [(4, 16, 64)],
 }
 
 

@@ -56,6 +56,11 @@ class EngineConfig:
                         (prefill/decode interleaving policy), and one
                         admission batch takes at most ``sched_max_admit``
                         requests (0 = as many as there are free slots).
+    * ``decode_block`` — fused decode steps per device launch (serving):
+                        1 (default) is the classic one-dispatch-per-token
+                        loop; N > 1 runs up to N steps inside one jitted
+                        on-device loop (token-exact — see DESIGN.md §11);
+                        ``"auto"`` picks N through ``repro.tune``.
     * ``mesh``        — optional ``jax.sharding.Mesh``: the engine runs its
                         jitted Lanczos pipeline DP-sharded over the batch
                         axis (explicit in/out shardings; ``shard_map`` for
@@ -80,6 +85,7 @@ class EngineConfig:
     sched_bucket: int = 16
     sched_admit_every: int = 1
     sched_max_admit: int = 0
+    decode_block: Union[int, str] = 1   # fused decode steps/launch, or "auto"
     mesh: Optional[Any] = None          # jax.sharding.Mesh (hashable)
 
     def __post_init__(self):
@@ -88,6 +94,12 @@ class EngineConfig:
             raise ValueError(
                 f"expansion must be a positive int or 'auto', "
                 f"got {self.expansion!r}")
+        if self.decode_block != "auto" and (
+                not isinstance(self.decode_block, int)
+                or self.decode_block < 1):
+            raise ValueError(
+                f"decode_block must be a positive int or 'auto', "
+                f"got {self.decode_block!r}")
 
     def layer(self, idx: int) -> LayerPolicy:
         if self.policy is None:

@@ -81,6 +81,11 @@ def main() -> None:
                          "local devices on the data axis), or 'DxM' (e.g. "
                          "8x1; force host devices with XLA_FLAGS="
                          "--xla_force_host_platform_device_count=8)")
+    ap.add_argument("--decode-block", default="1",
+                    help="fused decode steps per device launch: N, or "
+                         "'auto' (tuner-resolved).  1 = classic per-token "
+                         "dispatch; N>1 runs up to N steps in one jitted "
+                         "on-device loop, token-identical output")
     args = ap.parse_args()
 
     mesh = parse_mesh(args.mesh)
@@ -89,6 +94,8 @@ def main() -> None:
     params = fns.init(jax.random.PRNGKey(0), cfg)
     expansion = args.expansion if args.expansion == "auto" \
         else int(args.expansion)
+    decode_block = args.decode_block if args.decode_block == "auto" \
+        else int(args.decode_block)
     dengine = DecomposeEngine(EngineConfig(
         backend=args.backend, expansion=expansion,
         kv_rank=args.decompose_kv_rank, kv_tail=args.dkv_tail,
@@ -96,7 +103,7 @@ def main() -> None:
         kv_pool_pages=args.pages, kv_prefix_cache=args.prefix_cache,
         sched_bucket=args.sched_bucket,
         sched_admit_every=args.admit_every, sched_max_admit=args.max_admit,
-        mesh=mesh))
+        decode_block=decode_block, mesh=mesh))
 
     if expansion == "auto" and not args.no_pretune:
         # Serving warmup: resolve the tuned operating points for the
@@ -143,9 +150,11 @@ def main() -> None:
     mesh_desc = "none" if mesh is None else \
         "x".join(str(mesh.shape[a]) for a in mesh.axis_names)
     print(f"engine: {dengine}  admission={args.admission}  "
-          f"mesh={mesh_desc} ({len(jax.devices())} devices)")
+          f"mesh={mesh_desc} ({len(jax.devices())} devices)  "
+          f"decode_block={eng.decode_block}")
     print(f"stats: prefills={s.prefills} batches={s.prefill_batches} "
-          f"decode_steps={s.decode_steps} folds={s.tail_folds} "
+          f"decode_steps={s.decode_steps} blocks={s.blocks} "
+          f"folds={s.tail_folds} "
           f"tokens={s.tokens_out} stopped_eos={s.stopped_eos} "
           f"stopped_budget={s.stopped_budget} wall={s.wall_s:.2f}s "
           f"tok/s={s.tokens_out / max(s.wall_s, 1e-9):.1f} "

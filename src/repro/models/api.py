@@ -31,6 +31,60 @@ class ModelFns:
     forward: Optional[Callable] = None
 
 
+def run_decode_block(step: Callable, sampler: Callable, max_block: int,
+                     tok: Array, cache, pos: Array, n_steps,
+                     stop_table: Array, key, round0):
+    """Bounded on-device multi-token decode loop — N steps, ONE dispatch.
+
+    Every family's ``decode_step`` already has a scan-able signature (all
+    array arguments, static shapes), so one loop serves them all:
+    ``step(tok, cache, pos) -> (logits, cache)`` is the single-token fn
+    closed over params/config (and any loop-invariant extras such as the
+    decomposed cache's ``frozen_len``).
+
+    The carry is ``(i, done_mask, last_tok, cache, pos, token_buf)``; the
+    sampler runs ON DEVICE each iteration (``sampler(logits, 1)``, plus a
+    per-round PRNG key ``fold_in(key, round0 + i)`` when the sampler
+    declares ``takes_key = True`` — the host's single-step path folds the
+    same round index, so stochastic sampling stays byte-identical across
+    block sizes).  The loop exits EARLY the first step any slot emits one
+    of its stop tokens (``stop_table`` int32 [B, W], −1-padded rows, one
+    row per slot): stops can then only land on the final returned step, so
+    the host's one-pass EOS/stop/budget bookkeeping at the block boundary
+    replays the single-step engine's decisions exactly (slots free and
+    admission retries happen at the same round they would have).
+
+    Returns ``(token_buf [max_block, B], steps_done, done_mask, cache)``;
+    rows of ``token_buf`` at or beyond ``steps_done`` are zeros.
+    """
+    takes_key = bool(getattr(sampler, "takes_key", False))
+    b = tok.shape[0]
+    buf0 = jnp.zeros((max_block, b), jnp.int32)
+    done0 = jnp.zeros((b,), bool)
+    n_steps = jnp.asarray(n_steps, jnp.int32)
+    round0 = jnp.asarray(round0, jnp.int32)
+
+    def cond(carry):
+        i, done = carry[0], carry[1]
+        return (i < n_steps) & ~done.any()
+
+    def body(carry):
+        i, _, tok, cache, pos, buf = carry
+        logits, cache = step(tok, cache, pos)
+        if takes_key:
+            nxt = sampler(logits, 1, jax.random.fold_in(key, round0 + i))
+        else:
+            nxt = sampler(logits, 1)
+        nxt = nxt.astype(jnp.int32)
+        buf = jax.lax.dynamic_update_index_in_dim(buf, nxt, i, 0)
+        done = (nxt[:, None] == stop_table).any(axis=1)
+        return (i + 1, done, nxt, cache, pos + 1, buf)
+
+    i, done, _, cache, _, buf = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), done0, tok, cache, pos, buf0))
+    return buf, i, done, cache
+
+
 _FAMILY = {
     "dense": ModelFns(transformer.init, transformer.loss_fn,
                       transformer.prefill, transformer.decode_step,

@@ -209,6 +209,28 @@ def decode_step_dkv(p: Params, cfg, token: Array, cache: Params,
     return T.logits_head(p, x, cfg)[:, 0], new_cache
 
 
+def decode_block_dkv(p: Params, cfg, token: Array, cache: Params, pos: Array,
+                     frozen_len, n_steps, stop_table: Array, key, round0, *,
+                     sampler, max_block: int):
+    """Fused multi-step decode over the decomposed slab cache: up to
+    ``n_steps`` (≤ the static ``max_block``) single-token steps inside one
+    bounded on-device loop (:func:`api.run_decode_block`), sampling on
+    device and exiting early on any stop-token emission.
+
+    ``frozen_len`` is loop-invariant by construction — the serving engine
+    caps ``n_steps`` at ``dkv_tail − max(occupancy)`` so every tail fold
+    still happens at a block boundary, on the host, at exactly the
+    occupancy the single-step engine would have folded at.
+
+    Returns ``(token_buf [max_block, B], steps_done, done_mask, cache)``.
+    """
+    from . import api
+    frozen = _frozen_vec(frozen_len, pos)
+    step = lambda t, c, ps: decode_step_dkv(p, cfg, t, c, ps, frozen)
+    return api.run_decode_block(step, sampler, max_block, token, cache,
+                                pos, n_steps, stop_table, key, round0)
+
+
 def fold_rank(rank: int, r_in: int, t_frozen: int, tl: int) -> int:
     """The rank a fold retruncates to — host-side mirror of the cap
     inside :func:`compress_tail` (configured rank, bounded by the
@@ -495,6 +517,37 @@ def decode_step_dkv_paged(p: Params, cfg, token: Array, cache: Params,
                                  upd["tail"]["v"], bt_t),
     }
     return logits, new
+
+
+def decode_block_dkv_paged(p: Params, cfg, token: Array, cache: Params,
+                           pos: Array, frozen_len, bt_u: Array, bt_t: Array,
+                           n_steps, stop_table: Array, key, round0,
+                           t_need: int, r_need: int, tail_len: int, *,
+                           sampler, max_block: int):
+    """Fused multi-step paged decode: gather each slot's pages into the
+    slab view ONCE, run the slab block loop, scatter the updated tail rows
+    back at loop exit.
+
+    The block tables and the low-rank prefix pool are loop-invariant —
+    folds and admissions (the only writers of ``bt_u``/prefix pages) run
+    at block boundaries on the host — so the per-step gather/scatter of
+    :func:`decode_step_dkv_paged` collapses to one gather + one scatter
+    per BLOCK while the in-loop arithmetic stays the slab engine's,
+    bit-for-bit (the gathered slab equals the slot engine's arrays by the
+    token-exactness contract above).
+    """
+    slab = _gathered_cache(cache, bt_u, bt_t, t_need, r_need, tail_len)
+    buf, steps, done, upd = decode_block_dkv(
+        p, cfg, token, slab, pos, frozen_len, n_steps, stop_table, key,
+        round0, sampler=sampler, max_block=max_block)
+    new = dict(cache)
+    new["tail"] = {
+        "k_pages": scatter_pages(cache["tail"]["k_pages"],
+                                 upd["tail"]["k"], bt_t),
+        "v_pages": scatter_pages(cache["tail"]["v_pages"],
+                                 upd["tail"]["v"], bt_t),
+    }
+    return buf, steps, done, new
 
 
 def compress_tail_paged(cache: Params, cfg, rank: int, frozen_len, fold,

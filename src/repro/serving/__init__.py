@@ -53,23 +53,69 @@ folds all stay device-local along the batch axis (no gather-to-host; the
 tail write is a vmapped per-slot ``dynamic_update_slice``).  Greedy
 outputs are byte-identical to the single-device engine
 (tests/test_serving_conformance.py runs the 8-host-device twin).
+
+``decode_block > 1`` fuses that many decode rounds into ONE jitted
+on-device loop (``api.run_decode_block``): sampling runs on device, the
+per-step host dispatch + sampler round-trip + python stop check are paid
+once per BLOCK, and the host applies EOS/stop/budget bookkeeping in one
+pass over the returned token buffer.  Tokens stay byte-identical to the
+single-step engine by construction: the host computes every upcoming
+boundary event deterministically (steps until the next tail fold from
+``pos``/``frozen_len``/``dkv_tail``, the tightest budget horizon, the
+next admission round) and caps the block there, and the loop exits early
+the moment any slot emits a stop token — so folds, admissions, and
+finishes all happen between blocks at exactly the rounds the single-step
+engine would have run them (DESIGN.md §11).
+
+All jitted decode/fold/splice fns DONATE their cache arguments
+(``donate_argnums``): the engine rebinds ``self.cache`` (or the paged
+pools) immediately at every call site, so XLA reuses the input buffers
+in place instead of holding both generations live.  Shape-growing calls
+(a fold extending the time axis, a widening splice) can't alias every
+leaf — jax warns "Some donated buffers were not usable" there, which is
+expected and filtered.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import time
-from typing import Callable, List, Optional, Tuple
+import warnings
+from typing import Callable, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+# Expected consequence of best-effort donation: shape-growing folds and
+# splices cannot reuse every donated leaf (see module docstring).
+warnings.filterwarnings("ignore",
+                        message="Some donated buffers were not usable")
 
 from ..configs.base import ArchConfig
 from ..engine import DecomposeEngine, EngineConfig
 from ..models import api
 
 Array = jax.Array
+
+
+def greedy_sampler(logits: Array, k: int) -> Array:
+    """Default sampler: argmax over the vocab axis.  Module-level (not a
+    per-engine lambda) so the fused decode-block executables, which are
+    lru-keyed on the sampler, are shared across engines."""
+    return jnp.argmax(logits, -1).astype(jnp.int32)
+
+
+def categorical_sampler(temperature: float = 1.0) -> Callable:
+    """Stochastic sampler for the on-device fused loop.  ``takes_key``
+    marks it as keyed: both decode paths derive the per-round key as
+    ``fold_in(stream_key, round_index)``, so any interleaving of block
+    sizes samples the identical token sequence."""
+    def sample(logits: Array, k: int, key) -> Array:
+        lg = logits.astype(jnp.float32) / max(temperature, 1e-6)
+        return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
+    sample.takes_key = True
+    return sample
 
 
 @dataclasses.dataclass
@@ -92,7 +138,9 @@ class Request:
 class EngineStats:
     prefills: int = 0                # admitted REQUESTS (one per request)
     prefill_batches: int = 0         # admission batches (jit launches)
-    decode_steps: int = 0
+    decode_steps: int = 0            # decode ROUNDS (tokens per live slot)
+    blocks: int = 0                  # decode LAUNCHES (= steps unless the
+    #                                  fused loop batches rounds per dispatch)
     tokens_out: int = 0
     tail_folds: int = 0              # per-slot compress_tail events
     stopped_eos: int = 0             # finished on a stop token
@@ -183,7 +231,9 @@ def _jitted_steps(fns: api.ModelFns, cfg: ArchConfig, max_len: int,
     (config, mesh) — XLA executables are reused instead of re-traced per
     engine.  Under a mesh both the incoming and outgoing cache trees are
     sharding-constrained to ``distributed.sharding.cache_pspec``, so GSPMD
-    keeps every per-slot update device-local along the batch axis."""
+    keeps every per-slot update device-local along the batch axis.  The
+    decode cache is DONATED: the engine rebinds ``self.cache`` at the call
+    site, so the update writes in place."""
     con = _constrain(mesh)
 
     def decode(p, t, c, pos):
@@ -194,7 +244,7 @@ def _jitted_steps(fns: api.ModelFns, cfg: ArchConfig, max_len: int,
         lg, c = fns.prefill(p, cfg, *a, max_len)
         return lg, con(c)
 
-    return jax.jit(decode), jax.jit(prefill)
+    return jax.jit(decode, donate_argnums=(2,)), jax.jit(prefill)
 
 
 @functools.lru_cache(maxsize=None)
@@ -206,7 +256,40 @@ def _jitted_dkv_decode(cfg: ArchConfig, mesh=None):
         lg, nc = DK.decode_step_dkv(p, cfg, t, con(c), pos, frozen_len=fl)
         return lg, con(nc)
 
-    return jax.jit(step)
+    return jax.jit(step, donate_argnums=(2,))
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_decode_block(fns: api.ModelFns, cfg: ArchConfig, block: int,
+                         sampler, mesh=None):
+    """Fused decode block for ANY family (dense path included): ``block``
+    is the static loop bound, the actual step count per call is traced.
+    lru-keyed on (fns, cfg, block, sampler, mesh) so equivalently
+    configured engines share one executable; the cache carry is donated."""
+    con = _constrain(mesh)
+
+    def run(p, t, c, pos, n, stops, key, r0):
+        step = lambda tk, cc, ps: fns.decode_step(p, cfg, tk, cc, ps)
+        buf, steps, done, nc = api.run_decode_block(
+            step, sampler, block, t, con(c), pos, n, stops, key, r0)
+        return buf, steps, done, con(nc)
+
+    return jax.jit(run, donate_argnums=(2,))
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_dkv_decode_block(cfg: ArchConfig, block: int, sampler,
+                             mesh=None):
+    from ..models import decomposed_kv as DK
+    con = _constrain(mesh)
+
+    def run(p, t, c, pos, fl, n, stops, key, r0):
+        buf, steps, done, nc = DK.decode_block_dkv(
+            p, cfg, t, con(c), pos, fl, n, stops, key, r0,
+            sampler=sampler, max_block=block)
+        return buf, steps, done, con(nc)
+
+    return jax.jit(run, donate_argnums=(2,))
 
 
 @functools.lru_cache(maxsize=None)
@@ -235,25 +318,32 @@ def _jitted_dkv_prefill(cfg: ArchConfig, backend: str, expansion: int,
 
 @functools.lru_cache(maxsize=None)
 def _jitted_dkv_compress(cfg: ArchConfig, rank: int, mesh=None):
+    # The incoming cache is donated: a fold GROWS the time axis, so only
+    # the same-shaped leaves (tail, factors) alias — the rest is the
+    # "not usable" warning filtered at module import.
     from ..models import decomposed_kv as DK
     con = _constrain(mesh)
     return jax.jit(lambda c, fl, fm, nf: con(DK.compress_tail(
-        con(c), cfg, rank, frozen_len=fl, fold=fm, new_frozen=nf)))
+        con(c), cfg, rank, frozen_len=fl, fold=fm, new_frozen=nf)),
+        donate_argnums=(0,))
 
 
 @functools.lru_cache(maxsize=None)
 def _jitted_splices(mesh=None):
     """Jitted cache-splice kernels (slot/src index vectors are traced, so
     one executable serves every admission with the same shape profile).
-    The LIVE side keeps its batch sharding; the fresh side is typically
-    smaller than the slot batch and stays wherever prefill left it."""
+    The LIVE side keeps its batch sharding — and is donated, since every
+    call site rebinds the engine cache to the splice result; the fresh
+    side is typically smaller than the slot batch and stays wherever
+    prefill left it."""
     from ..models import decomposed_kv as DK
     con = _constrain(mesh)
     dkv = jax.jit(lambda live, fresh, idx, src:
-                  con(DK.splice_dkv(con(live), fresh, idx, src)))
+                  con(DK.splice_dkv(con(live), fresh, idx, src)),
+                  donate_argnums=(0,))
     fam = jax.jit(lambda old, new, idx, src, cfg:
                   con(api.splice_cache(cfg, con(old), new, idx, src)),
-                  static_argnums=(4,))
+                  static_argnums=(4,), donate_argnums=(0,))
     return dkv, fam
 
 
@@ -272,15 +362,21 @@ class Engine:
                  admission: str = "per_slot",
                  dkv_exact: Optional[bool] = None,
                  eos_id: Optional[int] = None,
-                 paged: bool = False):
+                 paged: bool = False,
+                 decode_block: Optional[Union[int, str]] = None,
+                 sample_seed: int = 0):
         assert admission in ("per_slot", "gang"), admission
         self.cfg, self.params = cfg, params
         self.slots, self.max_len = slots, max_len
         self.admission = admission
         self.eos_id = eos_id             # default stop token for requests
         self.fns = api.model_fns(cfg)
-        self.sampler = sampler or (lambda lg, k: jnp.argmax(lg, -1)
-                                   .astype(jnp.int32))
+        self.sampler = sampler or greedy_sampler
+        # base PRNG key for keyed samplers (categorical_sampler): decode
+        # rounds fold stream 0, admission rounds stream 1 — both indexed
+        # by the engine's round counter, so the single-step and fused
+        # paths draw identical samples
+        self._key = jax.random.PRNGKey(sample_seed)
         # One DecomposeEngine per serving engine: backend/hook selection
         # happens here, once, and every prefill decomposition reuses it.
         # An explicitly passed knob always wins (0 DISABLES decomposed KV);
@@ -339,7 +435,25 @@ class Engine:
         self.sched = Scheduler(bucket=ecfg.sched_bucket,
                                max_admit=ecfg.sched_max_admit)
         self.admit_every = max(1, ecfg.sched_admit_every)
+        # fused decode-block length: explicit arg wins, else the engine
+        # config; "auto" resolves through the repro.tune cost model for
+        # this (slots, decode horizon, kv width) bucket.  1 = the
+        # single-step path, bit-identical to the pre-fusion engine.
+        blk = ecfg.decode_block if decode_block is None else decode_block
+        if blk == "auto":
+            from .. import tune
+            horizon = self.dkv_tail if self.dkv_rank else max_len
+            kvw = cfg.num_kv_heads * cfg.resolved_head_dim
+            blk = tune.tuned_decode_block((slots, horizon, kvw))
+        self.decode_block = max(1, int(blk))
+        if self.dkv_rank:
+            # fold cadence bounds every block — don't trace a longer loop
+            self.decode_block = min(self.decode_block, self.dkv_tail)
         self.stats = EngineStats()
+        # _round counts COMPLETED decode rounds (a fused block advances it
+        # by its step count); admission due-ness and sampler keys both
+        # index it, which is what keeps any interleaving of block sizes
+        # byte-identical to the single-step engine
         self._round = 0
 
         self._decode, self._prefill = _jitted_steps(self.fns, cfg, max_len,
@@ -379,7 +493,8 @@ class Engine:
 
     def step(self) -> List[Request]:
         """One scheduling iteration: admit if due (per the interleaving
-        policy), then decode one token on every live slot.  Returns the
+        policy), then decode — one token per live slot, or up to
+        ``decode_block`` tokens in one fused on-device loop.  Returns the
         requests that finished this step.  Wall time accrues HERE, so
         ``step()``-driven callers (benchmarks, the serve CLI loop) get the
         same tok/s accounting as ``run()``."""
@@ -388,9 +503,10 @@ class Engine:
             finished: List[Request] = []
             if self._round % self.admit_every == 0 or not any(self.live):
                 finished.extend(self._admit())
-            self._round += 1
             if any(self.live):
-                finished.extend(self._decode_round())
+                finished.extend(self._decode_rounds())
+            else:
+                self._round += 1     # idle step still advances the clock
             return finished
         finally:
             self.stats.wall_s += time.perf_counter() - t0
@@ -406,6 +522,18 @@ class Engine:
         return finished
 
     # -- internals ---------------------------------------------------------
+    def _sample_host(self, logits: Array, stream: int = 0) -> np.ndarray:
+        """Host-side sampling (admission first tokens, single-step decode).
+        Keyed samplers get ``fold_in(fold_in(key, stream), round)`` —
+        stream 0 is the decode stream the fused loop folds on device,
+        stream 1 the admission stream — so both decode paths and every
+        block interleaving draw the same tokens."""
+        if getattr(self.sampler, "takes_key", False):
+            k = jax.random.fold_in(jax.random.fold_in(self._key, stream),
+                                   self._round)
+            return np.asarray(self.sampler(logits, 1, k))
+        return np.asarray(self.sampler(logits, 1))
+
     def _stops(self, req: Request) -> frozenset:
         eos = req.eos_id if req.eos_id is not None else self.eos_id
         toks = set(req.stop_tokens)
@@ -528,14 +656,14 @@ class Engine:
         slots_idx = free[:len(batch)]
         if self.admission == "gang":
             logits = self._admit_gang(batch, slots_idx, plen, has_live)
-            nxt = np.asarray(self.sampler(logits, 1))[slots_idx]
+            nxt = self._sample_host(logits, stream=1)[slots_idx]
             fls = np.full(len(batch), plen if self.dkv_rank else 0,
                           np.int32)
         elif self.pager is not None:
             nxt, fls = self._admit_paged(batch, slots_idx, plen, looks)
         else:
             logits = self._admit_per_slot(batch, slots_idx, plen)
-            nxt = np.asarray(self.sampler(logits, 1))[:len(batch)]
+            nxt = self._sample_host(logits, stream=1)[:len(batch)]
             fls = np.full(len(batch), plen if self.dkv_rank else 0,
                           np.int32)
 
@@ -644,7 +772,7 @@ class Engine:
                 jnp.asarray(start), jnp.asarray(slen),
                 np.asarray(bt_t, np.int32), np.asarray(idx, np.int32),
                 match_len, r_ent)
-            toks_next = np.asarray(self.sampler(logits, 1))
+            toks_next = self._sample_host(logits, stream=1)
             for gi, (j, _, _) in enumerate(group):
                 nxt[j] = toks_next[gi]
             pg.slab_t = max(pg.slab_t, match_len)
@@ -678,7 +806,7 @@ class Engine:
                                  np.asarray(bt_u, np.int32),
                                  np.asarray(bt_t, np.int32),
                                  np.asarray(idx, np.int32), src)
-            toks_next = np.asarray(self.sampler(logits, 1))
+            toks_next = self._sample_host(logits, stream=1)
             for mi, j in enumerate(misses):
                 nxt[j] = toks_next[mi]
             pg.slab_t = max(pg.slab_t, plen)
@@ -806,28 +934,48 @@ class Engine:
         pg.slab_r = int(self.rank_eff[live_m].max())
         return fold
 
-    def _decode_round(self) -> List[Request]:
+    def _maybe_fold(self) -> None:
+        """Tail-fold check at a decode/block boundary (decomposed KV)."""
+        live_m = np.array([r is not None for r in self.live])
+        occ = self.pos - self.frozen_len
+        must = live_m & (occ >= self.dkv_tail)
+        if must.any():
+            # a slot's tail is full — fold it, and opportunistically
+            # co-fold every live slot at least half full: co-folded
+            # slots restart at occupancy 0 together, re-synchronizing
+            # fold cadence under staggered admissions (fold ≈ one
+            # event per TAIL decode rounds instead of one per slot).
+            # A co-folded slot's unused tail rows are zeros and fold
+            # as zero rows — exactness is unaffected.
+            fold = must | (live_m & (occ >= max(1, self.dkv_tail // 2)))
+            if self.pager is not None:
+                self._fold_slots_paged(live_m, must, fold)
+            else:
+                self._fold_slots(live_m, fold)
+
+    def _last_tokens(self) -> np.ndarray:
         tok = np.zeros((self.slots,), np.int32)
         for i, req in enumerate(self.live):
             if req is not None and req.out_tokens:
                 tok[i] = req.out_tokens[-1]
+        return tok
+
+    def _decode_rounds(self) -> List[Request]:
+        """One decode LAUNCH: the single-step round (decode_block == 1,
+        bit-identical to the pre-fusion engine) or a fused block of up to
+        ``decode_block`` rounds.  Fold checks run here, at the boundary —
+        identical cadence either way."""
         if self.dkv_rank:
-            live_m = np.array([r is not None for r in self.live])
-            occ = self.pos - self.frozen_len
-            must = live_m & (occ >= self.dkv_tail)
-            if must.any():
-                # a slot's tail is full — fold it, and opportunistically
-                # co-fold every live slot at least half full: co-folded
-                # slots restart at occupancy 0 together, re-synchronizing
-                # fold cadence under staggered admissions (fold ≈ one
-                # event per TAIL decode rounds instead of one per slot).
-                # A co-folded slot's unused tail rows are zeros and fold
-                # as zero rows — exactness is unaffected.
-                fold = must | (live_m & (occ >= max(1, self.dkv_tail // 2)))
-                if self.pager is not None:
-                    self._fold_slots_paged(live_m, must, fold)
-                else:
-                    self._fold_slots(live_m, fold)
+            self._maybe_fold()
+        if self.decode_block <= 1:
+            done = self._decode_round()
+            self._round += 1
+            return done
+        return self._decode_block_round()
+
+    def _decode_round(self) -> List[Request]:
+        tok = self._last_tokens()
+        if self.dkv_rank:
             if self.pager is not None:
                 pg = self.pager
                 logits, pg.cache = pg._decode(
@@ -844,8 +992,9 @@ class Engine:
             logits, self.cache = self._decode(self.params, jnp.asarray(tok),
                                               self.cache,
                                               jnp.asarray(self.pos))
-        nxt = np.asarray(self.sampler(logits, 1))
+        nxt = self._sample_host(logits)
         self.stats.decode_steps += 1
+        self.stats.blocks += 1
         now = time.perf_counter()
         done: List[Request] = []
         for i, req in enumerate(self.live):
@@ -859,6 +1008,112 @@ class Engine:
             # EOS / stop tokens end a request the moment they are emitted
             # (the old loop only stopped on budget or cache exhaustion,
             # so every request burned its full max_new_tokens)
+            if self._check_stop(i, req, now):
+                done.append(req)
+        return done
+
+    # -- fused block decode ------------------------------------------------
+    def _block_len(self) -> int:
+        """Steps the next fused block may run before a host-side event is
+        due.  Every horizon is DETERMINISTIC from engine state, which is
+        the fold/admission half of the token-exactness argument (stop
+        tokens — the non-deterministic half — end the block early on
+        device instead):
+
+        * budget: no live slot may decode past ``max_new_tokens`` or the
+          cache end (the single-step engine would have finished it);
+        * fold: ``dkv_tail − max(occupancy)`` steps until some tail fills
+          (folds only happen at boundaries, at the exact same occupancy);
+        * admission: with ``admit_every > 1`` and a non-empty queue, stop
+          at the next due round.  With ``admit_every == 1`` no cap is
+          needed — a queued request that admission just deferred (no free
+          slot, bucket mismatch, page pressure) can only be unblocked by
+          a slot freeing or a fold, which are boundary events themselves.
+        """
+        blk = self.decode_block
+        for i, req in enumerate(self.live):
+            if req is None:
+                continue
+            blk = min(blk,
+                      req.max_new_tokens - len(req.out_tokens),
+                      (self.max_len - 1) - int(self.pos[i]))
+        if self.dkv_rank:
+            occ = max(int(self.pos[i] - self.frozen_len[i])
+                      for i, r in enumerate(self.live) if r is not None)
+            blk = min(blk, self.dkv_tail - occ)
+        if len(self.sched) and self.admit_every > 1:
+            due = (self._round // self.admit_every + 1) * self.admit_every
+            blk = min(blk, due - self._round)
+        return max(1, blk)
+
+    def _stop_table(self) -> np.ndarray:
+        """Per-slot stop-token table for the on-device early-exit check:
+        int32 [slots, W], −1-padded (dead slots are all −1, matching no
+        sampled token).  W is the widest live stop set, so the jit shape
+        only changes when a request carries more stop tokens than any
+        before it."""
+        sets = [sorted(self._stops(r)) if r is not None else []
+                for r in self.live]
+        w = max([len(s) for s in sets] + [1])
+        tbl = np.full((self.slots, w), -1, np.int32)
+        for i, s in enumerate(sets):
+            tbl[i, :len(s)] = s
+        return tbl
+
+    def _decode_block_round(self) -> List[Request]:
+        blk = self._block_len()
+        tok = self._last_tokens()
+        stops = jnp.asarray(self._stop_table())
+        key = jax.random.fold_in(self._key, 0)      # decode sample stream
+        n, r0 = jnp.int32(blk), jnp.int32(self._round)
+        t0 = time.perf_counter()
+        if self.dkv_rank and self.pager is not None:
+            pg = self.pager
+            from .paged import _jitted_paged_decode_block
+            fn = _jitted_paged_decode_block(self.cfg, self.decode_block,
+                                            self.sampler, self.mesh)
+            buf, steps, _, pg.cache = fn(
+                self.params, jnp.asarray(tok), pg.cache,
+                jnp.asarray(self.pos), jnp.asarray(self.frozen_len),
+                jnp.asarray(pg.bt_array(pg.bt_u)),
+                jnp.asarray(pg.bt_array(pg.bt_t, pg.ntp)),
+                n, stops, key, r0, pg.slab_t, pg.slab_r, self.dkv_tail)
+        elif self.dkv_rank:
+            fn = _jitted_dkv_decode_block(self.cfg, self.decode_block,
+                                          self.sampler, self.mesh)
+            buf, steps, _, self.cache = fn(
+                self.params, jnp.asarray(tok), self.cache,
+                jnp.asarray(self.pos), jnp.asarray(self.frozen_len),
+                n, stops, key, r0)
+        else:
+            fn = _jitted_decode_block(self.fns, self.cfg, self.decode_block,
+                                      self.sampler, self.mesh)
+            buf, steps, _, self.cache = fn(
+                self.params, jnp.asarray(tok), self.cache,
+                jnp.asarray(self.pos), n, stops, key, r0)
+        steps = int(steps)
+        toks = np.asarray(buf)[:steps]              # [steps, slots], syncs
+        now = time.perf_counter()
+        # ITL under block decode: one wall measurement per LAUNCH,
+        # attributed wall/steps per token (the per-round "now − t_last"
+        # stamp would collapse to ~0 for all but the first token of a
+        # block and overstate the first)
+        per_tok = (now - t0) / max(steps, 1)
+        self.stats.decode_steps += steps
+        self.stats.blocks += 1
+        self._round += steps
+        done: List[Request] = []
+        for i, req in enumerate(self.live):
+            if req is None:
+                continue
+            req.out_tokens.extend(int(t) for t in toks[:, i])
+            self.pos[i] += steps
+            self.stats.tokens_out += steps
+            self.stats.itl_s.extend([per_tok] * steps)
+            req.t_last = now
+            # stops can only sit on the block's LAST step (early exit),
+            # so the boundary check sees exactly what the single-step
+            # engine's per-round check would have
             if self._check_stop(i, req, now):
                 done.append(req)
         return done

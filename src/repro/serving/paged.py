@@ -226,7 +226,27 @@ def _jitted_paged_decode(cfg, mesh=None):
                                           tail_len)
         return lg, con(nc)
 
-    return jax.jit(step, static_argnums=(7, 8, 9))
+    # the pools are rebound (pg.cache = …) at every call site, so the old
+    # buffers can be donated into the update
+    return jax.jit(step, static_argnums=(7, 8, 9), donate_argnums=(2,))
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_paged_decode_block(cfg, block: int, sampler, mesh=None):
+    """Fused paged decode: gather the slot slab ONCE (block tables and the
+    low-rank prefix are loop-invariant between folds), run up to ``block``
+    sampled steps on the slab, scatter only the TAIL pages back at exit
+    (the U pages / Vᵀ rows were read-only inside the loop)."""
+    con = _constrain(mesh)
+
+    def run(p, t, c, pos, fl, bt_u, bt_t, n, stops, key, r0,
+            t_need, r_need, tail_len):
+        buf, steps, done, nc = DK.decode_block_dkv_paged(
+            p, cfg, t, con(c), pos, fl, bt_u, bt_t, n, stops, key, r0,
+            t_need, r_need, tail_len, sampler=sampler, max_block=block)
+        return buf, steps, done, con(nc)
+
+    return jax.jit(run, static_argnums=(11, 12, 13), donate_argnums=(2,))
 
 
 @functools.lru_cache(maxsize=None)
@@ -238,7 +258,7 @@ def _jitted_paged_fold(cfg, rank: int, mesh=None):
                                           bt_u, bt_new, bt_t, t_need,
                                           r_need, tail_len))
 
-    return jax.jit(fold, static_argnums=(7, 8, 9))
+    return jax.jit(fold, static_argnums=(7, 8, 9), donate_argnums=(0,))
 
 
 @functools.lru_cache(maxsize=None)
@@ -274,7 +294,7 @@ def _jitted_paged_admit(mesh=None):
             },
         })
 
-    return jax.jit(admit)
+    return jax.jit(admit, donate_argnums=(0,))
 
 
 @functools.lru_cache(maxsize=None)
@@ -311,7 +331,7 @@ def _jitted_paged_suffix(cfg, mesh=None):
             },
         })
 
-    return jax.jit(hit, static_argnums=(10, 11))
+    return jax.jit(hit, static_argnums=(10, 11), donate_argnums=(2,))
 
 
 # ---------------------------------------------------------------------------

@@ -21,18 +21,20 @@ from .cache import TuningCache, default_cache, default_path, entry_key, \
 from .cost_model import (CPU_INTERPRET, V5E, DeviceModel, detect_device,
                          device_kind, predict, predict_curve)
 from .measure import measure_candidate, timeit
-from .space import (BLOCK_GRID, EXPANSION_GRID, TunableParam, TunableSpace,
-                    available_spaces, get_space, register_space)
+from .space import (BLOCK_GRID, DECODE_BLOCK_GRID, EXPANSION_GRID,
+                    TunableParam, TunableSpace, available_spaces, get_space,
+                    register_space)
 from .tuner import (DEFAULT_PRUNE, TuneResult, candidates_for, pretune,
-                    resolve_backend, tune, tune_backend, tuned_expansion)
+                    resolve_backend, tune, tune_backend, tuned_decode_block,
+                    tuned_expansion)
 
 __all__ = [
-    "BLOCK_GRID", "CPU_INTERPRET", "DEFAULT_PRUNE", "DeviceModel",
-    "EXPANSION_GRID",
+    "BLOCK_GRID", "CPU_INTERPRET", "DECODE_BLOCK_GRID", "DEFAULT_PRUNE",
+    "DeviceModel", "EXPANSION_GRID",
     "TunableParam", "TunableSpace", "TuneResult", "TuningCache", "V5E",
     "available_spaces", "candidates_for", "default_cache", "default_path",
     "detect_device", "device_kind", "entry_key", "get_space",
     "measure_candidate", "predict", "predict_curve", "pretune",
     "register_space", "resolve_backend", "shape_bucket", "timeit", "tune",
-    "tune_backend", "tuned_expansion",
+    "tune_backend", "tuned_decode_block", "tuned_expansion",
 ]

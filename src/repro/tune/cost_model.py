@@ -163,14 +163,48 @@ KERNEL_TERMS: Dict[str, Callable[[Sequence[int], int, Mapping[str, Any]],
     "dkv_attention": _terms_dkv_attention,
 }
 
+#: Host→device dispatch + sync cost of ONE decode launch (python driver,
+#: jit call, logits device→host).  Dominant on small models; the fused
+#: loop divides it by the block length.
+HOST_DISPATCH_S = 2e-4
+
+
+def _predict_decode_block(shape: Sequence[int], dtb: int,
+                          cand: Mapping[str, Any],
+                          dev: DeviceModel) -> float:
+    """Per-TOKEN seconds of the fused serving decode loop at block length
+    k, for shape (slots b, decode horizon t, kv row width w).
+
+    ``t_step`` is the roofline time of one decode step (stream the [b,t,w]
+    K/V working set once, 4·b·t·w flops of attention contraction); on top
+    the host dispatch amortizes as ``HOST_DISPATCH_S / min(k, t)`` (a
+    block can't outrun the fold/budget horizon ``t``) and a small linear
+    penalty models the wasted tail of over-long blocks (early exits and
+    horizon caps throw away trace length).  Non-increasing amortization +
+    non-decreasing penalty ⇒ unimodal in k along the power-of-two grid,
+    matching the expansion model's pruning contract."""
+    b, t, w = shape
+    k = int(cand["block"])
+    if k < 1:
+        raise ValueError(f"block must be >= 1, got {k}")
+    t_step = max(2 * b * t * w * dtb / dev.hbm_bw,
+                 4.0 * b * t * w / dev.peak_flops)
+    k_eff = min(k, max(1, t))
+    overshoot = (k - k_eff) / float(k)   # trace beyond any usable horizon
+    return t_step + HOST_DISPATCH_S / k_eff \
+        + t_step * overshoot + 1e-7 * k
+
 
 def predict(kernel: str, shape: Sequence[int], dtype: Any,
             cand: Mapping[str, Any],
             device: DeviceModel = None) -> float:
     """Predicted seconds for one launch of ``kernel`` at operating point
     ``cand`` — max(memory term, compute term), unimodal in the expansion
-    factor along a power-of-two grid."""
+    factor along a power-of-two grid.  (For the ``decode_block`` pseudo
+    kernel the objective is per-token seconds of the serving loop.)"""
     dev = device or detect_device()
+    if kernel == "decode_block":
+        return _predict_decode_block(shape, dtype_bytes(dtype), cand, dev)
     try:
         terms = KERNEL_TERMS[kernel]
     except KeyError:

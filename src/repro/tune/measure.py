@@ -120,11 +120,44 @@ def _bench_dkv_attention(shape, dtype, cand) -> Callable[[], Any]:
     return run
 
 
+def _bench_decode_block(shape, dtype, cand) -> Callable[[], Any]:
+    """Serving decode-loop proxy, normalized PER TOKEN: every candidate
+    decodes the same 32 tokens, block length k just repartitions them into
+    ``ceil(32/k)`` jitted ``fori_loop`` launches (each launch blocks, like
+    the engine's per-block host sync), so the measured per-call medians
+    are comparable across k after the caller's own normalization — the
+    tuner minimizes median seconds per call, hence we fold the
+    launch-count difference into the closure by running ALL launches of
+    one 32-token decode per call."""
+    b, t, w = shape
+    k = int(cand["block"])
+    tokens = 32
+    launches = max(1, -(-tokens // k))
+    kv = _rand(0, (b, t, w), dtype)
+    q0 = _rand(1, (b, w), jnp.float32)
+
+    @jax.jit
+    def block(q, kv):
+        def body(_, q):
+            s = jnp.einsum("bw,btw->bt", q, kv.astype(jnp.float32))
+            p = jax.nn.softmax(s, axis=-1)
+            return jnp.einsum("bt,btw->bw", p, kv.astype(jnp.float32))
+        return jax.lax.fori_loop(0, k, body, q)
+
+    def run():
+        q = q0
+        for _ in range(launches):
+            q = jax.block_until_ready(block(q, kv))
+        return q
+    return run
+
+
 _BENCH = {
     "lanczos_reorth": _bench_lanczos_reorth,
     "matvec_expand": _bench_matvec_expand,
     "lowrank_matmul": _bench_lowrank_matmul,
     "dkv_attention": _bench_dkv_attention,
+    "decode_block": _bench_decode_block,
 }
 
 

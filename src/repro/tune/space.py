@@ -101,3 +101,13 @@ def _import_kernel_spaces() -> None:
 # there and fig12's model section covers the long tail).
 EXPANSION_GRID = (1, 2, 4, 8, 16, 32)
 BLOCK_GRID = (128, 256, 512)
+
+# Fused serving decode: steps per device launch.  Not a kernel — the
+# serving loop registers here directly (there is no kernels module to own
+# it).  The grid mirrors its own U-curve: 1 is the classic per-token
+# dispatch, large blocks amortize host round-trips but overshoot fold /
+# budget horizons (the host then caps the traced bound per block).
+DECODE_BLOCK_GRID = (1, 2, 4, 8, 16, 32)
+register_space(TunableSpace("decode_block", (
+    TunableParam("block", DECODE_BLOCK_GRID, 8),
+)))

@@ -194,6 +194,22 @@ def tuned_expansion(shape: Sequence[int], dtype: Any = "float32",
                             backend, default_cache().path)
 
 
+@functools.lru_cache(maxsize=None)
+def _tuned_decode_block(bucket: Tuple[int, ...], dtype: str,
+                        cache_path: str) -> int:
+    res = tune("decode_block", bucket, dtype)
+    return int(res.best["block"])
+
+
+def tuned_decode_block(shape: Sequence[int], dtype: Any = "float32") -> int:
+    """The fused decode-block length N the serving engine should run for
+    this (slots, decode horizon, kv width) bucket — answers the engine's
+    ``decode_block="auto"`` the same way ``tuned_expansion`` answers
+    ``expansion="auto"``."""
+    return _tuned_decode_block(shape_bucket(shape), str(dtype),
+                               default_cache().path)
+
+
 _BACKEND_KEY_SUFFIX = "engine_backend"
 
 

@@ -485,6 +485,166 @@ def test_paged_hit_survives_same_batch_eviction(dense_model):
     assert eng.pager.alloc.free_pages == eng.pager.num_pages - 1
 
 
+# ---------------------------------------------------------------------------
+# Fused decode-loop conformance (single-dispatch multi-token blocks)
+# ---------------------------------------------------------------------------
+
+FUSED_BLOCKS = (2, 3, 8, 32)
+
+
+def _serve_fused(cfg, params, prompts, *, block, paged=False, slots=2,
+                 eos_id=None, mesh=None, dkv=True, max_new=MESH_NEW):
+    """All prompts submitted up front with slots < len(prompts): later
+    requests are admitted organically as earlier ones finish, so block
+    boundaries, folds, and admission rounds all interleave."""
+    from repro.engine import DecomposeEngine, EngineConfig
+    kw = {}
+    if dkv:
+        de = DecomposeEngine(EngineConfig(kv_rank=DKV_RANK, kv_tail=DKV_TAIL,
+                                          kv_page=4, decode_block=block,
+                                          mesh=mesh))
+        kw = dict(decompose_kv_rank=DKV_RANK, dkv_tail=DKV_TAIL,
+                  decompose_engine=de, paged=paged)
+    eng = Engine(cfg, params, slots=slots, max_len=MAX_LEN,
+                 eos_id=eos_id, **kw, **({} if dkv
+                                         else {"decode_block": block}))
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=max_new))
+    done = eng.run()
+    assert sorted(r.uid for r in done) == list(range(len(prompts)))
+    return {r.uid: r.out_tokens for r in done}, eng
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_fused_decode_token_exact(dense_model, paged):
+    """THE fused gate: every block length produces byte-identical tokens
+    to the single-step engine, across tail-fold boundaries and organic
+    staggered admissions (slots < requests), slot AND paged."""
+    cfg, params = dense_model
+    prompts = _prompts(cfg, lens=MESH_PROMPT_LENS)
+    base, e1 = _serve_fused(cfg, params, prompts, block=1, paged=paged)
+    assert e1.stats.tail_folds > 0           # folds were crossed
+    assert e1.stats.blocks == e1.stats.decode_steps
+    for blk in FUSED_BLOCKS:
+        got, eb = _serve_fused(cfg, params, prompts, block=blk, paged=paged)
+        assert got == base, f"block={blk} diverged: {got} vs {base}"
+        assert eb.stats.decode_steps == e1.stats.decode_steps
+        assert eb.stats.blocks < e1.stats.blocks, \
+            "fused run should launch fewer blocks than rounds"
+        assert eb.stats.tail_folds == e1.stats.tail_folds
+    if paged:                                # no page leaks under fusion
+        assert eb.pager.alloc.free_pages == eb.pager.num_pages - 1
+        assert eb.pager.talloc.free_pages == eb.pager.num_tail_pages - 1
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_fused_decode_eos_mid_block(dense_model, paged):
+    """A stop token sampled mid-block ends the block early ON DEVICE, so
+    the request finishes at the same round (and with the same tokens) as
+    the single-step engine — no overshoot past EOS."""
+    cfg, params = dense_model
+    prompts = _prompts(cfg, lens=MESH_PROMPT_LENS)
+    probe, _ = _serve_fused(cfg, params, prompts, block=1, paged=paged)
+    # pin an eos that the greedy stream REALLY emits, mid-sequence, so
+    # both engines must cut that request short at the same position
+    eos = probe[0][len(probe[0]) // 2]
+    base, e1 = _serve_fused(cfg, params, prompts, block=1, paged=paged,
+                            eos_id=eos)
+    assert e1.stats.stopped_eos >= 1
+    assert len(base[0]) < len(probe[0])      # it actually cut short
+    for blk in FUSED_BLOCKS:
+        got, eb = _serve_fused(cfg, params, prompts, block=blk, paged=paged,
+                               eos_id=eos)
+        assert got == base, f"block={blk} with eos diverged"
+        assert eb.stats.stopped_eos == e1.stats.stopped_eos
+        assert eb.stats.decode_steps == e1.stats.decode_steps
+
+
+def test_fused_decode_dense_family(dense_model):
+    """The dense (non-decomposed) cache path through the fused loop:
+    budget horizons only, no folds."""
+    cfg, params = dense_model
+    prompts = _prompts(cfg, lens=MESH_PROMPT_LENS)
+    base, _ = _serve_fused(cfg, params, prompts, block=1, dkv=False)
+    for blk in (4, 32):
+        got, eb = _serve_fused(cfg, params, prompts, block=blk, dkv=False)
+        assert got == base, f"dense block={blk} diverged"
+        assert eb.stats.blocks < eb.stats.decode_steps
+
+
+def test_fused_itl_and_blocks_accounting(dense_model):
+    """Satellite: under block decode every emitted token gets one ITL
+    sample (wall/steps per token of its block), tokens_out is exact, and
+    the blocks counter counts LAUNCHES, not rounds."""
+    cfg, params = dense_model
+    prompts = _prompts(cfg, lens=MESH_PROMPT_LENS)
+    _, eng = _serve_fused(cfg, params, prompts, block=8)
+    s = eng.stats
+    assert s.blocks < s.decode_steps
+    assert len(s.itl_s) == s.tokens_out      # one ITL sample per decode tok
+    assert all(dt >= 0 for dt in s.itl_s)
+    # each request's first token comes from admission (counted as TTFT),
+    # the other max_new − 1 from decode rounds
+    assert s.tokens_out == sum(MESH_NEW - 1 for _ in prompts)
+
+
+_FUSED_SHARDED_SCRIPT = textwrap.dedent("""
+    import os, sys, json
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, numpy as np
+    sys.path.insert(0, os.path.dirname(os.path.abspath(sys.argv[2])))
+    from test_serving_conformance import MESH_PROMPT_LENS, _serve_fused
+    from repro.configs import all_archs
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import model_fns
+
+    assert len(jax.devices()) == 8
+    cfg = all_archs()["deepseek-7b"].reduced()
+    params = model_fns(cfg).init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(0, cfg.vocab, n, dtype=np.int32)
+               for n in MESH_PROMPT_LENS]
+    mesh = make_host_mesh(8, 1)
+    out = {}
+    for paged in (False, True):
+        toks, eng = _serve_fused(cfg, params, prompts, block=4,
+                                 paged=paged, slots=8, mesh=mesh)
+        key = "paged" if paged else "slot"
+        out[key] = {str(u): t for u, t in toks.items()}
+        out[key + "_blocks"] = eng.stats.blocks
+        out[key + "_steps"] = eng.stats.decode_steps
+        if not paged:
+            out["ku_nshards"] = len(eng.cache["k_u"].addressable_shards)
+    json.dump(out, open(sys.argv[1], "w"))
+""")
+
+
+def test_fused_sharded_byte_identical_to_1_device(dense_model, tmp_path):
+    """8-device fused twin: block-4 fused decode on the (8, 1) mesh
+    (subprocess) is byte-identical to this process's 1-device SINGLE-STEP
+    engine — fusion and sharding compose without perturbing tokens."""
+    cfg, params = dense_model
+    prompts = _prompts(cfg, lens=MESH_PROMPT_LENS)
+    local, _ = _serve_fused(cfg, params, prompts, block=1, slots=8)
+
+    out = tmp_path / "fused_sharded.json"
+    env = dict(os.environ,
+               PYTHONPATH="src" + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+    env.pop("XLA_FLAGS", None)
+    subprocess.run(
+        [sys.executable, "-c", _FUSED_SHARDED_SCRIPT, str(out),
+         os.path.abspath(__file__)],
+        check=True, env=env, timeout=900,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    got = json.load(open(out))
+    assert got["ku_nshards"] == 8
+    for key in ("slot", "paged"):
+        assert {int(k): v for k, v in got[key].items()} == local, \
+            f"8-device fused {key} tokens diverged"
+        assert got[key + "_blocks"] < got[key + "_steps"]
+
+
 def test_exact_svd_vs_lanczos_near_full_rank():
     """§2.3: on a KV-like block (decaying spectrum — real K/V rows are
     strongly correlated), direct SVD (exact=True) and Lanczos agree as
