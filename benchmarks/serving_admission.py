@@ -1,4 +1,5 @@
-"""Serving admission A/B: per-slot splice admission vs legacy gang.
+"""Serving admission A/B: per-slot splice admission vs legacy gang, and
+async vs synchronous prefill under staggered long-prompt arrivals.
 
 The tentpole claim of the per-slot serving engine: under STAGGERED
 arrivals, gang admission of the decomposed-KV cache (block until every
@@ -7,6 +8,20 @@ queue time that per-slot splice admission does not.  Both engines replay
 the SAME arrival schedule (requests keyed on engine step index) on the
 same model/weights; reported are end-to-end tokens/sec, mean first-token
 latency, and total scheduling steps.
+
+The SECOND A/B targets the prefill/decode disaggregation (DESIGN.md
+§12): short streams decode while LONG prompts (a full forward +
+Lanczos decomposition each) arrive mid-flight.  The synchronous engine
+serializes each admission into the decode loop, so every in-flight
+stream's ITL spikes by the whole prefill; ``prefill_async=True``
+dispatches the prefill and keeps decoding, splicing when the result
+comes ready — p99 ITL is the number that moves.  The p99 assert is
+enforced only when the backend can actually overlap independent
+executables (``overlap_capable`` probe, recorded in the artifact): on a
+single-core host CPU PJRT runs executables sequentially, so the decode
+still queues behind the prefill no matter when it was dispatched —
+there the artifact records both p99s without asserting, same policy as
+``serving_sharded.py``'s host_cores gate.
 
 CLI (writes the CI artifact):
 
@@ -54,6 +69,61 @@ def _simulate(eng, arrivals: Dict[int, list], total: int,
     wall = time.perf_counter() - t0
     assert len(done) == total, f"only {len(done)}/{total} finished"
     return wall, step
+
+
+def _p99(xs: List[float]) -> float:
+    return float(np.percentile(np.asarray(xs), 99)) if xs else 0.0
+
+
+def _overlap_capable() -> bool:
+    """Can this backend make progress on an independent small executable
+    while a large one is in flight?  Times a tiny jitted op alone, then
+    the same op dispatched BEHIND a large in-flight matmul chain: on a
+    runtime with concurrent execution streams (or spare host cores) the
+    two are comparable; on a serializing single-core CPU backend the
+    small op waits for the whole matmul and comes back orders of
+    magnitude slower.  Min-of-3 on both sides to shed scheduler noise."""
+    import jax
+    import jax.numpy as jnp
+    big = jax.jit(lambda x: ((x @ x) @ x) @ x)
+    small = jax.jit(lambda v: v * 2 + 1)
+    x = jnp.ones((1024, 1024), jnp.float32)
+    v = jnp.ones((256,), jnp.float32)
+    big(x).block_until_ready()
+    small(v).block_until_ready()
+    alone = min(_timed(lambda: small(v).block_until_ready())
+                for _ in range(3))
+    behind = []
+    for _ in range(3):
+        h = big(x)
+        behind.append(_timed(lambda: small(v).block_until_ready()))
+        h.block_until_ready()
+    return min(behind) < max(alone, 1e-6) * 10
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def _async_arrivals(cfg, slots: int, n_long: int, stagger: int,
+                    long_len: int, max_new: int) -> Dict[int, list]:
+    """Short decode streams from step 0; LONG prompts (full prefill +
+    Lanczos each) land mid-decode at ``stagger``-step intervals."""
+    from repro.serving import Request
+    rng = np.random.RandomState(1)
+    sched: Dict[int, list] = {0: []}
+    for i in range(slots):
+        sched[0].append(Request(
+            uid=i, prompt=rng.randint(0, cfg.vocab, 8, dtype=np.int32),
+            max_new_tokens=max_new * 2))
+    for k in range(n_long):
+        sched.setdefault(3 + k * stagger, []).append(Request(
+            uid=slots + k,
+            prompt=rng.randint(0, cfg.vocab, long_len, dtype=np.int32),
+            max_new_tokens=max_new))
+    return sched
 
 
 def run(quick: bool = False, json_path: str = None) -> List[Row]:
@@ -110,11 +180,67 @@ def run(quick: bool = False, json_path: str = None) -> List[Row]:
                  f"tokens_per_s_speedup={report['speedup_tokens_per_s']:.2f}x;"
                  f"ttft_improvement="
                  f"{report['ttft_ratio_gang_over_per_slot']:.2f}x"))
+
+    # -- async vs sync prefill: p99 ITL under staggered long admissions --
+    n_long = 3 if quick else 5
+    long_len = 64 if quick else 96
+    stagger_l = 4
+    total = slots + n_long
+    overlap = _overlap_capable()
+    ab: Dict[str, dict] = {}
+    for label, akw in (("sync", {}),
+                       ("async", dict(prefill_async=True,
+                                      ready_order="ready"))):
+        mk = lambda: Engine(cfg, params, slots=slots, max_len=max_len,
+                            decompose_kv_rank=8, dkv_tail=16, **akw)
+        _simulate(mk(), _async_arrivals(cfg, slots, n_long, stagger_l,
+                                        long_len, max_new), total)
+        runs = []
+        for _ in range(3):
+            eng = mk()
+            wall, steps = _simulate(
+                eng, _async_arrivals(cfg, slots, n_long, stagger_l,
+                                     long_len, max_new), total)
+            runs.append((wall, steps, eng.stats))
+        runs.sort(key=lambda t: t[0])
+        wall, steps, s = runs[len(runs) // 2]
+        ab[label] = {
+            "wall_s": wall, "sched_steps": steps,
+            "tokens_out": s.tokens_out,
+            "tokens_per_s": s.tokens_out / max(wall, 1e-9),
+            "p99_itl_s": _p99(s.itl_s), "mean_itl_s": s.mean_itl_s,
+            "mean_ttft_s": s.mean_ttft_s,
+            "mean_ttft_queue_s": s.mean_ttft_queue_s,
+            "mean_ttft_compute_s": s.mean_ttft_compute_s,
+            "prefill_inflight_peak": s.prefill_inflight_peak,
+            "stalls": s.stalls,
+        }
+        rows.append((f"serving_admission/{label}_prefill/"
+                     f"l{n_long}x{long_len}",
+                     wall * 1e6,
+                     f"p99_itl_ms={ab[label]['p99_itl_s']*1e3:.2f};"
+                     f"mean_itl_ms={ab[label]['mean_itl_s']*1e3:.2f};"
+                     f"inflight_peak={s.prefill_inflight_peak}"))
+    ratio = ab["sync"]["p99_itl_s"] / max(ab["async"]["p99_itl_s"], 1e-9)
+    report["async_ab"] = {
+        "n_long": n_long, "long_prompt_len": long_len,
+        "stagger_steps": stagger_l, "overlap_capable": overlap,
+        "modes": ab, "p99_itl_ratio_sync_over_async": ratio,
+        "p99_gate": "enforced" if overlap else "skipped:no_overlap",
+    }
+    rows.append(("serving_admission/async_vs_sync_p99_itl", 0.0,
+                 f"p99_itl_improvement={ratio:.2f}x;"
+                 f"gate={'enforced' if overlap else 'skipped:no_overlap'}"))
     if json_path:
         import os
         os.makedirs(os.path.dirname(json_path) or ".", exist_ok=True)
         with open(json_path, "w") as f:
             json.dump(report, f, indent=2)
+    # the disaggregation claim, asserted only where the runtime can
+    # actually overlap executables (artifact carries both p99s either way)
+    if overlap:
+        assert ratio > 1.0, \
+            f"async prefill did not improve p99 ITL: {ratio:.2f}x"
     return rows
 
 

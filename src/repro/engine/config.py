@@ -61,6 +61,12 @@ class EngineConfig:
                         loop; N > 1 runs up to N steps inside one jitted
                         on-device loop (token-exact — see DESIGN.md §11);
                         ``"auto"`` picks N through ``repro.tune``.
+    * ``prefill_async`` — serving: dispatch admissions (forward prefill +
+                        Lanczos, or prefix-suffix prefill) asynchronously
+                        and splice results into slots only when ready, so
+                        decode never blocks on an in-flight decomposition
+                        (vLLM-style P/D disaggregation — DESIGN.md §12).
+                        False (default) keeps the synchronous path.
     * ``mesh``        — optional ``jax.sharding.Mesh``: the engine runs its
                         jitted Lanczos pipeline DP-sharded over the batch
                         axis (explicit in/out shardings; ``shard_map`` for
@@ -86,6 +92,7 @@ class EngineConfig:
     sched_admit_every: int = 1
     sched_max_admit: int = 0
     decode_block: Union[int, str] = 1   # fused decode steps/launch, or "auto"
+    prefill_async: bool = False         # async P/D split (serving.Engine)
     mesh: Optional[Any] = None          # jax.sharding.Mesh (hashable)
 
     def __post_init__(self):

@@ -86,6 +86,18 @@ def main() -> None:
                          "'auto' (tuner-resolved).  1 = classic per-token "
                          "dispatch; N>1 runs up to N steps in one jitted "
                          "on-device loop, token-identical output")
+    ap.add_argument("--prefill-async", action="store_true",
+                    help="disaggregated prefill/decode: admissions "
+                         "(forward prefill + Lanczos) dispatch "
+                         "asynchronously and splice into slots when "
+                         "ready — decode never blocks on an in-flight "
+                         "decomposition")
+    ap.add_argument("--ready-order", default="ready",
+                    choices=("ready", "deterministic"),
+                    help="async splice order: 'ready' (as results "
+                         "complete) or 'deterministic' (inline at the "
+                         "dispatch round — byte-identical tokens to the "
+                         "synchronous engine, for conformance A/Bs)")
     args = ap.parse_args()
 
     mesh = parse_mesh(args.mesh)
@@ -135,7 +147,8 @@ def main() -> None:
                  decompose_kv_rank=args.decompose_kv_rank,
                  dkv_tail=args.dkv_tail, decompose_engine=dengine,
                  admission=args.admission, paged=args.paged,
-                 eos_id=args.eos_id)
+                 eos_id=args.eos_id, prefill_async=args.prefill_async,
+                 ready_order=args.ready_order)
 
     rng = np.random.RandomState(0)
     for i in range(args.requests):
@@ -149,16 +162,21 @@ def main() -> None:
     s = eng.stats
     mesh_desc = "none" if mesh is None else \
         "x".join(str(mesh.shape[a]) for a in mesh.axis_names)
+    async_desc = f"async({eng.ready_order})" if eng.prefill_async else "sync"
     print(f"engine: {dengine}  admission={args.admission}  "
           f"mesh={mesh_desc} ({len(jax.devices())} devices)  "
-          f"decode_block={eng.decode_block}")
+          f"decode_block={eng.decode_block}  prefill={async_desc}")
     print(f"stats: prefills={s.prefills} batches={s.prefill_batches} "
           f"decode_steps={s.decode_steps} blocks={s.blocks} "
-          f"folds={s.tail_folds} "
+          f"folds={s.tail_folds} stalls={s.stalls} "
+          f"inflight_peak={s.prefill_inflight_peak} "
           f"tokens={s.tokens_out} stopped_eos={s.stopped_eos} "
           f"stopped_budget={s.stopped_budget} wall={s.wall_s:.2f}s "
           f"tok/s={s.tokens_out / max(s.wall_s, 1e-9):.1f} "
-          f"ttft={s.mean_ttft_s * 1e3:.1f}ms itl={s.mean_itl_s * 1e3:.1f}ms")
+          f"ttft={s.mean_ttft_s * 1e3:.1f}ms "
+          f"(queue={s.mean_ttft_queue_s * 1e3:.1f}ms "
+          f"compute={s.mean_ttft_compute_s * 1e3:.1f}ms) "
+          f"itl={s.mean_itl_s * 1e3:.1f}ms")
     if eng.pager is not None:
         pg = eng.pager
         line = (f"paged: page={pg.page} pool={pg.num_pages}p "

@@ -161,6 +161,34 @@ def splice_cache(cfg: ArchConfig, old, new, slot_indices,
     return jax.tree_util.tree_map(one, old, new, axes)
 
 
+def tree_ready(tree) -> bool:
+    """Non-blocking done-probe over a pytree of in-flight jax arrays.
+
+    ``jax.Array.is_ready()`` asks the runtime whether the producing
+    computation has finished WITHOUT synchronizing on it — this is the
+    cheap fence the async serving engine polls at step boundaries to
+    decide whether an in-flight prefill/Lanczos result can be spliced.
+    Leaves without ``is_ready`` (numpy arrays, python scalars) count as
+    ready."""
+    for leaf in jax.tree_util.tree_leaves(tree):
+        probe = getattr(leaf, "is_ready", None)
+        if probe is not None and not probe():
+            return False
+    return True
+
+
+def splice_on_ready(cfg: ArchConfig, old, new, slot_indices,
+                    src_indices=None):
+    """Splice-if-done: returns ``splice_cache(...)`` when every leaf of
+    ``new`` is ready (its producing prefill has finished on device), or
+    ``None`` — meaning "not yet, keep decoding" — without blocking.
+    The async engine's ticket pool is built on this entry point's
+    probe+splice pairing."""
+    if not tree_ready(new):
+        return None
+    return splice_cache(cfg, old, new, slot_indices, src_indices)
+
+
 @dataclasses.dataclass(frozen=True)
 class DecomposedFns:
     """Decomposed-execution surface, bound to ONE DecomposeEngine.

@@ -67,6 +67,27 @@ the moment any slot emits a stop token — so folds, admissions, and
 finishes all happen between blocks at exactly the rounds the single-step
 engine would have run them (DESIGN.md §11).
 
+``prefill_async=True`` disaggregates prefill from decode (vLLM-style
+P/D split, DESIGN.md §12): ``_admit`` only DISPATCHES the prefill —
+forward + Lanczos for misses, tail-only suffix prefill for prefix-cache
+hits — as a :class:`PrefillTicket` into the engine's prefill pool, with
+the target slots reserved and (paged mode) the pages/refs already held,
+then returns to the decode loop.  JAX dispatch is asynchronous, so the
+Lanczos factorization runs device-side while live slots keep decoding;
+the ticket's results are spliced into the reserved slots at a later step
+boundary once ``api.tree_ready`` (a non-blocking ``Array.is_ready``
+probe over the result tree) reports them done — decode never blocks on
+an in-flight decomposition.  ``ready_order="ready"`` splices tickets as
+they complete (dispatch order among the simultaneously-ready);
+``ready_order="deterministic"`` completes every ticket inline at its
+dispatch round — the synchronous engine's schedule driven through the
+identical dispatch/complete machinery, which is the conformance mode:
+tokens are byte-identical to ``prefill_async=False``
+(tests/test_serving_async.py, slot AND paged, single AND fused decode,
+1 and 8 devices).  ``cancel_pending`` unwinds in-flight tickets:
+reserved slots free, page refs release, requests requeue in arrival
+order.
+
 All jitted decode/fold/splice fns DONATE their cache arguments
 (``donate_argnums``): the engine rebinds ``self.cache`` (or the paged
 pools) immediately at every call site, so XLA reuses the input buffers
@@ -81,7 +102,7 @@ import dataclasses
 import functools
 import time
 import warnings
-from typing import Callable, List, Optional, Tuple, Union
+from typing import Any, Callable, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -127,8 +148,11 @@ class Request:
     stop_tokens: Tuple[int, ...] = ()   # extra stop tokens
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    seq: int = -1                    # scheduler arrival stamp (FIFO key —
+    #                                  deferral requeues merge on it)
     # -- latency accounting (monotonic perf_counter stamps, 0.0 = not yet)
     t_submit: float = 0.0
+    t_dispatch: float = 0.0          # prefill launched (queue wait ends)
     t_first: float = 0.0             # first token emitted (prefill sample)
     t_last: float = 0.0              # most recent token
     t_done: float = 0.0
@@ -147,15 +171,33 @@ class EngineStats:
     stopped_budget: int = 0          # finished on max_new_tokens / max_len
     prefix_hits: int = 0             # admissions served from the prefix cache
     prefix_misses: int = 0           # lookups that fell through to prefill
+    stalls: int = 0                  # admissions deferred on page capacity
+    prefill_inflight_peak: int = 0   # max concurrently in-flight tickets
+    #                                  (async mode; 0 under sync admission)
     wall_s: float = 0.0              # accrued PER step() — benchmarks and
     #                                  the serve CLI driving step() directly
     #                                  see real tok/s, not inf
     ttft_s: List[float] = dataclasses.field(default_factory=list)
+    # TTFT split (aligned 1:1 with ttft_s): queue wait (submit → prefill
+    # dispatch) vs prefill compute (dispatch → first token).  The async
+    # A/B compares queue wait — compute is the same device work either way.
+    ttft_queue_s: List[float] = dataclasses.field(default_factory=list)
+    ttft_compute_s: List[float] = dataclasses.field(default_factory=list)
     itl_s: List[float] = dataclasses.field(default_factory=list)
 
     @property
     def mean_ttft_s(self) -> float:
         return sum(self.ttft_s) / len(self.ttft_s) if self.ttft_s else 0.0
+
+    @property
+    def mean_ttft_queue_s(self) -> float:
+        return sum(self.ttft_queue_s) / len(self.ttft_queue_s) \
+            if self.ttft_queue_s else 0.0
+
+    @property
+    def mean_ttft_compute_s(self) -> float:
+        return sum(self.ttft_compute_s) / len(self.ttft_compute_s) \
+            if self.ttft_compute_s else 0.0
 
     @property
     def mean_itl_s(self) -> float:
@@ -170,15 +212,32 @@ class Scheduler:
     bucket), so one admission batch compiles exactly one (batch, plen)
     shape.  Prompt lengths round up to multiples of ``bucket``; admitted
     batch size is capped at ``max_admit`` (0 = number of free slots).
+
+    Every submission is stamped with a monotonically increasing arrival
+    ``seq``; :meth:`requeue` merges a deferred batch back on that stamp,
+    so a deferral can never leapfrog requests that arrived between the
+    batch's members (the old front-insertion reordered cross-bucket:
+    taking [a, c] out of [a(16), b(32), c(16)] and pushing the batch back
+    to the front yielded [a, c, b] — c jumped b's place in line).
     """
 
     def __init__(self, bucket: int = 16, max_admit: int = 0):
         self.bucket = max(1, bucket)
         self.max_admit = max_admit
         self._q: List[Request] = []
+        self._seq = 0
 
     def submit(self, req: Request) -> None:
+        if req.seq < 0:
+            req.seq = self._seq
+            self._seq += 1
         self._q.append(req)
+
+    def requeue(self, batch: List[Request]) -> None:
+        """Return a deferred (or cancelled) batch to the queue in ARRIVAL
+        order — a stable merge on the submission stamp, not a front
+        insertion."""
+        self._q = sorted(self._q + list(batch), key=lambda r: r.seq)
 
     def __len__(self) -> int:
         return len(self._q)
@@ -198,17 +257,53 @@ class Scheduler:
         want = self.bucket_of(len(self._q[0].prompt))
         take: List[Request] = []
         keep: List[Request] = []
+        # Ride-along fairness: a later same-bucket request may join the
+        # head's batch only while a slot remains for every OLDER skipped
+        # bucket — each will want its own launch this admission round.
+        # Without the reservation, a young ride-along could take the last
+        # free slot from an older other-bucket request and push its first
+        # token a full admission round out (head-bucket starvation).
+        skipped = set()
         for r in self._q:
-            if len(take) < cap and self.bucket_of(len(r.prompt)) == want:
+            bk = self.bucket_of(len(r.prompt))
+            if bk == want and len(take) + len(skipped) < cap:
                 take.append(r)
             else:
                 keep.append(r)
+                if bk != want:
+                    skipped.add(bk)
         self._q = keep
         return take
 
 
 def _pow2(n: int) -> int:
     return 1 << max(0, n - 1).bit_length()
+
+
+@dataclasses.dataclass
+class PrefillTicket:
+    """One in-flight admission launch (the prefill side of the P/D split).
+
+    Created at DISPATCH time: the prefill (forward + Lanczos, or a
+    prefix-hit suffix pass) has been launched on device, the target slots
+    are reserved, and — paged mode — the pages are already allocated and
+    the prefix-hit refs held, so nothing the decode loop does during the
+    async window can invalidate the launch.  ``probe`` is the result tree
+    (``api.tree_ready`` gives a non-blocking done check); ``complete``
+    materializes the results (splice + first-token sample — the only
+    blocking point) and ``cancel`` unwinds the reservation (slots free,
+    pages/refs release) without ever blocking on the device.
+    """
+    requests: List[Request]
+    slots: List[int]
+    plen: int
+    probe: Any                       # pytree of in-flight jax arrays
+    complete: Callable               # () -> (first_tokens, frozen_lens)
+    cancel: Callable                 # () -> None (release pages/refs)
+    t_dispatch: float = 0.0
+
+    def ready(self) -> bool:
+        return api.tree_ready(self.probe)
 
 
 def _constrain(mesh):
@@ -364,8 +459,11 @@ class Engine:
                  eos_id: Optional[int] = None,
                  paged: bool = False,
                  decode_block: Optional[Union[int, str]] = None,
+                 prefill_async: Optional[bool] = None,
+                 ready_order: str = "ready",
                  sample_seed: int = 0):
         assert admission in ("per_slot", "gang"), admission
+        assert ready_order in ("ready", "deterministic"), ready_order
         self.cfg, self.params = cfg, params
         self.slots, self.max_len = slots, max_len
         self.admission = admission
@@ -449,6 +547,25 @@ class Engine:
         if self.dkv_rank:
             # fold cadence bounds every block — don't trace a longer loop
             self.decode_block = min(self.decode_block, self.dkv_tail)
+        # -- async prefill/decode disaggregation (DESIGN.md §12) --------
+        # prefill_async: explicit arg wins, else the engine config.
+        # ready_order="ready" splices tickets as their device results
+        # come ready (the true async mode — decode never blocks on an
+        # in-flight Lanczos); "deterministic" completes each ticket at
+        # its dispatch round, replaying the synchronous schedule through
+        # the identical ticket machinery (the byte-identity conformance
+        # mode).  Sync admission and deterministic mode share one code
+        # path; only "ready" populates the pool across steps.
+        if prefill_async is None:
+            prefill_async = ecfg.prefill_async
+        self.prefill_async = bool(prefill_async)
+        self.ready_order = ready_order
+        assert not (self.prefill_async and admission == "gang"), \
+            "async prefill requires per-slot admission (gang replaces " \
+            "the whole cache — there is nothing to overlap)"
+        self._pool: List[PrefillTicket] = []     # in-flight admissions
+        self._reserved = np.zeros(slots, bool)   # dispatched, not spliced
+        self.admit_log: List[int] = []           # uids in dispatch order
         self.stats = EngineStats()
         # _round counts COMPLETED decode rounds (a fused block advances it
         # by its step count); admission due-ness and sampler keys both
@@ -501,7 +618,14 @@ class Engine:
         t0 = time.perf_counter()
         try:
             finished: List[Request] = []
-            if self._round % self.admit_every == 0 or not any(self.live):
+            if self._pool:
+                # splice any in-flight admissions whose results came
+                # ready since the last boundary; when nothing is live
+                # decode can't make progress, so block on the pool head
+                # instead of spinning
+                finished.extend(self._drain_pool(
+                    block=not any(r is not None for r in self.live)))
+            if self._round % self.admit_every == 0 or not self._occupied():
                 finished.extend(self._admit())
             if any(self.live):
                 finished.extend(self._decode_rounds())
@@ -515,11 +639,20 @@ class Engine:
         finished: List[Request] = []
         for _ in range(max_steps):
             finished.extend(self.step())
-            if not any(self.live) and not len(self.sched):
-                # drained: admission on an all-free engine always takes at
-                # least the queue head, so an empty queue means done
+            if not self._occupied() and not len(self.sched):
+                # drained: no live slot, no in-flight ticket, empty
+                # queue — admission on an all-free engine always takes
+                # at least the queue head, so this means done.  (A
+                # non-empty queue that can NEVER admit raises inside
+                # _admit instead of spinning to max_steps — see the
+                # capacity-stall check there.)
                 break
         return finished
+
+    def _occupied(self) -> bool:
+        """Any slot live OR reserved by an in-flight admission ticket."""
+        return any(r is not None for r in self.live) \
+            or bool(self._reserved.any()) or bool(self._pool)
 
     # -- internals ---------------------------------------------------------
     def _sample_host(self, logits: Array, stream: int = 0) -> np.ndarray:
@@ -568,10 +701,14 @@ class Engine:
     def _admit(self) -> List[Request]:
         """Admission: drain the queue into the free slots, ONE prefill
         launch per length bucket, so other-bucket requests no longer wait
-        behind the head bucket while slots sit idle."""
+        behind the head bucket while slots sit idle.  Async mode only
+        DISPATCHES here (tickets into the pool); sync/deterministic mode
+        completes each ticket inline at its dispatch round."""
         finished: List[Request] = []
+        blocked = False
         while True:
-            free = [i for i, r in enumerate(self.live) if r is None]
+            free = [i for i, r in enumerate(self.live)
+                    if r is None and not self._reserved[i]]
             if not free or not len(self.sched):
                 break
             has_live = any(r is not None for r in self.live)
@@ -598,25 +735,46 @@ class Engine:
                 looks = self._lookup_prefixes(batch, plen)
                 n_miss = sum(1 for g in looks if g is None)
                 if not self._reserve_pages(n_miss, len(batch), plen):
-                    # page pool can't take this batch yet — drop the hit
-                    # refs, requeue at the FRONT (FIFO preserved) and
-                    # wait for slots to drain
+                    # page pool can't take this batch yet — release the
+                    # hit refs taken above (exactly once: they were never
+                    # installed anywhere), merge the batch back into the
+                    # queue in ARRIVAL order, and wait for capacity
                     for got in looks:
                         if got is not None:
                             self.pager.alloc.release(got[2])
-                    self.sched._q = batch + self.sched._q
+                    self.sched.requeue(batch)
+                    self.stats.stalls += 1
+                    blocked = True
                     break
             finished.extend(self._admit_batch(batch, free, plen, has_live,
                                               looks))
             if self.admission == "gang":
                 break                # legacy: one gang per admission
+        if blocked and not self._occupied():
+            # Deferred on page capacity with NO live slot and NO in-flight
+            # ticket: nothing can ever free pages (reservation already
+            # evicted every evictable prefix entry), so retrying would
+            # livelock run() until max_steps and silently drop the
+            # request.  Fail loudly instead.
+            head = self.sched._q[0]
+            raise RuntimeError(
+                f"request uid={head.uid} (prompt {len(head.prompt)} tokens)"
+                f" is blocked on page capacity with no in-flight work to "
+                f"free pages — raise kv_pool_pages (pool: "
+                f"{self.pager.num_pages} U pages / "
+                f"{self.pager.num_tail_pages} tail pages) or lower the "
+                f"prompt length / admission batch")
         return finished
 
     def _lookup_prefixes(self, batch: List[Request], plen: int) -> list:
         """Prefix-cache lookups for one admission batch.  Each hit's
         shared page refs are taken IMMEDIATELY — before any reservation
         eviction or same-batch miss insertion can release them — and
-        handed to ``_admit_paged`` (or dropped on deferral)."""
+        handed to ``_dispatch_paged`` (or dropped on deferral).  Lookups
+        run unrecorded (``record=False``): hit/miss stats are counted at
+        DISPATCH, exactly once per admitted request, so defer/retry
+        cycles can no longer inflate them (each retry used to re-count
+        the same request)."""
         pg = self.pager
         out: list = []
         for req in batch:
@@ -625,16 +783,14 @@ class Engine:
                 pad = plen - len(req.prompt)
                 padded = np.zeros(plen, np.int32)
                 padded[pad:] = req.prompt
-                found = pg.prefix.lookup(padded, self.dkv_tail, pad)
+                found = pg.prefix.lookup(padded, self.dkv_tail, pad,
+                                         record=False)
                 if found is not None:
                     ent, match_len = found
                     share = ent.pages[:match_len // pg.page]
                     pg.alloc.ref(share)
                     got = (ent, match_len, share)
             out.append(got)
-        if pg.prefix is not None:
-            self.stats.prefix_hits += sum(g is not None for g in out)
-            self.stats.prefix_misses += sum(g is None for g in out)
         return out
 
     def _reserve_pages(self, n_miss: int, n_req: int, plen: int) -> bool:
@@ -653,37 +809,118 @@ class Engine:
     def _admit_batch(self, batch: List[Request], free: List[int],
                      plen: int, has_live: bool,
                      looks: Optional[list] = None) -> List[Request]:
+        """One admission batch: stamp dispatch times, launch the prefill
+        (ticket dispatch), then either complete inline (sync and
+        deterministic modes — identical device-side program order to the
+        pre-split engine) or park the tickets in the ready pool (async
+        ``ready`` mode) for ``_drain_pool`` to splice at step edges."""
         slots_idx = free[:len(batch)]
+        now = time.perf_counter()
+        for req in batch:
+            req.t_dispatch = now
+        self.admit_log.extend(r.uid for r in batch)
+        self.stats.prefills += len(batch)
         if self.admission == "gang":
             logits = self._admit_gang(batch, slots_idx, plen, has_live)
             nxt = self._sample_host(logits, stream=1)[slots_idx]
             fls = np.full(len(batch), plen if self.dkv_rank else 0,
                           np.int32)
-        elif self.pager is not None:
-            nxt, fls = self._admit_paged(batch, slots_idx, plen, looks)
+            self.stats.prefill_batches += 1
+            return self._activate(batch, slots_idx, plen, nxt, fls)
+        for slot in slots_idx:
+            self._reserved[slot] = True
+        if self.pager is not None:
+            tickets = self._dispatch_paged(batch, slots_idx, plen, looks)
         else:
-            logits = self._admit_per_slot(batch, slots_idx, plen)
-            nxt = self._sample_host(logits, stream=1)[:len(batch)]
-            fls = np.full(len(batch), plen if self.dkv_rank else 0,
-                          np.int32)
+            tickets = [self._dispatch_slab(batch, slots_idx, plen)]
+        if self.prefill_async and self.ready_order == "ready":
+            self._pool.extend(tickets)
+            self.stats.prefill_inflight_peak = max(
+                self.stats.prefill_inflight_peak, len(self._pool))
+            return []
+        finished: List[Request] = []
+        for t in tickets:
+            finished.extend(self._finish_ticket(t))
+        return finished
 
+    def _activate(self, batch: List[Request], slots_idx: List[int],
+                  plen: int, nxt: np.ndarray,
+                  fls: np.ndarray) -> List[Request]:
+        """Completion tail shared by every admission path: occupy the
+        slots, stamp the TTFT split (queue wait vs prefill compute), and
+        apply first-token stop checks."""
         now = time.perf_counter()
         finished: List[Request] = []
         for j, (slot, req) in enumerate(zip(slots_idx, batch)):
+            self._reserved[slot] = False
             self.live[slot] = req
             self.pos[slot] = plen
             self.frozen_len[slot] = fls[j]
             req.out_tokens.append(int(nxt[j]))
             req.t_first = req.t_last = now
             self.stats.ttft_s.append(now - req.t_submit)
+            self.stats.ttft_queue_s.append(req.t_dispatch - req.t_submit)
+            self.stats.ttft_compute_s.append(now - req.t_dispatch)
             # the FIRST token can already be a stop token (or the whole
             # budget): finish and free the slot immediately
             if self._check_stop(slot, req, now):
                 finished.append(req)
-        self.stats.prefills += len(batch)
-        if self.pager is None:
-            self.stats.prefill_batches += 1
         return finished
+
+    def _finish_ticket(self, t: PrefillTicket) -> List[Request]:
+        nxt, fls = t.complete()
+        return self._activate(t.requests, t.slots, t.plen, nxt, fls)
+
+    def _drain_pool(self, *, block: bool) -> List[Request]:
+        """Splice finished prefill tickets into their reserved slots.
+
+        Tickets are visited in dispatch order; a ticket is spliced when
+        its done-probe reports ready (never blocking decode on an
+        in-flight Lanczos).  With ``block=True`` (nothing live to decode,
+        so there is no useful work to overlap) the pool HEAD is completed
+        even if not yet ready — ``complete()`` then blocks on the device
+        result, which is exactly the sync engine's behaviour."""
+        finished: List[Request] = []
+        rest: List[PrefillTicket] = []
+        spliced = 0
+        for t in self._pool:
+            if (block and not spliced and not rest) or t.ready():
+                finished.extend(self._finish_ticket(t))
+                spliced += 1
+            else:
+                rest.append(t)
+        self._pool = rest
+        return finished
+
+    def cancel_pending(self, requeue: bool = True) -> int:
+        """Cancel every in-flight admission ticket.
+
+        Reserved slots are freed, paged tickets release their page refs
+        (prefix-hit shared refs exactly once — the ref taken at lookup
+        was installed as the slot's block table at dispatch, and
+        ``free_slot`` releases it), and the requests re-enter the queue
+        in arrival order (``requeue=False`` drops them).  Dispatch-side
+        stats are unwound so a cancelled request is not double-counted
+        when re-admitted.  The device computation itself is not
+        interrupted — its results are simply never spliced.  Returns the
+        number of cancelled requests."""
+        n = 0
+        for t in self._pool:
+            t.cancel()
+            for slot in t.slots:
+                self._reserved[slot] = False
+            self.stats.prefills -= len(t.requests)
+            for req in t.requests:
+                req.t_dispatch = 0.0
+                n += 1
+                for k in range(len(self.admit_log) - 1, -1, -1):
+                    if self.admit_log[k] == req.uid:
+                        del self.admit_log[k]
+                        break
+            if requeue:
+                self.sched.requeue(t.requests)
+        self._pool = []
+        return n
 
     def _toks(self, batch: List[Request], rows: int, plen: int,
               row_of: Callable[[int], int]) -> np.ndarray:
@@ -692,48 +929,67 @@ class Engine:
             toks[row_of(j), plen - len(req.prompt):] = req.prompt  # left-pad
         return toks
 
-    def _admit_per_slot(self, batch: List[Request], slots_idx: List[int],
-                        plen: int) -> Array:
-        """Prefill ONLY the admitted requests (batch padded to a power of
-        two so compile count stays O(log slots × max_len/bucket)) and
-        splice the fresh rows into the live cache."""
+    def _dispatch_slab(self, batch: List[Request], slots_idx: List[int],
+                       plen: int) -> PrefillTicket:
+        """Launch the slab-path prefill for one admission batch (batch
+        padded to a power of two so compile count stays O(log slots ×
+        max_len/bucket)) and return its ticket.  The prefill — Lanczos
+        included on the dkv path — is in flight the moment this returns;
+        the cache splice and first-token sample happen in ``complete()``
+        (ready-pool splice for async, immediately for sync)."""
         nb = min(_pow2(len(batch)), max(self.slots, 1))
         toks = self._toks(batch, nb, plen, lambda j: j)
         if self.dkv_rank:
-            from ..models import decomposed_kv as DK
             logits, fresh = self._prefill_dkv(self.params, jnp.asarray(toks))
-            if self.cache is None:
-                self.cache = self._place(DK.init_cache(
-                    self.cfg, self.slots, fresh["k_u"].shape[2],
-                    fresh["k_u"].shape[-1], tail=self.dkv_tail))
-            idx = np.asarray(slots_idx, np.int32)
-            src = np.arange(len(slots_idx), dtype=np.int32)
-            self.cache = self._splice_dkv(self.cache, fresh, idx, src)
-            self.rank_eff[slots_idx] = fresh["k_u"].shape[-1]
         else:
             args = self._prefill_args(jnp.asarray(toks))
             logits, fresh = self._prefill(self.params, *args)
+        self.stats.prefill_batches += 1
+
+        def complete():
             idx = np.asarray(slots_idx, np.int32)
             src = np.arange(len(slots_idx), dtype=np.int32)
-            self.cache = self._splice_fam(self.cache, fresh, idx, src,
-                                          self.cfg)
-        return logits
+            if self.dkv_rank:
+                from ..models import decomposed_kv as DK
+                if self.cache is None:
+                    self.cache = self._place(DK.init_cache(
+                        self.cfg, self.slots, fresh["k_u"].shape[2],
+                        fresh["k_u"].shape[-1], tail=self.dkv_tail))
+                self.cache = self._splice_dkv(self.cache, fresh, idx, src)
+                self.rank_eff[slots_idx] = fresh["k_u"].shape[-1]
+                fls = np.full(len(batch), plen, np.int32)
+            else:
+                self.cache = self._splice_fam(self.cache, fresh, idx, src,
+                                              self.cfg)
+                fls = np.zeros(len(batch), np.int32)
+            nxt = self._sample_host(logits, stream=1)[:len(batch)]
+            return nxt, fls
 
-    def _admit_paged(self, batch: List[Request], slots_idx: List[int],
-                     plen: int, looks: Optional[list]):
-        """Paged admission: the precomputed prefix lookups (``looks``,
-        from ``_lookup_prefixes`` — hit page refs already taken) split
-        the batch into HITS (tail-only suffix prefill over refcounted
-        shared pages — no prefix forward pass, no Lanczos) and MISSES
-        (the slot engine's exact prefill path — same jitted fn, same pow2
-        batch padding, so the factors are bit-identical — scattered into
-        fresh pages and registered in the prefix cache).  Returns (first
-        token, frozen length) per request."""
+        return PrefillTicket(requests=list(batch), slots=list(slots_idx),
+                             plen=plen, probe=(logits, fresh),
+                             complete=complete, cancel=lambda: None,
+                             t_dispatch=time.perf_counter())
+
+    def _dispatch_paged(self, batch: List[Request], slots_idx: List[int],
+                        plen: int,
+                        looks: Optional[list]) -> List[PrefillTicket]:
+        """Paged admission dispatch: the precomputed prefix lookups
+        (``looks``, from ``_lookup_prefixes`` — hit page refs already
+        taken) split the batch into HITS (tail-only suffix prefill over
+        refcounted shared pages — no prefix forward pass, no Lanczos) and
+        MISSES (the slot engine's exact prefill path — same jitted fn,
+        same pow2 batch padding, so the factors are bit-identical).  One
+        ticket per hit group plus one for the misses; all pages are
+        allocated and installed in the slot block tables HERE, at
+        dispatch, so the reservation holds across the async window and
+        ``free_slot`` on cancellation releases everything (shared prefix
+        refs exactly once).  Device-side the launch order — suffix chains
+        on the pool cache, then the miss scatter — is identical to the
+        pre-split engine; only the host-side sample/bookkeeping moves
+        into ``complete()``."""
         pg = self.pager
         n = len(batch)
         padded = self._toks(batch, n, plen, lambda j: j)
-        nxt = np.zeros(n, np.int32)
-        fls = np.full(n, plen, np.int32)
         hits: dict = {}            # (L, r_eff) -> [(j, entry, share), ...]
         misses: List[int] = []
         for j in range(n):
@@ -744,81 +1000,155 @@ class Engine:
                                 []).append((j, ent, share))
             else:
                 misses.append(j)
+        if pg.prefix is not None:
+            # counted once per ADMITTED request, here at dispatch — the
+            # lookups themselves ran record=False, so a defer/retry cycle
+            # no longer double-counts (engine stats and cache counters)
+            nh = n - len(misses)
+            self.stats.prefix_hits += nh
+            self.stats.prefix_misses += len(misses)
+            pg.prefix.hits += nh
+            pg.prefix.misses += len(misses)
 
+        tickets: List[PrefillTicket] = []
         # hits first: they only consume tail pages, and their factor
         # pages already carry this batch's refs
         for (match_len, r_ent), group in sorted(hits.items()):
-            m = len(group)
-            stoks = np.zeros((m, plen - match_len), np.int32)
-            ent_bt, bt_t, idx = [], [], []
-            for gi, (j, ent, share) in enumerate(group):
-                slot = slots_idx[j]
-                stoks[gi] = padded[j][match_len:]
-                tpages = pg.talloc.alloc(pg.ntp)
-                assert tpages is not None, "tail pages after _reserve_pages"
-                pg.bt_u[slot], pg.bt_t[slot] = list(share), tpages
-                ent_bt.append(share)
-                bt_t.append(tpages)
-                idx.append(slot)
+            tickets.append(self._dispatch_paged_hits(
+                batch, slots_idx, plen, padded, match_len, r_ent, group))
+        if misses:
+            tickets.append(self._dispatch_paged_miss(
+                batch, slots_idx, plen, padded, misses))
+        return tickets
+
+    def _dispatch_paged_hits(self, batch: List[Request],
+                             slots_idx: List[int], plen: int,
+                             padded: np.ndarray, match_len: int,
+                             r_ent: int, group: list) -> PrefillTicket:
+        pg = self.pager
+        m = len(group)
+        stoks = np.zeros((m, plen - match_len), np.int32)
+        ent_bt, bt_t, idx = [], [], []
+        reqs: List[Request] = []
+        slots_l: List[int] = []
+        shares: List[list] = []
+        for gi, (j, ent, share) in enumerate(group):
+            slot = slots_idx[j]
+            stoks[gi] = padded[j][match_len:]
+            tpages = pg.talloc.alloc(pg.ntp)
+            assert tpages is not None, "tail pages after _reserve_pages"
+            ent_bt.append(share)
+            shares.append(list(share))
+            bt_t.append(tpages)
+            idx.append(slot)
+            reqs.append(batch[j])
+            slots_l.append(slot)
+        k_vt = jnp.stack([ent.k_vt for _, ent, _ in group], axis=1)
+        v_vt = jnp.stack([ent.v_vt for _, ent, _ in group], axis=1)
+        start = np.full(m, match_len, np.int32)
+        slen = np.full(m, plen - match_len, np.int32)
+        logits, pg.cache = pg._suffix(
+            self.params, jnp.asarray(stoks), pg.cache,
+            np.asarray(ent_bt, np.int32), k_vt, v_vt,
+            jnp.asarray(start), jnp.asarray(slen),
+            np.asarray(bt_t, np.int32), np.asarray(idx, np.int32),
+            match_len, r_ent)
+        self.stats.prefill_batches += 1
+
+        def complete():
+            # install the block tables only NOW: while the ticket was in
+            # flight the slot's bt rows stayed empty (SINK-padded in
+            # bt_array), so intervening decode launches scattered their
+            # dead-row writes into the sink page instead of the suffix
+            # tail pages written at dispatch.  The shared-prefix ref from
+            # _lookup_prefixes transfers to the slot here; free_slot
+            # releases it exactly once.
+            for gi, slot in enumerate(slots_l):
+                pg.bt_u[slot], pg.bt_t[slot] = shares[gi], bt_t[gi]
                 self.rank_eff[slot] = r_ent
-                fls[j] = match_len
-            k_vt = jnp.stack([ent.k_vt for _, ent, _ in group], axis=1)
-            v_vt = jnp.stack([ent.v_vt for _, ent, _ in group], axis=1)
-            start = np.full(m, match_len, np.int32)
-            slen = np.full(m, plen - match_len, np.int32)
-            logits, pg.cache = pg._suffix(
-                self.params, jnp.asarray(stoks), pg.cache,
-                np.asarray(ent_bt, np.int32), k_vt, v_vt,
-                jnp.asarray(start), jnp.asarray(slen),
-                np.asarray(bt_t, np.int32), np.asarray(idx, np.int32),
-                match_len, r_ent)
-            toks_next = self._sample_host(logits, stream=1)
-            for gi, (j, _, _) in enumerate(group):
-                nxt[j] = toks_next[gi]
+            nxt = self._sample_host(logits, stream=1)[:m]
             pg.slab_t = max(pg.slab_t, match_len)
             pg.slab_r = max(pg.slab_r, r_ent)
-            self.stats.prefill_batches += 1
+            return nxt, np.full(m, match_len, np.int32)
 
-        if misses:
-            nb = min(_pow2(len(misses)), max(self.slots, 1))
-            mtoks = np.zeros((nb, plen), np.int32)
-            for mi, j in enumerate(misses):
-                mtoks[mi] = padded[j]
-            logits, fresh = self._prefill_dkv(self.params,
-                                              jnp.asarray(mtoks))
+        def cancel():
+            # nothing was installed in the slot block tables yet, so the
+            # lookup's shared ref and the fresh tail pages are released
+            # directly (exactly once each)
+            for gi in range(m):
+                pg.alloc.release(shares[gi])
+                pg.talloc.release(bt_t[gi])
+
+        return PrefillTicket(requests=reqs, slots=slots_l, plen=plen,
+                             probe=logits, complete=complete,
+                             cancel=cancel,
+                             t_dispatch=time.perf_counter())
+
+    def _dispatch_paged_miss(self, batch: List[Request],
+                             slots_idx: List[int], plen: int,
+                             padded: np.ndarray,
+                             misses: List[int]) -> PrefillTicket:
+        pg = self.pager
+        nb = min(_pow2(len(misses)), max(self.slots, 1))
+        mtoks = np.zeros((nb, plen), np.int32)
+        for mi, j in enumerate(misses):
+            mtoks[mi] = padded[j]
+        logits, fresh = self._prefill_dkv(self.params, jnp.asarray(mtoks))
+        self.stats.prefill_batches += 1
+        npg = pg.pages_for(plen)
+        bt_u, bt_t, idx = [], [], []
+        reqs: List[Request] = []
+        slots_l: List[int] = []
+        for j in misses:
+            slot = slots_idx[j]
+            pages = pg.alloc.alloc(npg)
+            tpages = pg.talloc.alloc(pg.ntp)
+            assert pages is not None and tpages is not None, \
+                "page reservation failed after _reserve_pages"
+            bt_u.append(pages)
+            bt_t.append(tpages)
+            idx.append(slot)
+            reqs.append(batch[j])
+            slots_l.append(slot)
+        pads = [plen - len(batch[j].prompt) for j in misses]
+        rows = [padded[j].copy() for j in misses]
+
+        def complete():
+            # block tables are installed only now (see the hit-path note:
+            # bt rows stay SINK during the async window so dead-row decode
+            # writes can't touch the reserved pages); the _admit scatter
+            # below chains device-side AFTER any intervening decode, so it
+            # owns the final contents of every factor/tail page
             r_eff = fresh["k_u"].shape[-1]
-            npg = pg.pages_for(plen)
-            bt_u, bt_t, idx = [], [], []
-            for j in misses:
-                slot = slots_idx[j]
-                pages = pg.alloc.alloc(npg)
-                tpages = pg.talloc.alloc(pg.ntp)
-                assert pages is not None and tpages is not None, \
-                    "page reservation failed after _reserve_pages"
-                pg.bt_u[slot], pg.bt_t[slot] = pages, tpages
-                bt_u.append(pages)
-                bt_t.append(tpages)
-                idx.append(slot)
-                self.rank_eff[slot] = r_eff
             src = np.arange(len(misses), dtype=np.int32)
             pg.cache = pg._admit(pg.cache, fresh["k_u"], fresh["v_u"],
                                  fresh["k_vt"], fresh["v_vt"],
                                  np.asarray(bt_u, np.int32),
                                  np.asarray(bt_t, np.int32),
                                  np.asarray(idx, np.int32), src)
-            toks_next = self._sample_host(logits, stream=1)
-            for mi, j in enumerate(misses):
-                nxt[j] = toks_next[mi]
+            for mi, slot in enumerate(slots_l):
+                pg.bt_u[slot], pg.bt_t[slot] = bt_u[mi], bt_t[mi]
+                self.rank_eff[slot] = r_eff
+            nxt = self._sample_host(logits, stream=1)[:len(misses)]
             pg.slab_t = max(pg.slab_t, plen)
             pg.slab_r = max(pg.slab_r, r_eff)
             if pg.prefix is not None:
-                for mi, j in enumerate(misses):
-                    pg.prefix.insert(padded[j], pg.bt_u[slots_idx[j]],
+                for mi, slot in enumerate(slots_l):
+                    pg.prefix.insert(rows[mi], pg.bt_u[slot],
                                      fresh["k_vt"][:, mi],
                                      fresh["v_vt"][:, mi], r_eff,
-                                     n_pad=plen - len(batch[j].prompt))
-            self.stats.prefill_batches += 1
-        return nxt, fls
+                                     n_pad=pads[mi])
+            return nxt, np.full(len(misses), plen, np.int32)
+
+        def cancel():
+            for mi in range(len(misses)):
+                pg.alloc.release(bt_u[mi])
+                pg.talloc.release(bt_t[mi])
+
+        return PrefillTicket(requests=reqs, slots=slots_l, plen=plen,
+                             probe=(logits, fresh), complete=complete,
+                             cancel=cancel,
+                             t_dispatch=time.perf_counter())
 
     def _admit_gang(self, batch: List[Request], slots_idx: List[int],
                     plen: int, has_live: bool) -> Array:

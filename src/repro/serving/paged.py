@@ -144,12 +144,16 @@ class PrefixCache:
         lo = n_pad // self.page * self.page + self.page
         return range(lo, top + 1, self.page)
 
-    def lookup(self, padded: np.ndarray, max_suffix: int, n_pad: int = 0
-               ) -> Optional[Tuple[PrefixEntry, int]]:
+    def lookup(self, padded: np.ndarray, max_suffix: int, n_pad: int = 0,
+               record: bool = True) -> Optional[Tuple[PrefixEntry, int]]:
         """Longest cached prefix of ``padded`` whose suffix (the rest of
         the prompt) fits in ``max_suffix`` tail rows and which covers at
         least one of the query's REAL tokens (``n_pad`` = its left-pad
-        row count)."""
+        row count).  ``record=False`` skips the hit/miss counters (the
+        LRU touch still happens): the engine probes here at every
+        admission attempt and counts once per ADMITTED request at
+        dispatch, so page-pressure defer/retry cycles don't inflate the
+        stats."""
         n = len(padded)
         for ln in reversed(self._boundaries(n, n_pad)):
             if n - ln > max_suffix:
@@ -158,9 +162,11 @@ class PrefixCache:
             if ent is not None and np.array_equal(ent.tokens[:ln],
                                                   padded[:ln]):
                 self._entries.move_to_end(self._digest(ent.tokens))
-                self.hits += 1
+                if record:
+                    self.hits += 1
                 return ent, ln
-        self.misses += 1
+        if record:
+            self.misses += 1
         return None
 
     def insert(self, padded: np.ndarray, pages: List[int], k_vt, v_vt,

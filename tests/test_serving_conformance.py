@@ -645,6 +645,139 @@ def test_fused_sharded_byte_identical_to_1_device(dense_model, tmp_path):
         assert got[key + "_blocks"] < got[key + "_steps"]
 
 
+# ---------------------------------------------------------------------------
+# Async prefill/decode conformance (disaggregated admissions, DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+def _serve_async_det(cfg, params, prompts, *, mesh=None, block=1,
+                     paged=False, sync=False, slots=MESH_SLOTS):
+    """Staggered mid-decode arrivals on the async-dispatch engine in
+    DETERMINISTIC ready-order (tickets splice at their dispatch round),
+    or the synchronous engine when ``sync=True`` — identical schedule,
+    so the tokens must be byte-identical."""
+    from repro.engine import DecomposeEngine, EngineConfig
+    de = DecomposeEngine(EngineConfig(kv_rank=DKV_RANK, kv_tail=DKV_TAIL,
+                                      kv_page=4, decode_block=block,
+                                      mesh=mesh))
+    akw = {} if sync else dict(prefill_async=True,
+                               ready_order="deterministic")
+    eng = Engine(cfg, params, slots=slots, max_len=MAX_LEN,
+                 decompose_kv_rank=DKV_RANK, dkv_tail=DKV_TAIL,
+                 decompose_engine=de, paged=paged, **akw)
+    done = []
+    eng.submit(Request(uid=0, prompt=prompts[0], max_new_tokens=MESH_NEW))
+    arrivals = {3 * i: i for i in range(1, len(prompts))}
+    for step in range(200):
+        if step in arrivals:
+            i = arrivals[step]
+            eng.submit(Request(uid=i, prompt=prompts[i],
+                               max_new_tokens=MESH_NEW))
+        done.extend(eng.step())
+        if len(done) == len(prompts) and not any(eng.live):
+            break
+    assert sorted(r.uid for r in done) == list(range(len(prompts)))
+    return {r.uid: r.out_tokens for r in done}, eng
+
+
+@pytest.mark.parametrize("paged", [False, True])
+@pytest.mark.parametrize("block", [1, 4])
+def test_async_det_conformance_1dev(dense_model, paged, block):
+    """THE async gate (1 device): asynchronous admission dispatch in
+    deterministic ready-order is token-byte-identical to the synchronous
+    engine under staggered mid-decode arrivals — slot and paged,
+    single-step and fused decode, across tail-fold boundaries."""
+    cfg, params = dense_model
+    prompts = _prompts(cfg, lens=MESH_PROMPT_LENS)
+    base, _ = _serve_async_det(cfg, params, prompts, block=block,
+                               paged=paged, sync=True, slots=2)
+    det, eng = _serve_async_det(cfg, params, prompts, block=block,
+                                paged=paged, slots=2)
+    assert eng.stats.tail_folds > 0
+    assert det == base, f"async-det diverged (paged={paged}, block={block})"
+    if paged:                            # clean drain, every page returned
+        assert eng.pager.alloc.free_pages == eng.pager.num_pages - 1
+        assert eng.pager.talloc.free_pages == eng.pager.num_tail_pages - 1
+
+
+_ASYNC_SHARDED_SCRIPT = textwrap.dedent("""
+    import os, sys, json
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, numpy as np
+    sys.path.insert(0, os.path.dirname(os.path.abspath(sys.argv[2])))
+    from test_serving_conformance import (MESH_PROMPT_LENS,
+                                          _serve_async_det)
+    from repro.configs import all_archs
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import model_fns
+
+    assert len(jax.devices()) == 8
+    cfg = all_archs()["deepseek-7b"].reduced()
+    params = model_fns(cfg).init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(0, cfg.vocab, n, dtype=np.int32)
+               for n in MESH_PROMPT_LENS]
+    mesh = make_host_mesh(8, 1)
+    out = {}
+    for key, block, paged in (("slot_b1", 1, False), ("slot_b4", 4, False),
+                              ("paged_b1", 1, True), ("paged_b4", 4, True)):
+        toks, eng = _serve_async_det(cfg, params, prompts, mesh=mesh,
+                                     block=block, paged=paged)
+        out[key] = {str(u): t for u, t in toks.items()}
+        if key == "slot_b1":
+            out["ku_nshards"] = len(eng.cache["k_u"].addressable_shards)
+    json.dump(out, open(sys.argv[1], "w"))
+""")
+
+
+def test_async_sharded_byte_identical_to_sync_1dev(dense_model, tmp_path):
+    """8-device async twin (subprocess — device count locks at jax init):
+    async dispatch in deterministic ready-order on the (8, 1) mesh is
+    byte-identical to this process's 1-device SYNCHRONOUS engine for
+    every combination of {slot, paged} × {single-step, fused} decode —
+    disaggregation, fusion, and sharding compose without perturbing
+    tokens."""
+    cfg, params = dense_model
+    prompts = _prompts(cfg, lens=MESH_PROMPT_LENS)
+    local, _ = _serve_async_det(cfg, params, prompts, sync=True)
+
+    out = tmp_path / "async_sharded.json"
+    env = dict(os.environ,
+               PYTHONPATH="src" + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+    env.pop("XLA_FLAGS", None)           # the script forces its own 8
+    subprocess.run(
+        [sys.executable, "-c", _ASYNC_SHARDED_SCRIPT, str(out),
+         os.path.abspath(__file__)],
+        check=True, env=env, timeout=900,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    got = json.load(open(out))
+    assert got["ku_nshards"] == 8        # slot axis genuinely 8-way DP
+    for key in ("slot_b1", "slot_b4", "paged_b1", "paged_b4"):
+        assert {int(k): v for k, v in got[key].items()} == local, \
+            f"8-device async {key} tokens diverged vs 1-device sync"
+
+
+@pytest.mark.skipif(len(jax.devices()) < 8,
+                    reason="needs 8 devices (CI distributed job forces "
+                           "XLA_FLAGS=--xla_force_host_platform_device_"
+                           "count=8)")
+def test_async_sharded_inprocess_8dev(dense_model):
+    """In-process twin of the async subprocess gate for the CI
+    distributed job: sync-1dev-schedule vs async-det on the (8, 1) mesh
+    in ONE process, single-step and fused."""
+    from repro.launch.mesh import make_host_mesh
+    cfg, params = dense_model
+    mesh = make_host_mesh(8, 1)
+    prompts = _prompts(cfg, lens=MESH_PROMPT_LENS)
+    base, _ = _serve_async_det(cfg, params, prompts, sync=True)
+    for block in (1, 4):
+        got, eng = _serve_async_det(cfg, params, prompts, mesh=mesh,
+                                    block=block)
+        assert got == base, f"8-device async block={block} diverged"
+    assert len(eng.cache["k_u"].addressable_shards) == 8
+
+
 def test_exact_svd_vs_lanczos_near_full_rank():
     """§2.3: on a KV-like block (decaying spectrum — real K/V rows are
     strongly correlated), direct SVD (exact=True) and Lanczos agree as
