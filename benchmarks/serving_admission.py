@@ -71,10 +71,6 @@ def _simulate(eng, arrivals: Dict[int, list], total: int,
     return wall, step
 
 
-def _p99(xs: List[float]) -> float:
-    return float(np.percentile(np.asarray(xs), 99)) if xs else 0.0
-
-
 def _overlap_capable() -> bool:
     """Can this backend make progress on an independent small executable
     while a large one is in flight?  Times a tiny jitted op alone, then
@@ -130,6 +126,7 @@ def run(quick: bool = False, json_path: str = None) -> List[Row]:
     import jax
     from repro.configs import all_archs
     from repro.models import model_fns
+    from repro.obs import engine_snapshot
     from repro.serving import Engine
 
     cfg = all_archs()["deepseek-7b"].reduced()
@@ -156,17 +153,15 @@ def run(quick: bool = False, json_path: str = None) -> List[Row]:
             wall, steps = _simulate(eng, _arrivals(cfg, requests, stagger,
                                                    prompt_len, max_new),
                                     requests)
-            runs.append((wall, steps, eng.stats))
+            runs.append((wall, steps, eng))
         runs.sort(key=lambda t: t[0])
-        wall, steps, s = runs[len(runs) // 2]
+        wall, steps, eng = runs[len(runs) // 2]
+        s = eng.stats
         tps = s.tokens_out / max(wall, 1e-9)
-        report["modes"][mode] = {
-            "wall_s": wall, "sched_steps": steps,
-            "tokens_out": s.tokens_out, "tokens_per_s": tps,
-            "prefills": s.prefills, "prefill_batches": s.prefill_batches,
-            "tail_folds": s.tail_folds,
-            "mean_ttft_s": s.mean_ttft_s, "mean_itl_s": s.mean_itl_s,
-        }
+        # uniform repro.obs/v1 snapshot — same field names as every other
+        # serving benchmark artifact and the serve CLI
+        report["modes"][mode] = engine_snapshot(eng, wall_s=wall,
+                                                sched_steps=steps)
         rows.append((f"serving_admission/{mode}/r{requests}xs{slots}",
                      wall * 1e6,
                      f"tok_per_s={tps:.1f};ttft_ms={s.mean_ttft_s*1e3:.1f};"
@@ -174,8 +169,8 @@ def run(quick: bool = False, json_path: str = None) -> List[Row]:
     ps, gg = report["modes"]["per_slot"], report["modes"]["gang"]
     report["speedup_tokens_per_s"] = ps["tokens_per_s"] / \
         max(gg["tokens_per_s"], 1e-9)
-    report["ttft_ratio_gang_over_per_slot"] = gg["mean_ttft_s"] / \
-        max(ps["mean_ttft_s"], 1e-9)
+    report["ttft_ratio_gang_over_per_slot"] = gg["ttft"]["mean_s"] / \
+        max(ps["ttft"]["mean_s"], 1e-9)
     rows.append(("serving_admission/per_slot_vs_gang", 0.0,
                  f"tokens_per_s_speedup={report['speedup_tokens_per_s']:.2f}x;"
                  f"ttft_improvement="
@@ -201,27 +196,19 @@ def run(quick: bool = False, json_path: str = None) -> List[Row]:
             wall, steps = _simulate(
                 eng, _async_arrivals(cfg, slots, n_long, stagger_l,
                                      long_len, max_new), total)
-            runs.append((wall, steps, eng.stats))
+            runs.append((wall, steps, eng))
         runs.sort(key=lambda t: t[0])
-        wall, steps, s = runs[len(runs) // 2]
-        ab[label] = {
-            "wall_s": wall, "sched_steps": steps,
-            "tokens_out": s.tokens_out,
-            "tokens_per_s": s.tokens_out / max(wall, 1e-9),
-            "p99_itl_s": _p99(s.itl_s), "mean_itl_s": s.mean_itl_s,
-            "mean_ttft_s": s.mean_ttft_s,
-            "mean_ttft_queue_s": s.mean_ttft_queue_s,
-            "mean_ttft_compute_s": s.mean_ttft_compute_s,
-            "prefill_inflight_peak": s.prefill_inflight_peak,
-            "stalls": s.stalls,
-        }
+        wall, steps, eng = runs[len(runs) // 2]
+        s = eng.stats
+        ab[label] = engine_snapshot(eng, wall_s=wall, sched_steps=steps)
         rows.append((f"serving_admission/{label}_prefill/"
                      f"l{n_long}x{long_len}",
                      wall * 1e6,
-                     f"p99_itl_ms={ab[label]['p99_itl_s']*1e3:.2f};"
-                     f"mean_itl_ms={ab[label]['mean_itl_s']*1e3:.2f};"
+                     f"p99_itl_ms={ab[label]['itl']['p99_s']*1e3:.2f};"
+                     f"mean_itl_ms={ab[label]['itl']['mean_s']*1e3:.2f};"
                      f"inflight_peak={s.prefill_inflight_peak}"))
-    ratio = ab["sync"]["p99_itl_s"] / max(ab["async"]["p99_itl_s"], 1e-9)
+    ratio = ab["sync"]["itl"]["p99_s"] / max(ab["async"]["itl"]["p99_s"],
+                                             1e-9)
     report["async_ab"] = {
         "n_long": n_long, "long_prompt_len": long_len,
         "stagger_steps": stagger_l, "overlap_capable": overlap,

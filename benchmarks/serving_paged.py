@@ -86,6 +86,7 @@ def run(quick: bool = False, json_path: str = None) -> List[Row]:
     from repro.configs import all_archs
     from repro.engine import DecomposeEngine, EngineConfig
     from repro.models import model_fns
+    from repro.obs import engine_snapshot
     from repro.serving import Engine, Request
 
     cfg = all_archs()["deepseek-7b"].reduced()
@@ -121,14 +122,11 @@ def run(quick: bool = False, json_path: str = None) -> List[Row]:
         wall, steps, toks, peak, eng = runs[len(runs) // 2]
         toks_by_mode[mode] = toks
         s = eng.stats
-        report["modes"][mode] = {
-            "wall_s": wall, "sched_steps": steps,
-            "tokens_out": s.tokens_out,
-            "tokens_per_s": s.tokens_out / max(wall, 1e-9),
-            "tail_folds": s.tail_folds,
-            "mean_ttft_s": s.mean_ttft_s, "mean_itl_s": s.mean_itl_s,
-            "peak_resident_cache_bytes": peak,
-        }
+        # uniform repro.obs/v1 snapshot (adds the "paged" block — page
+        # pool occupancy / prefix entry count — on the paged engine)
+        report["modes"][mode] = engine_snapshot(
+            eng, wall_s=wall, sched_steps=steps,
+            peak_resident_cache_bytes=peak)
         rows.append((f"serving_paged/{mode}/r{requests}xs{slots}",
                      wall * 1e6,
                      f"tok_per_s={report['modes'][mode]['tokens_per_s']:.1f};"

@@ -61,6 +61,7 @@ def run_arm(mesh_spec: str, slots: int, requests: int, prompt_len: int,
     from repro.engine import DecomposeEngine, EngineConfig
     from repro.launch.mesh import parse_mesh
     from repro.models import model_fns
+    from repro.obs import engine_snapshot
     from repro.serving import Engine, Request
 
     mesh = parse_mesh(mesh_spec)
@@ -110,17 +111,11 @@ def run_arm(mesh_spec: str, slots: int, requests: int, prompt_len: int,
         t0 = time.perf_counter()
         done, eng = serve(paged, block)
         wall = time.perf_counter() - t0
-        s = eng.stats
-        report["modes"][name] = {
-            "paged": paged, "decode_block": block,
-            "wall_s": wall, "tokens_out": s.tokens_out,
-            "tokens_per_s": s.tokens_out / max(wall, 1e-9),
-            "decode_steps": s.decode_steps, "blocks": s.blocks,
-            "prefills": s.prefills, "prefill_batches": s.prefill_batches,
-            "tail_folds": s.tail_folds,
-            "mean_ttft_s": s.mean_ttft_s, "mean_itl_s": s.mean_itl_s,
-            "tokens": {str(r.uid): r.out_tokens for r in done},
-        }
+        # uniform repro.obs/v1 snapshot + arm-specific extras ("paged" is
+        # the snapshot's pool block, so the mode flag is "is_paged")
+        report["modes"][name] = engine_snapshot(
+            eng, wall_s=wall, is_paged=paged, decode_block=block,
+            tokens={str(r.uid): r.out_tokens for r in done})
         if mesh is not None and not paged:
             ku = eng.cache["k_u"]
             report["ku_nshards"] = len(ku.addressable_shards)

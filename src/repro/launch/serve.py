@@ -25,6 +25,8 @@ import numpy as np
 from ..configs.base import get_arch
 from ..engine import DecomposeEngine, EngineConfig, available_backends
 from ..models import api
+from ..obs import (GLOBAL, Observability, compile_stats, write_json_snapshot,
+                   write_prometheus)
 from ..serving import Engine, Request
 from .mesh import parse_mesh
 
@@ -98,6 +100,18 @@ def main() -> None:
                          "complete) or 'deterministic' (inline at the "
                          "dispatch round — byte-identical tokens to the "
                          "synchronous engine, for conformance A/Bs)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a Prometheus text exposition of every "
+                         "metric (engine stats + decomposition/tuner/"
+                         "compile telemetry) here at exit; '-.json' "
+                         "suffix writes the JSON snapshot instead")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record request-lifecycle spans and write "
+                         "Chrome trace-event JSON (Perfetto-loadable) "
+                         "here at exit")
+    ap.add_argument("--stats-every", type=int, default=0, metavar="N",
+                    help="print a p50/p95/p99 stats snapshot every N "
+                         "engine steps (0 = only the final summary)")
     args = ap.parse_args()
 
     mesh = parse_mesh(args.mesh)
@@ -143,12 +157,13 @@ def main() -> None:
             print(f"pretune[{res.kernel}]: f={res.best['expansion']} "
                   f"({res.source}, {key})")
 
+    obs = Observability(trace=args.trace_out is not None)
     eng = Engine(cfg, params, slots=args.slots, max_len=args.max_len,
                  decompose_kv_rank=args.decompose_kv_rank,
                  dkv_tail=args.dkv_tail, decompose_engine=dengine,
                  admission=args.admission, paged=args.paged,
                  eos_id=args.eos_id, prefill_async=args.prefill_async,
-                 ready_order=args.ready_order)
+                 ready_order=args.ready_order, obs=obs)
 
     rng = np.random.RandomState(0)
     for i in range(args.requests):
@@ -156,7 +171,18 @@ def main() -> None:
                            prompt=rng.randint(0, cfg.vocab, args.prompt_len,
                                               dtype=np.int32),
                            max_new_tokens=args.max_new))
-    done = eng.run()
+    if args.stats_every > 0:
+        # drive step() directly so periodic snapshots land on step edges
+        done, steps = [], 0
+        while steps < 10_000:
+            done.extend(eng.step())
+            steps += 1
+            if steps % args.stats_every == 0:
+                print(_pctl_line(eng.stats, prefix=f"step {steps}: "))
+            if not eng._occupied() and not len(eng.sched):
+                break
+    else:
+        done = eng.run()
     for r in sorted(done, key=lambda r: r.uid):
         print(f"req {r.uid}: {r.out_tokens}")
     s = eng.stats
@@ -177,6 +203,7 @@ def main() -> None:
           f"(queue={s.mean_ttft_queue_s * 1e3:.1f}ms "
           f"compute={s.mean_ttft_compute_s * 1e3:.1f}ms) "
           f"itl={s.mean_itl_s * 1e3:.1f}ms")
+    print(_pctl_line(s))
     if eng.pager is not None:
         pg = eng.pager
         line = (f"paged: page={pg.page} pool={pg.num_pages}p "
@@ -187,6 +214,35 @@ def main() -> None:
                      f"prefix_misses={s.prefix_misses} "
                      f"entries={len(pg.prefix)}")
         print(line)
+
+    cw = compile_stats()
+    if cw:
+        print("compiles: " + " ".join(
+            f"{ph}={d['compiles']}({d['seconds']:.2f}s)"
+            for ph, d in sorted(cw.items())))
+    if args.metrics_out:
+        # engine registry (serving_*) + the process GLOBAL registry
+        # (decompose/tuner/compile telemetry) in one exposition
+        if args.metrics_out.endswith(".json"):
+            write_json_snapshot(args.metrics_out, obs.registry, GLOBAL)
+        else:
+            write_prometheus(args.metrics_out, obs.registry, GLOBAL)
+        print(f"metrics: wrote {args.metrics_out}")
+    if args.trace_out:
+        obs.tracer.export(args.trace_out)
+        print(f"trace: wrote {args.trace_out} "
+              f"({len(obs.tracer.events)} events, "
+              f"{obs.tracer.dropped} dropped)")
+
+
+def _pctl_line(s, prefix: str = "") -> str:
+    """p50/p95/p99 TTFT + ITL line from the streaming histograms."""
+    def pct(series):
+        return "/".join(f"{series.quantile(q) * 1e3:.1f}"
+                        for q in (0.5, 0.95, 0.99))
+    return (f"{prefix}pctl: ttft_ms p50/p95/p99={pct(s.ttft_s)} "
+            f"itl_ms p50/p95/p99={pct(s.itl_s)} "
+            f"tokens={s.tokens_out}")
 
 
 if __name__ == "__main__":

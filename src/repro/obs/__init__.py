@@ -1,0 +1,63 @@
+"""``repro.obs`` — host-side observability: metrics, tracing, exposition.
+
+The serving stack's measurement layer (DESIGN.md §13).  One hard rule
+everywhere: instrumentation is PURELY host-side — no device ops, no new
+jit inputs — so served tokens are byte-identical with observability on or
+off (conformance-gated in tests/test_serving_conformance.py).
+
+* ``registry``   — :class:`MetricsRegistry` of counters / gauges /
+                   O(1)-memory log-bucketed streaming histograms
+                   (p50/p95/p99 without retaining samples);
+* ``trace``      — request-lifecycle spans → Chrome trace-event JSON
+                   (Perfetto-loadable), plus the phase stack;
+* ``watch``      — jit compile-watch (recompile count + wall time per
+                   phase, via ``jax.monitoring``);
+* ``exposition`` — Prometheus text format + JSON snapshot writers (and
+                   the strict parser CI gates on);
+* ``snapshot``   — the uniform engine-metrics schema every benchmark
+                   artifact embeds.
+
+``Observability`` bundles one engine's registry + tracer; construct with
+``trace=True`` to record spans (``serving.Engine(obs=…)``), default off.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from .exposition import (parse_prometheus, to_prometheus, write_json_snapshot,
+                         write_prometheus)
+from .registry import (BUCKETS_PER_DECADE, GLOBAL, Counter, Gauge, Histogram,
+                       LatencySeries, MetricsRegistry, bucket_label,
+                       global_registry)
+from .snapshot import engine_snapshot, stats_snapshot
+from .trace import (NULL_SPAN, Span, Tracer, current_phase, phase_scope,
+                    validate_trace)
+from .watch import compile_stats, install_compile_watch
+
+__all__ = [
+    "BUCKETS_PER_DECADE", "Counter", "GLOBAL", "Gauge", "Histogram",
+    "LatencySeries", "MetricsRegistry", "NULL_SPAN", "Observability",
+    "Span", "Tracer", "bucket_label", "compile_stats", "current_phase",
+    "engine_snapshot", "global_registry", "install_compile_watch",
+    "parse_prometheus", "phase_scope", "stats_snapshot", "to_prometheus",
+    "validate_trace", "write_json_snapshot", "write_prometheus",
+]
+
+
+class Observability:
+    """One serving engine's observability bundle: a private metrics
+    registry (``EngineStats`` mounts its counters/histograms there) and a
+    tracer (disabled unless ``trace=True``).  Constructing one also
+    installs the process-wide jit compile-watch (idempotent)."""
+
+    def __init__(self, trace: bool = False,
+                 registry: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None):
+        self.registry = registry if registry is not None \
+            else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else Tracer(enabled=trace)
+        install_compile_watch()
+
+    @property
+    def trace_enabled(self) -> bool:
+        return self.tracer.enabled

@@ -116,6 +116,8 @@ warnings.filterwarnings("ignore",
 from ..configs.base import ArchConfig
 from ..engine import DecomposeEngine, EngineConfig
 from ..models import api
+from ..obs import (NULL_SPAN, LatencySeries, MetricsRegistry, Observability,
+                   phase_scope)
 
 Array = jax.Array
 
@@ -158,50 +160,109 @@ class Request:
     t_done: float = 0.0
 
 
-@dataclasses.dataclass
 class EngineStats:
-    prefills: int = 0                # admitted REQUESTS (one per request)
-    prefill_batches: int = 0         # admission batches (jit launches)
-    decode_steps: int = 0            # decode ROUNDS (tokens per live slot)
-    blocks: int = 0                  # decode LAUNCHES (= steps unless the
-    #                                  fused loop batches rounds per dispatch)
-    tokens_out: int = 0
-    tail_folds: int = 0              # per-slot compress_tail events
-    stopped_eos: int = 0             # finished on a stop token
-    stopped_budget: int = 0          # finished on max_new_tokens / max_len
-    prefix_hits: int = 0             # admissions served from the prefix cache
-    prefix_misses: int = 0           # lookups that fell through to prefill
-    stalls: int = 0                  # admissions deferred on page capacity
-    prefill_inflight_peak: int = 0   # max concurrently in-flight tickets
-    #                                  (async mode; 0 under sync admission)
-    wall_s: float = 0.0              # accrued PER step() — benchmarks and
-    #                                  the serve CLI driving step() directly
-    #                                  see real tok/s, not inf
-    ttft_s: List[float] = dataclasses.field(default_factory=list)
-    # TTFT split (aligned 1:1 with ttft_s): queue wait (submit → prefill
-    # dispatch) vs prefill compute (dispatch → first token).  The async
-    # A/B compares queue wait — compute is the same device work either way.
-    ttft_queue_s: List[float] = dataclasses.field(default_factory=list)
-    ttft_compute_s: List[float] = dataclasses.field(default_factory=list)
-    itl_s: List[float] = dataclasses.field(default_factory=list)
+    """Per-engine serving counters + latency distributions, mounted on a
+    ``repro.obs`` :class:`MetricsRegistry` (DESIGN.md §13).
+
+    The attribute API is unchanged from the pre-obs dataclass — counters
+    read/write as plain numbers (``stats.prefills += 1``), and the
+    latency members (``ttft_s``/``ttft_queue_s``/``ttft_compute_s``/
+    ``itl_s``) still ``append``/``extend``/iterate like lists — but the
+    storage moved onto registry metrics: counters are ``Counter``s,
+    latencies are O(1)-memory streaming histograms with a CAPPED
+    recent-sample reservoir instead of the old unbounded per-request
+    Python lists.  ``len(itl_s)`` reports the total observation count
+    (the histogram counter), so the ``len(itl_s) == tokens_out``
+    invariant survives the bound; iteration yields only the recent
+    window.  ``mean_*`` come from the exact streaming sum/count, and
+    p50/p95/p99 are available via ``.quantile(q)`` on any series.
+    """
+
+    _COUNTERS = (
+        ("prefills", "admitted requests (one per request)"),
+        ("prefill_batches", "admission batches (jit launches)"),
+        ("decode_steps", "decode rounds (one token per live slot)"),
+        ("blocks", "decode launches (== steps unless the fused loop "
+                   "batches rounds per dispatch)"),
+        ("tokens_out", "decode tokens emitted"),
+        ("tail_folds", "per-slot compress_tail events"),
+        ("stopped_eos", "requests finished on a stop token"),
+        ("stopped_budget", "requests finished on max_new_tokens/max_len"),
+        ("prefix_hits", "admissions served from the prefix cache"),
+        ("prefix_misses", "prefix lookups that fell through to prefill"),
+        ("stalls", "admissions deferred on page capacity"),
+        ("wall_s", "wall seconds accrued per step()"),
+    )
+    _GAUGES = (
+        ("prefill_inflight_peak",
+         "max concurrently in-flight prefill tickets (async mode)"),
+    )
+    _HISTS = (
+        ("ttft_s", "ttft_seconds", "submit to first token"),
+        # TTFT split (aligned 1:1 with ttft_s): queue wait (submit →
+        # prefill dispatch) vs prefill compute (dispatch → first token).
+        # The async A/B compares queue wait — compute is the same device
+        # work either way.
+        ("ttft_queue_s", "ttft_queue_seconds",
+         "queue wait: submit to prefill dispatch"),
+        ("ttft_compute_s", "ttft_compute_seconds",
+         "prefill compute: dispatch to first token"),
+        ("itl_s", "itl_seconds", "inter-token latency"),
+    )
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None):
+        self.registry = registry if registry is not None \
+            else MetricsRegistry()
+        self._m = {}
+        for name, help_ in self._COUNTERS:
+            metric = "serving_wall_seconds" if name == "wall_s" \
+                else f"serving_{name}"
+            self._m[name] = self.registry.counter(metric, help_)
+        for name, help_ in self._GAUGES:
+            self._m[name] = self.registry.gauge(f"serving_{name}", help_)
+        for name, metric, help_ in self._HISTS:
+            self._m[name] = LatencySeries(
+                self.registry.histogram(f"serving_{metric}", help_))
+
+    def __repr__(self) -> str:
+        return (f"EngineStats(prefills={self.prefills}, "
+                f"tokens_out={self.tokens_out}, "
+                f"decode_steps={self.decode_steps})")
 
     @property
     def mean_ttft_s(self) -> float:
-        return sum(self.ttft_s) / len(self.ttft_s) if self.ttft_s else 0.0
+        return self.ttft_s.mean
 
     @property
     def mean_ttft_queue_s(self) -> float:
-        return sum(self.ttft_queue_s) / len(self.ttft_queue_s) \
-            if self.ttft_queue_s else 0.0
+        return self.ttft_queue_s.mean
 
     @property
     def mean_ttft_compute_s(self) -> float:
-        return sum(self.ttft_compute_s) / len(self.ttft_compute_s) \
-            if self.ttft_compute_s else 0.0
+        return self.ttft_compute_s.mean
 
     @property
     def mean_itl_s(self) -> float:
-        return sum(self.itl_s) / len(self.itl_s) if self.itl_s else 0.0
+        return self.itl_s.mean
+
+    def snapshot(self, wall_s: Optional[float] = None) -> dict:
+        """The uniform ``repro.obs/v1`` metrics snapshot (benchmarks and
+        the serve CLI embed this; see ``obs.snapshot``)."""
+        from ..obs import stats_snapshot
+        return stats_snapshot(self, wall_s=wall_s)
+
+
+def _stat_counter(name: str) -> property:
+    return property(lambda self: self._m[name].value,
+                    lambda self, v: self._m[name].set(v))
+
+
+for _name, _ in EngineStats._COUNTERS + EngineStats._GAUGES:
+    setattr(EngineStats, _name, _stat_counter(_name))
+for _name, _metric, _ in EngineStats._HISTS:
+    setattr(EngineStats, _name,
+            property(lambda self, _n=_name: self._m[_n]))
+del _name, _metric
 
 
 class Scheduler:
@@ -301,6 +362,7 @@ class PrefillTicket:
     complete: Callable               # () -> (first_tokens, frozen_lens)
     cancel: Callable                 # () -> None (release pages/refs)
     t_dispatch: float = 0.0
+    span: Any = None                 # obs.Span on the "tickets" track
 
     def ready(self) -> bool:
         return api.tree_ready(self.probe)
@@ -461,9 +523,16 @@ class Engine:
                  decode_block: Optional[Union[int, str]] = None,
                  prefill_async: Optional[bool] = None,
                  ready_order: str = "ready",
-                 sample_seed: int = 0):
+                 sample_seed: int = 0,
+                 obs: Optional[Observability] = None):
         assert admission in ("per_slot", "gang"), admission
         assert ready_order in ("ready", "deterministic"), ready_order
+        # Observability bundle (DESIGN.md §13): per-engine metrics
+        # registry + tracer.  Purely host-side — spans and counters never
+        # feed a jit or touch device state, so tokens are byte-identical
+        # with tracing on or off (conformance-gated).
+        self.obs = obs if obs is not None else Observability()
+        self.trace = self.obs.tracer
         self.cfg, self.params = cfg, params
         self.slots, self.max_len = slots, max_len
         self.admission = admission
@@ -566,7 +635,10 @@ class Engine:
         self._pool: List[PrefillTicket] = []     # in-flight admissions
         self._reserved = np.zeros(slots, bool)   # dispatched, not spliced
         self.admit_log: List[int] = []           # uids in dispatch order
-        self.stats = EngineStats()
+        self.stats = EngineStats(registry=self.obs.registry)
+        # open request-lifecycle spans: uid -> {"request"/"queue"/
+        # "prefill"/"decode": Span} (NULL_SPANs when tracing is off)
+        self._req_spans: dict = {}
         # _round counts COMPLETED decode rounds (a fused block advances it
         # by its step count); admission due-ness and sampler keys both
         # index it, which is what keeps any interleaving of block sizes
@@ -606,6 +678,14 @@ class Engine:
                 f"in a max_len={self.max_len} cache")
         if not req.t_submit:
             req.t_submit = time.perf_counter()
+        if self.trace.enabled:
+            track = f"req/{req.uid}"
+            self._req_spans[req.uid] = {
+                "request": self.trace.begin(
+                    "request", track,
+                    {"uid": req.uid, "prompt_tokens": len(req.prompt)}),
+                "queue": self.trace.begin("queue", track),
+            }
         self.sched.submit(req)
 
     def step(self) -> List[Request]:
@@ -616,8 +696,10 @@ class Engine:
         ``step()``-driven callers (benchmarks, the serve CLI loop) get the
         same tok/s accounting as ``run()``."""
         t0 = time.perf_counter()
+        step_span = self.trace.begin("step", "engine",
+                                     {"round": self._round})
+        finished: List[Request] = []
         try:
-            finished: List[Request] = []
             if self._pool:
                 # splice any in-flight admissions whose results came
                 # ready since the last boundary; when nothing is live
@@ -626,13 +708,15 @@ class Engine:
                 finished.extend(self._drain_pool(
                     block=not any(r is not None for r in self.live)))
             if self._round % self.admit_every == 0 or not self._occupied():
-                finished.extend(self._admit())
+                with self.trace.span("admit", "engine"):
+                    finished.extend(self._admit())
             if any(self.live):
                 finished.extend(self._decode_rounds())
             else:
                 self._round += 1     # idle step still advances the clock
             return finished
         finally:
+            step_span.end(finished=len(finished))
             self.stats.wall_s += time.perf_counter() - t0
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
@@ -686,6 +770,14 @@ class Engine:
             self.stats.stopped_eos += 1
         else:
             self.stats.stopped_budget += 1
+        spans = self._req_spans.pop(req.uid, None)
+        if spans:
+            # Span.end is idempotent: queue/prefill already ended at their
+            # own boundaries; this closes whatever is still open
+            for name in ("queue", "prefill", "decode"):
+                if name in spans:
+                    spans[name].end()
+            spans["request"].end(tokens=len(req.out_tokens), eos=eos)
 
     def _check_stop(self, slot: int, req: Request, now: float) -> bool:
         """Stop-token / budget check after a token was appended."""
@@ -818,10 +910,16 @@ class Engine:
         now = time.perf_counter()
         for req in batch:
             req.t_dispatch = now
+            spans = self._req_spans.get(req.uid)
+            if spans:
+                spans["queue"].end()
+                spans["prefill"] = self.trace.begin(
+                    "prefill", f"req/{req.uid}", {"plen": plen})
         self.admit_log.extend(r.uid for r in batch)
         self.stats.prefills += len(batch)
         if self.admission == "gang":
-            logits = self._admit_gang(batch, slots_idx, plen, has_live)
+            with phase_scope("prefill"):
+                logits = self._admit_gang(batch, slots_idx, plen, has_live)
             nxt = self._sample_host(logits, stream=1)[slots_idx]
             fls = np.full(len(batch), plen if self.dkv_rank else 0,
                           np.int32)
@@ -829,10 +927,18 @@ class Engine:
             return self._activate(batch, slots_idx, plen, nxt, fls)
         for slot in slots_idx:
             self._reserved[slot] = True
-        if self.pager is not None:
-            tickets = self._dispatch_paged(batch, slots_idx, plen, looks)
-        else:
-            tickets = [self._dispatch_slab(batch, slots_idx, plen)]
+        with phase_scope("prefill"):
+            if self.pager is not None:
+                tickets = self._dispatch_paged(batch, slots_idx, plen,
+                                               looks)
+            else:
+                tickets = [self._dispatch_slab(batch, slots_idx, plen)]
+        if self.trace.enabled:
+            for t in tickets:
+                t.span = self.trace.begin(
+                    "ticket", "tickets",
+                    {"requests": len(t.requests), "plen": t.plen,
+                     "uids": [r.uid for r in t.requests]})
         if self.prefill_async and self.ready_order == "ready":
             self._pool.extend(tickets)
             self.stats.prefill_inflight_peak = max(
@@ -858,6 +964,11 @@ class Engine:
             self.frozen_len[slot] = fls[j]
             req.out_tokens.append(int(nxt[j]))
             req.t_first = req.t_last = now
+            spans = self._req_spans.get(req.uid)
+            if spans:
+                spans["prefill"].end(slot=slot)
+                spans["decode"] = self.trace.begin("decode",
+                                                   f"req/{req.uid}")
             self.stats.ttft_s.append(now - req.t_submit)
             self.stats.ttft_queue_s.append(req.t_dispatch - req.t_submit)
             self.stats.ttft_compute_s.append(now - req.t_dispatch)
@@ -868,7 +979,12 @@ class Engine:
         return finished
 
     def _finish_ticket(self, t: PrefillTicket) -> List[Request]:
-        nxt, fls = t.complete()
+        with self.trace.span("splice", "engine",
+                             {"requests": len(t.requests)}), \
+                phase_scope("splice"):
+            nxt, fls = t.complete()
+        if t.span is not None:
+            t.span.end()
         return self._activate(t.requests, t.slots, t.plen, nxt, fls)
 
     def _drain_pool(self, *, block: bool) -> List[Request]:
@@ -883,12 +999,15 @@ class Engine:
         finished: List[Request] = []
         rest: List[PrefillTicket] = []
         spliced = 0
-        for t in self._pool:
-            if (block and not spliced and not rest) or t.ready():
-                finished.extend(self._finish_ticket(t))
-                spliced += 1
-            else:
-                rest.append(t)
+        with self.trace.span("drain-pool", "engine",
+                             {"pool": len(self._pool)}) as dspan:
+            for t in self._pool:
+                if (block and not spliced and not rest) or t.ready():
+                    finished.extend(self._finish_ticket(t))
+                    spliced += 1
+                else:
+                    rest.append(t)
+            dspan.annotate(spliced=spliced)
         self._pool = rest
         return finished
 
@@ -907,11 +1026,22 @@ class Engine:
         n = 0
         for t in self._pool:
             t.cancel()
+            if t.span is not None:
+                t.span.end(cancelled=True)
             for slot in t.slots:
                 self._reserved[slot] = False
             self.stats.prefills -= len(t.requests)
             for req in t.requests:
                 req.t_dispatch = 0.0
+                spans = self._req_spans.get(req.uid)
+                if spans:
+                    spans.pop("prefill", NULL_SPAN).end(cancelled=True)
+                    if requeue:      # back in the queue: reopen its wait
+                        spans["queue"] = self.trace.begin(
+                            "queue", f"req/{req.uid}", {"requeued": True})
+                    else:
+                        spans["request"].end(dropped=True)
+                        del self._req_spans[req.uid]
                 n += 1
                 for k in range(len(self.admit_log) - 1, -1, -1):
                     if self.admit_log[k] == req.uid:
@@ -1278,10 +1408,13 @@ class Engine:
             # A co-folded slot's unused tail rows are zeros and fold
             # as zero rows — exactness is unaffected.
             fold = must | (live_m & (occ >= max(1, self.dkv_tail // 2)))
-            if self.pager is not None:
-                self._fold_slots_paged(live_m, must, fold)
-            else:
-                self._fold_slots(live_m, fold)
+            with self.trace.span("fold", "engine",
+                                 {"slots": int(fold.sum())}), \
+                    phase_scope("fold"):
+                if self.pager is not None:
+                    self._fold_slots_paged(live_m, must, fold)
+                else:
+                    self._fold_slots(live_m, fold)
 
     def _last_tokens(self) -> np.ndarray:
         tok = np.zeros((self.slots,), np.int32)
@@ -1305,24 +1438,28 @@ class Engine:
 
     def _decode_round(self) -> List[Request]:
         tok = self._last_tokens()
-        if self.dkv_rank:
-            if self.pager is not None:
-                pg = self.pager
-                logits, pg.cache = pg._decode(
-                    self.params, jnp.asarray(tok), pg.cache,
-                    jnp.asarray(self.pos), jnp.asarray(self.frozen_len),
-                    jnp.asarray(pg.bt_array(pg.bt_u)),
-                    jnp.asarray(pg.bt_array(pg.bt_t, pg.ntp)),
-                    pg.slab_t, pg.slab_r, self.dkv_tail)
+        with self.trace.span("decode-step", "engine"), \
+                phase_scope("decode"):
+            if self.dkv_rank:
+                if self.pager is not None:
+                    pg = self.pager
+                    logits, pg.cache = pg._decode(
+                        self.params, jnp.asarray(tok), pg.cache,
+                        jnp.asarray(self.pos),
+                        jnp.asarray(self.frozen_len),
+                        jnp.asarray(pg.bt_array(pg.bt_u)),
+                        jnp.asarray(pg.bt_array(pg.bt_t, pg.ntp)),
+                        pg.slab_t, pg.slab_r, self.dkv_tail)
+                else:
+                    logits, self.cache = self._decode_dkv(
+                        self.params, jnp.asarray(tok), self.cache,
+                        jnp.asarray(self.pos),
+                        jnp.asarray(self.frozen_len))
             else:
-                logits, self.cache = self._decode_dkv(
+                logits, self.cache = self._decode(
                     self.params, jnp.asarray(tok), self.cache,
-                    jnp.asarray(self.pos), jnp.asarray(self.frozen_len))
-        else:
-            logits, self.cache = self._decode(self.params, jnp.asarray(tok),
-                                              self.cache,
-                                              jnp.asarray(self.pos))
-        nxt = self._sample_host(logits)
+                    jnp.asarray(self.pos))
+            nxt = self._sample_host(logits)
         self.stats.decode_steps += 1
         self.stats.blocks += 1
         now = time.perf_counter()
@@ -1397,32 +1534,36 @@ class Engine:
         key = jax.random.fold_in(self._key, 0)      # decode sample stream
         n, r0 = jnp.int32(blk), jnp.int32(self._round)
         t0 = time.perf_counter()
-        if self.dkv_rank and self.pager is not None:
-            pg = self.pager
-            from .paged import _jitted_paged_decode_block
-            fn = _jitted_paged_decode_block(self.cfg, self.decode_block,
-                                            self.sampler, self.mesh)
-            buf, steps, _, pg.cache = fn(
-                self.params, jnp.asarray(tok), pg.cache,
-                jnp.asarray(self.pos), jnp.asarray(self.frozen_len),
-                jnp.asarray(pg.bt_array(pg.bt_u)),
-                jnp.asarray(pg.bt_array(pg.bt_t, pg.ntp)),
-                n, stops, key, r0, pg.slab_t, pg.slab_r, self.dkv_tail)
-        elif self.dkv_rank:
-            fn = _jitted_dkv_decode_block(self.cfg, self.decode_block,
+        bspan = self.trace.begin("decode-block", "engine", {"max_steps": blk})
+        with phase_scope("decode"):
+            if self.dkv_rank and self.pager is not None:
+                pg = self.pager
+                from .paged import _jitted_paged_decode_block
+                fn = _jitted_paged_decode_block(self.cfg, self.decode_block,
+                                                self.sampler, self.mesh)
+                buf, steps, _, pg.cache = fn(
+                    self.params, jnp.asarray(tok), pg.cache,
+                    jnp.asarray(self.pos), jnp.asarray(self.frozen_len),
+                    jnp.asarray(pg.bt_array(pg.bt_u)),
+                    jnp.asarray(pg.bt_array(pg.bt_t, pg.ntp)),
+                    n, stops, key, r0, pg.slab_t, pg.slab_r, self.dkv_tail)
+            elif self.dkv_rank:
+                fn = _jitted_dkv_decode_block(self.cfg, self.decode_block,
+                                              self.sampler, self.mesh)
+                buf, steps, _, self.cache = fn(
+                    self.params, jnp.asarray(tok), self.cache,
+                    jnp.asarray(self.pos), jnp.asarray(self.frozen_len),
+                    n, stops, key, r0)
+            else:
+                fn = _jitted_decode_block(self.fns, self.cfg,
+                                          self.decode_block,
                                           self.sampler, self.mesh)
-            buf, steps, _, self.cache = fn(
-                self.params, jnp.asarray(tok), self.cache,
-                jnp.asarray(self.pos), jnp.asarray(self.frozen_len),
-                n, stops, key, r0)
-        else:
-            fn = _jitted_decode_block(self.fns, self.cfg, self.decode_block,
-                                      self.sampler, self.mesh)
-            buf, steps, _, self.cache = fn(
-                self.params, jnp.asarray(tok), self.cache,
-                jnp.asarray(self.pos), n, stops, key, r0)
-        steps = int(steps)
-        toks = np.asarray(buf)[:steps]              # [steps, slots], syncs
+                buf, steps, _, self.cache = fn(
+                    self.params, jnp.asarray(tok), self.cache,
+                    jnp.asarray(self.pos), n, stops, key, r0)
+            steps = int(steps)
+            toks = np.asarray(buf)[:steps]          # [steps, slots], syncs
+        bspan.end(steps=steps)
         now = time.perf_counter()
         # ITL under block decode: one wall measurement per LAUNCH,
         # attributed wall/steps per token (the per-round "now − t_last"

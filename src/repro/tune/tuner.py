@@ -24,6 +24,7 @@ import functools
 from typing import Any, Dict, Mapping, Optional, Sequence, Tuple
 
 from . import cost_model, measure
+from ..obs import GLOBAL as _OBS
 from .cache import TuningCache, default_cache, entry_key, shape_bucket
 from .space import TunableSpace, get_space
 
@@ -140,6 +141,9 @@ def tune(kernel: str, shape: Sequence[int], dtype: Any = "float32", *,
         entry = cache.get(key)
         if entry is not None and (entry.get("measured_s") is not None
                                   or not measure_candidates):
+            _OBS.counter("tune_resolutions_total",
+                         "tuner queries by answer source",
+                         kernel=kernel, source="cache").inc()
             return _from_entry(key, entry)
 
     cands = candidates_for(kernel, fix)
@@ -165,6 +169,9 @@ def tune(kernel: str, shape: Sequence[int], dtype: Any = "float32", *,
         res = TuneResult(kernel, bucket, dt, key, dict(best), "model",
                          pred, None, table)
 
+    _OBS.counter("tune_resolutions_total",
+                 "tuner queries by answer source",
+                 kernel=kernel, source=res.source).inc()
     cache.put(key, _to_entry(res))
     if persist if persist is not None else measure_candidates:
         cache.save()
@@ -178,6 +185,8 @@ def tune(kernel: str, shape: Sequence[int], dtype: Any = "float32", *,
 @functools.lru_cache(maxsize=None)
 def _tuned_expansion(kernel: str, bucket: Tuple[int, ...], dtype: str,
                      backend: Optional[str], cache_path: str) -> int:
+    _OBS.counter("tune_lru_misses_total",
+                 "in-process tuner lru misses", kernel=kernel).inc()
     fix = {"backend": backend} if backend is not None else None
     res = tune(kernel, bucket, dtype, fix=fix)
     return int(res.best["expansion"])
@@ -190,6 +199,8 @@ def tuned_expansion(shape: Sequence[int], dtype: Any = "float32",
     shape-bucket — cache/model resolution behind an in-process lru (keyed
     on the cache path so tests pointing ``REPRO_TUNE_CACHE`` elsewhere
     don't see stale answers)."""
+    _OBS.counter("tune_lru_lookups_total",
+                 "in-process tuner lru lookups", kernel=kernel).inc()
     return _tuned_expansion(kernel, shape_bucket(shape), str(dtype),
                             backend, default_cache().path)
 
@@ -197,6 +208,8 @@ def tuned_expansion(shape: Sequence[int], dtype: Any = "float32",
 @functools.lru_cache(maxsize=None)
 def _tuned_decode_block(bucket: Tuple[int, ...], dtype: str,
                         cache_path: str) -> int:
+    _OBS.counter("tune_lru_misses_total",
+                 "in-process tuner lru misses", kernel="decode_block").inc()
     res = tune("decode_block", bucket, dtype)
     return int(res.best["block"])
 
@@ -206,6 +219,8 @@ def tuned_decode_block(shape: Sequence[int], dtype: Any = "float32") -> int:
     this (slots, decode horizon, kv width) bucket — answers the engine's
     ``decode_block="auto"`` the same way ``tuned_expansion`` answers
     ``expansion="auto"``."""
+    _OBS.counter("tune_lru_lookups_total",
+                 "in-process tuner lru lookups", kernel="decode_block").inc()
     return _tuned_decode_block(shape_bucket(shape), str(dtype),
                                default_cache().path)
 

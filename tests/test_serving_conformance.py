@@ -651,7 +651,7 @@ def test_fused_sharded_byte_identical_to_1_device(dense_model, tmp_path):
 
 
 def _serve_async_det(cfg, params, prompts, *, mesh=None, block=1,
-                     paged=False, sync=False, slots=MESH_SLOTS):
+                     paged=False, sync=False, slots=MESH_SLOTS, obs=None):
     """Staggered mid-decode arrivals on the async-dispatch engine in
     DETERMINISTIC ready-order (tickets splice at their dispatch round),
     or the synchronous engine when ``sync=True`` — identical schedule,
@@ -664,7 +664,7 @@ def _serve_async_det(cfg, params, prompts, *, mesh=None, block=1,
                                ready_order="deterministic")
     eng = Engine(cfg, params, slots=slots, max_len=MAX_LEN,
                  decompose_kv_rank=DKV_RANK, dkv_tail=DKV_TAIL,
-                 decompose_engine=de, paged=paged, **akw)
+                 decompose_engine=de, paged=paged, obs=obs, **akw)
     done = []
     eng.submit(Request(uid=0, prompt=prompts[0], max_new_tokens=MESH_NEW))
     arrivals = {3 * i: i for i in range(1, len(prompts))}
@@ -807,3 +807,72 @@ def test_exact_svd_vs_lanczos_near_full_rank():
     # a requested rank beyond min(T, kvw) caps at the achievable rank
     uc, _ = eng.decompose_kv(x, 100, exact=True)
     assert uc.shape[-1] == 24
+
+
+# ---------------------------------------------------------------------------
+# Observability neutrality (DESIGN.md §13: zero device ops)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("paged", [False, True])
+@pytest.mark.parametrize("sync", [True, False])
+@pytest.mark.parametrize("block", [1, 4])
+def test_observability_is_token_neutral(dense_model, paged, sync, block):
+    """THE §13 gate: full observability — metrics registry AND span
+    tracing enabled — must produce byte-identical tokens to the default
+    (trace-off) engine, for {slot, paged} × {sync, async} × {single-step,
+    fused} decode, across tail folds and staggered mid-decode arrivals.
+    Instrumentation is purely host-side; if a span or counter ever feeds
+    a jit or reorders a device launch, this is the test that catches it.
+    """
+    from repro.obs import Observability, validate_trace
+    cfg, params = dense_model
+    prompts = _prompts(cfg, lens=MESH_PROMPT_LENS)
+    base, _ = _serve_async_det(cfg, params, prompts, block=block,
+                               paged=paged, sync=sync)
+    obs = Observability(trace=True)
+    got, eng = _serve_async_det(cfg, params, prompts, block=block,
+                                paged=paged, sync=sync, obs=obs)
+    assert got == base, \
+        f"observability perturbed tokens (paged={paged}, sync={sync}, " \
+        f"block={block})"
+    # the instrumented run really recorded: request-lifecycle spans for
+    # every request, and engine stats on the obs registry
+    spans = validate_trace(obs.tracer.to_json())
+    assert spans >= 4 * len(prompts)     # request/queue/prefill/decode each
+    names = {ev["name"] for ev in obs.tracer.events}
+    expect = {"request", "queue", "prefill", "decode", "step"}
+    if not sync:
+        expect |= {"splice", "ticket"}
+    assert expect <= names, f"missing spans: {expect - names}"
+    reg_names = {m.name for m in obs.registry.metrics()}
+    assert "serving_tokens_out" in reg_names
+    assert eng.stats.registry is obs.registry
+
+
+def test_engine_stats_memory_bounded(dense_model):
+    """Satellite (a): latency series keep O(1) streaming state + a capped
+    reservoir — a long-running engine's stats must not grow with every
+    token — while ``len(itl_s) == tokens_out`` still holds via the
+    histogram counter."""
+    from repro.obs.registry import RESERVOIR_CAP
+    cfg, params = dense_model
+    prompts = _prompts(cfg, lens=MESH_PROMPT_LENS)
+    _, eng = _serve_async_det(cfg, params, prompts, block=1, sync=True)
+    s = eng.stats
+    assert len(s.itl_s) == s.tokens_out
+    assert len(s.ttft_s) == len(s.ttft_queue_s) == len(s.ttft_compute_s)
+    for series in (s.itl_s, s.ttft_s):
+        assert len(series.hist.recent) <= RESERVOIR_CAP
+        assert series.hist.count == len(series)
+    # the histogram mean is exact (streaming sum/count, not reservoir)
+    assert s.mean_itl_s == pytest.approx(s.itl_s.hist.sum
+                                         / s.itl_s.hist.count)
+    # simulate a long run: observe far past the cap, memory stays bounded
+    h = s.itl_s.hist
+    before = len(h.recent)
+    for i in range(4 * RESERVOIR_CAP):
+        s.itl_s.append(1e-3 * (1 + i % 7))
+    assert len(h.recent) == RESERVOIR_CAP
+    assert len(s.itl_s) == s.tokens_out + 4 * RESERVOIR_CAP
+    assert before <= RESERVOIR_CAP
