@@ -1,10 +1,13 @@
-"""Shared benchmark helpers: timing, CSV rows, v5e roofline cost model."""
+"""Shared benchmark helpers: timing, CSV rows, v5e roofline cost model,
+and the one sanctioned artifact writer."""
 from __future__ import annotations
 
 import time
-from typing import Callable, List, Tuple
+from typing import Any, Callable, List, Tuple
 
 import jax
+
+from repro.ioutil import atomic_write_json
 
 # TPU v5e constants (same as launch.dryrun)
 PEAK_FLOPS = 197e12
@@ -36,3 +39,14 @@ def v5e_time(flops: float, bytes_moved: float) -> float:
 def emit(rows: List[Row]) -> None:
     for name, us, derived in rows:
         print(f"{name},{us:.3f},{derived}")
+
+
+def write_json(path: str, obj: Any, **dump_kw: Any) -> None:
+    """Write a benchmark report artifact.
+
+    Every ``benchmarks/*.py`` report goes through here: atomic
+    tmp+``os.replace`` via ``repro.ioutil`` (parent dirs created), so
+    dcomlint rule D3 holds by construction — CI tailing an artifact mid
+    re-write sees the previous complete report, never a truncated one.
+    """
+    atomic_write_json(path, obj, **dump_kw)

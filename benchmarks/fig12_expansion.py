@@ -35,11 +35,10 @@ consequences on v5e are in fig11's modeled section.
 """
 from __future__ import annotations
 
-import json
 import os
 from typing import Dict, List, Optional
 
-from .common import Row
+from .common import Row, write_json
 
 AB_JSON = os.path.join(os.path.dirname(__file__), "out", "fig12_ab.json")
 
@@ -136,9 +135,7 @@ def run_ab(quick: bool = False, out_json: Optional[str] = AB_JSON
         "default_vs_opt": default_s / opt_s,
     }
     if out_json:
-        os.makedirs(os.path.dirname(out_json), exist_ok=True)
-        with open(out_json, "w") as fh:
-            json.dump(data, fh, indent=1, sort_keys=True)
+        write_json(out_json, data, indent=1, sort_keys=True)
     return data
 
 

@@ -10,7 +10,6 @@ carry it across runs and a deployment can ship it with the binary.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 import time
@@ -38,6 +37,8 @@ def run_tune(quick: bool, out_path: str) -> None:
     """Measure-tune every registered kernel and write the cache artifact."""
     from repro import tune
 
+    from .common import write_json
+
     shapes = TUNE_SHAPES_QUICK if quick else TUNE_SHAPES
     cache = tune.default_cache()
     print("name,us_per_call,derived")
@@ -60,10 +61,8 @@ def run_tune(quick: bool, out_path: str) -> None:
     print(f"tune/engine_backend,{(bres.measured_s or 0.0) * 1e6:.3f},"
           f"measured:backend={bres.best['backend']}", flush=True)
     cache.save()
-    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
-    with open(out_path, "w") as fh:
-        json.dump({"path": cache.path, "entries": cache.as_dict()}, fh,
-                  indent=1, sort_keys=True)
+    write_json(out_path, {"path": cache.path, "entries": cache.as_dict()},
+               indent=1, sort_keys=True)
     print(f"_meta/tune_cache,{len(cache)},{out_path}", flush=True)
 
 
@@ -102,12 +101,12 @@ def main() -> None:
     print("name,us_per_call,derived")
     ok = True
     for name, mod in mods.items():
-        t0 = time.time()
+        t0 = time.perf_counter()
         try:
             for row in mod.run(quick=args.quick):
                 print(f"{row[0]},{row[1]:.3f},{row[2]}", flush=True)
-            print(f"_meta/{name}_wall_s,{(time.time() - t0) * 1e6:.0f},ok",
-                  flush=True)
+            print(f"_meta/{name}_wall_s,"
+                  f"{(time.perf_counter() - t0) * 1e6:.0f},ok", flush=True)
         except Exception as e:                       # keep the suite going
             ok = False
             import traceback

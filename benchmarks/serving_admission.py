@@ -30,13 +30,12 @@ CLI (writes the CI artifact):
 """
 from __future__ import annotations
 
-import json
 import time
 from typing import Dict, List
 
 import numpy as np
 
-from .common import Row
+from .common import Row, write_json
 
 
 def _arrivals(cfg, requests: int, stagger: int, prompt_len: int,
@@ -219,10 +218,7 @@ def run(quick: bool = False, json_path: str = None) -> List[Row]:
                  f"p99_itl_improvement={ratio:.2f}x;"
                  f"gate={'enforced' if overlap else 'skipped:no_overlap'}"))
     if json_path:
-        import os
-        os.makedirs(os.path.dirname(json_path) or ".", exist_ok=True)
-        with open(json_path, "w") as f:
-            json.dump(report, f, indent=2)
+        write_json(json_path, report, indent=2)
     # the disaggregation claim, asserted only where the runtime can
     # actually overlap executables (artifact carries both p99s either way)
     if overlap:

@@ -21,13 +21,12 @@ CLI (writes the CI artifact):
 """
 from __future__ import annotations
 
-import json
 import time
 from typing import Dict, List
 
 import numpy as np
 
-from .common import Row
+from .common import Row, write_json
 
 
 def _mixed_arrivals(cfg, requests: int, stagger: int, max_new: int):
@@ -191,10 +190,7 @@ def run(quick: bool = False, json_path: str = None) -> List[Row]:
                  f"speedup={report['prefix']['hit_speedup']:.2f}x"))
 
     if json_path:
-        import os
-        os.makedirs(os.path.dirname(json_path) or ".", exist_ok=True)
-        with open(json_path, "w") as f:
-            json.dump(report, f, indent=2)
+        write_json(json_path, report, indent=2)
     return rows
 
 

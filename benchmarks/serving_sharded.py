@@ -45,7 +45,7 @@ import tempfile
 import time
 from typing import Dict, List
 
-from .common import Row
+from .common import Row, write_json
 
 KV_RANK, KV_TAIL = 8, 8
 FUSED_BLOCK = 8                          # capped by KV_TAIL anyway
@@ -120,8 +120,7 @@ def run_arm(mesh_spec: str, slots: int, requests: int, prompt_len: int,
             ku = eng.cache["k_u"]
             report["ku_nshards"] = len(ku.addressable_shards)
             report["ku_spec"] = str(ku.sharding.spec)
-    with open(json_path, "w") as f:
-        json.dump(report, f)
+    write_json(json_path, report)
 
 
 def run(quick: bool = False, json_path: str = None) -> List[Row]:
@@ -190,9 +189,7 @@ def run(quick: bool = False, json_path: str = None) -> List[Row]:
     # artifact FIRST (it must carry the conformance bit — and the per-arm
     # stats needed to diagnose a divergence — even when the gate fails)
     if json_path:
-        os.makedirs(os.path.dirname(json_path) or ".", exist_ok=True)
-        with open(json_path, "w") as f:
-            json.dump(report, f, indent=2)
+        write_json(json_path, report, indent=2)
     assert not mismatched, \
         f"serving modes diverged from {ref_key}: {mismatched}"
     assert results["8dev"].get("ku_nshards") == 8, \
@@ -216,8 +213,7 @@ def run(quick: bool = False, json_path: str = None) -> List[Row]:
         gate = f"skipped:{host_cores}_cores({ratio:.2f}x)"
     report["gate_8dev_ge_1dev_fused"] = gate
     if json_path:                        # rewrite with the gate outcome
-        with open(json_path, "w") as f:
-            json.dump(report, f, indent=2)
+        write_json(json_path, report, indent=2)
     rows: List[Row] = []
     for arm, r in results.items():
         for mode, m in r["modes"].items():

@@ -169,7 +169,9 @@ def gc_old(directory: str, keep: int = 3) -> None:
     # sweep staging dirs abandoned by hard-killed writers (in-process
     # failures clean up in save(); a LIVE writer's dir is mtime-fresh —
     # np.save touches it continuously — so the age gate never races one)
-    now = time.time()
+    # epoch time on purpose: compared against os.path.getmtime, which is
+    # wall-clock — perf_counter has no defined epoch to compare against
+    now = time.time()  # dcomlint: disable=D2
     for d in os.listdir(directory):
         if not d.startswith(_STAGING_PREFIX):
             continue

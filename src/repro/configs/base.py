@@ -178,9 +178,10 @@ def all_archs() -> Dict[str, ArchConfig]:
 
 def _load_all() -> None:
     # Import every per-arch module once; each calls register().
-    from . import (gemma_2b, starcoder2_7b, deepseek_7b, granite_3_2b,  # noqa
-                   olmoe_1b_7b, kimi_k2, zamba2_1_2b, llama32_vision_11b,
-                   mamba2_780m, seamless_m4t_medium, llama2_7b)
+    from . import (deepseek_7b, gemma_2b, granite_3_2b,  # noqa: F401
+                   kimi_k2, llama2_7b, llama32_vision_11b, mamba2_780m,
+                   olmoe_1b_7b, seamless_m4t_medium, starcoder2_7b,
+                   zamba2_1_2b)
 
 
 def cells(arch: ArchConfig) -> Tuple[str, ...]:

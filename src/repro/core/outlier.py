@@ -23,7 +23,7 @@ import os
 import tempfile
 import warnings
 from functools import partial
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

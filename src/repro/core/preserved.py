@@ -22,7 +22,6 @@ for all matmuls within a layer".
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import List, Optional, Sequence, Tuple
 
 import jax

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import zlib
-from typing import Any, Dict, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

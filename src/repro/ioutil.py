@@ -1,0 +1,44 @@
+"""Atomic file-write helpers — the one sanctioned way to persist artifacts.
+
+Every durable file this repo writes (tuner cache, threshold tables,
+checkpoint manifests, benchmark reports, metrics/trace exports) must land
+atomically: stage into a temp file in the *destination directory* (same
+filesystem, so the rename is atomic) and ``os.replace`` over the final
+path.  A crash mid-write then leaves either the previous file or the new
+one on disk — never a truncated JSON that a later reader half-parses.
+
+This module exists because the pattern was re-implemented (and twice
+re-broken: the pre-PR-4 ``ThresholdTable.save``, the pre-PR-9 benchmark
+report writers) at every call site.  ``repro.lint`` rule D3 now rejects a
+bare ``open(path, "w")`` that is not part of a tmp+``os.replace`` dance,
+so new persistence code is pushed here by construction.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any
+
+
+def atomic_write_text(path: str, text: str) -> None:
+    """Write ``text`` to ``path`` atomically (tmp file + ``os.replace``)."""
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=".atomic-", suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as fh:
+            fh.write(text)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+def atomic_write_json(path: str, obj: Any, **dump_kw: Any) -> None:
+    """``json.dump(obj)`` to ``path`` atomically.  ``dump_kw`` forwards to
+    ``json.dumps`` (``indent``, ``sort_keys``, ...)."""
+    atomic_write_text(path, json.dumps(obj, **dump_kw))

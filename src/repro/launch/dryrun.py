@@ -16,8 +16,6 @@ os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
                            + os.environ.get("XLA_FLAGS", ""))
 
 import argparse
-import json
-import re
 import time
 import traceback
 from typing import Any, Dict, Optional
@@ -28,6 +26,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs.base import SHAPES, all_archs, cells, get_arch
 from ..distributed import sharding as sh
+from ..ioutil import atomic_write_json
 from ..models import api
 from ..runtime import steps
 from .mesh import make_production_mesh
@@ -35,9 +34,8 @@ from .mesh import make_production_mesh
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "results", "dryrun")
 
-from .roofline import (_COLLECTIVES, _RING_FACTOR, HBM_BW, ICI_BW,
-                       PEAK_FLOPS, _shape_bytes, collective_stats,
-                       probe_plan, roofline_terms)
+from .roofline import (_COLLECTIVES, collective_stats, probe_plan,
+                       roofline_terms)
 
 # ---------------------------------------------------------------------------
 # Cell construction
@@ -207,7 +205,7 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
     """Lower + compile one cell; extract roofline inputs."""
     mesh = make_production_mesh(multi_pod=multi_pod)
     cfg = get_arch(arch_name)
-    t0 = time.time()
+    t0 = time.perf_counter()
     step, args, in_shd, out_shd = build_cell(arch_name, shape_name, mesh,
                                              **kw)
     donate_argnums = _donation(SHAPES[shape_name].kind, donate)
@@ -215,9 +213,9 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
         lowered = jax.jit(step, in_shardings=in_shd,
                           out_shardings=out_shd,
                           donate_argnums=donate_argnums).lower(*args)
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.perf_counter() - t0 - t_lower
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
@@ -278,11 +276,9 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
 
 
 def save_record(rec: Dict[str, Any], tag: str = "") -> str:
-    os.makedirs(RESULTS_DIR, exist_ok=True)
     name = f"{rec['arch']}_{rec['shape']}_{rec['mesh']}{tag}.json"
     path = os.path.join(RESULTS_DIR, name)
-    with open(path, "w") as f:
-        json.dump(rec, f, indent=2)
+    atomic_write_json(path, rec, indent=2)
     return path
 
 

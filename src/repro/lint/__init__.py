@@ -1,0 +1,51 @@
+"""dcomlint — the repo's own static analyzer (DESIGN.md §14).
+
+Eight PRs of serving work accumulated invariants that runtime suites
+enforce expensively (byte-identical tokens under sharding/fusion/async,
+host-side-only observability, atomic persistence, donated-buffer
+discipline) and that several past bugs violated in ways a lint pass
+catches in seconds: the PYTHONHASHSEED-randomized ``hash()`` PowerSGD
+seed (PR 4), the non-atomic ``ThresholdTable.save`` (PR 4), the
+``time.time()`` latency stamps (PR 2).  dcomlint turns each of those
+into an AST rule that runs on every commit:
+
+======  ===========================  =====================================
+ id      name                         invariant
+======  ===========================  =====================================
+ D1      builtin-hash-or-id           no ``hash()``/``id()`` into persisted
+                                      keys, seeds, cache filenames
+ D2      wall-clock-interval          ``perf_counter`` for latency math
+ D3      non-atomic-write             tmp + ``os.replace`` for every write
+ J1      donated-buffer-reuse         never read a donated buffer again
+ J2      host-sync-hot-path           no device sync in serving hot paths
+ O1      obs-token-neutral            obs is host-side; none in traced fns
+ P1      pallas-call-invariants       interpret plumbed, index_map arity,
+                                      grid divisibility guards
+ S1      sharding-specs-complete      shard_map/jit declare in AND out
+======  ===========================  =====================================
+
+Usage::
+
+    python -m repro.lint src benchmarks [--json out.json] [--list-rules]
+
+Suppress a single line with ``# dcomlint: disable=D2`` (always pair it
+with a justification comment) or a whole file with
+``# dcomlint: disable-file=RULE``.
+"""
+from __future__ import annotations
+
+from .core import (REGISTRY, SCHEMA, Finding, ModuleCtx, Rule, all_rules,
+                   check_file, dump_report, iter_py_files,
+                   parse_suppressions, register, render_human, report_json,
+                   run_paths)
+# importing the rule modules populates the registry
+from . import rules_determinism  # noqa: F401
+from . import rules_jax          # noqa: F401
+from . import rules_obs          # noqa: F401
+from . import rules_pallas       # noqa: F401
+
+__all__ = [
+    "REGISTRY", "SCHEMA", "Finding", "ModuleCtx", "Rule", "all_rules",
+    "check_file", "dump_report", "iter_py_files", "parse_suppressions",
+    "register", "render_human", "report_json", "run_paths",
+]

@@ -1,0 +1,167 @@
+"""Determinism & durability rules: D1 (hash/id), D2 (clocks), D3 (atomic
+writes).  Each one is a past production bug turned into a gate."""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from .core import Finding, ModuleCtx, Rule, dotted_name, register
+
+# keyword names that mark a value as persisted / seeding / addressable —
+# an id() flowing into one of these is process-lifetime-dependent state
+_SINK_KWARGS = {"seed", "key", "path", "filename", "name", "fname"}
+_SINK_CALLS = {"join", "format", "PRNGKey", "fold_in", "crc32", "md5",
+               "sha1", "sha256", "dump", "dumps", "write", "save", "put"}
+
+
+def _ancestors(node: ast.AST):
+    while hasattr(node, "parent"):
+        node = node.parent  # type: ignore[attr-defined]
+        yield node
+
+
+@register
+class BuiltinHashRule(Rule):
+    """D1 — builtin ``hash()``/``id()`` must not feed persisted keys,
+    seeds, or cache filenames.
+
+    ``hash(str)`` is salted per process by PYTHONHASHSEED and ``id()`` is
+    an allocation address: both break cross-process determinism the
+    moment they touch anything persisted or seeded.  Motivated by the
+    PR 4 PowerSGD bug, where ``abs(hash(str(path)))`` seeded the Q sketch
+    and two hosts silently compressed with *different* random bases —
+    fixed to ``zlib.crc32`` (see ``distributed/compression.py``).
+    ``hash()`` is flagged unconditionally (use ``zlib.crc32``/``hashlib``
+    or a dict keyed on the object); ``id()`` only where it flows into a
+    formatting/seeding/path sink, since identity-keyed host-side dicts
+    are legitimate.
+    """
+    id = "D1"
+    name = "builtin-hash-or-id"
+
+    def check(self, ctx: ModuleCtx) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)):
+                continue
+            if node.func.id == "hash":
+                yield ctx.finding(
+                    self, node,
+                    "builtin hash() is PYTHONHASHSEED-salted; use "
+                    "zlib.crc32/hashlib for anything persisted or seeded")
+            elif node.func.id == "id" and self._flows_to_sink(node):
+                yield ctx.finding(
+                    self, node,
+                    "id() is an allocation address; it must not flow into "
+                    "persisted keys, seeds, or filenames")
+
+    @staticmethod
+    def _flows_to_sink(node: ast.Call) -> bool:
+        for anc in _ancestors(node):
+            if isinstance(anc, ast.stmt):
+                return False
+            if isinstance(anc, (ast.FormattedValue, ast.JoinedStr)):
+                return True
+            if isinstance(anc, ast.BinOp) and isinstance(anc.op, ast.Mod):
+                return True        # "%s" % id(x)
+            if isinstance(anc, ast.keyword) and anc.arg in _SINK_KWARGS:
+                return True
+            if isinstance(anc, ast.Call):
+                fn = dotted_name(anc.func) or ""
+                if fn.rsplit(".", 1)[-1] in _SINK_CALLS:
+                    return True
+        return False
+
+
+@register
+class WallClockRule(Rule):
+    """D2 — no ``time.time()`` for latency/interval math; use
+    ``time.perf_counter()`` (or ``monotonic``).
+
+    ``time.time()`` is wall-clock: NTP slews and DST steps make deltas
+    taken from it lie, and its resolution is platform-dependent.  PR 2
+    already had to convert serving TTFT/ITL stamps to ``perf_counter``;
+    this rule stops the next regression.  The rare *legitimate* epoch
+    use (comparing against file mtimes, stamping absolute times into
+    reports) takes an inline ``# dcomlint: disable=D2`` with a
+    justification comment — see ``checkpoint.gc_old``.
+    """
+    id = "D2"
+    name = "wall-clock-interval"
+
+    def check(self, ctx: ModuleCtx) -> Iterator[Finding]:
+        from_time = {
+            a.asname or a.name
+            for node in ast.walk(ctx.tree)
+            if isinstance(node, ast.ImportFrom) and node.module == "time"
+            for a in node.names if a.name == "time"}
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = dotted_name(node.func)
+            if fn == "time.time" or (fn in from_time if fn else False):
+                yield ctx.finding(
+                    self, node,
+                    "time.time() is wall-clock; use time.perf_counter() "
+                    "for intervals (suppress with a justification for "
+                    "true epoch-time uses)")
+
+
+@register
+class AtomicWriteRule(Rule):
+    """D3 — file writes must use the tmp + ``os.replace`` atomic pattern.
+
+    A bare ``open(path, \"w\")`` truncates the destination first: a crash
+    (or a concurrent reader) mid-write observes an empty/partial file.
+    PR 4 fixed exactly this in ``ThresholdTable.save`` after a truncated
+    threshold JSON took a serving run down; PR 9 found the same latent
+    bug in every benchmark report writer.  Any function that opens a
+    file for writing must also call ``os.replace``/``os.rename`` in the
+    same scope (i.e. stage into a temp path), or — much better — go
+    through ``repro.ioutil.atomic_write_text/json``.
+    """
+    id = "D3"
+    name = "non-atomic-write"
+
+    def check(self, ctx: ModuleCtx) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)
+                    and node.func.id == "open"):
+                continue
+            mode = self._mode(node)
+            if mode is None or not any(c in mode for c in "wx"):
+                continue
+            if self._scope_has_replace(node):
+                continue
+            yield ctx.finding(
+                self, node,
+                f"open(..., {mode!r}) without os.replace in scope — write "
+                "through repro.ioutil.atomic_write_text/json (tmp + "
+                "os.replace) so a crash never leaves a truncated file")
+
+    @staticmethod
+    def _mode(node: ast.Call) -> Optional[str]:
+        if len(node.args) >= 2 and isinstance(node.args[1], ast.Constant) \
+                and isinstance(node.args[1].value, str):
+            return node.args[1].value
+        for kw in node.keywords:
+            if kw.arg == "mode" and isinstance(kw.value, ast.Constant) \
+                    and isinstance(kw.value.value, str):
+                return kw.value.value
+        return None
+
+    @staticmethod
+    def _scope_has_replace(node: ast.AST) -> bool:
+        scope: ast.AST = node
+        for anc in _ancestors(node):
+            scope = anc
+            if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.Module)):
+                break
+        for n in ast.walk(scope):
+            if isinstance(n, ast.Call):
+                fn = dotted_name(n.func) or ""
+                if fn in ("os.replace", "os.rename"):
+                    return True
+        return False

@@ -1,0 +1,250 @@
+"""JAX discipline rules: J1 (donated-buffer reuse), J2 (host sync in
+serving hot paths), S1 (sharding spec completeness)."""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from .core import Finding, ModuleCtx, Rule, dotted_name, register
+
+_JIT_NAMES = {"jax.jit", "jit", "pjit", "jax.pjit"}
+_SYNC_METHODS = {"block_until_ready", "item"}
+_SYNC_FUNCS = {"jax.block_until_ready", "jax.device_get"}
+# attribute prefixes that name jitted serving dispatches on an engine —
+# wrapping one of these in float()/np.asarray() forces a device sync
+_DISPATCH_PREFIXES = ("_decode", "_prefill", "_fold", "_splice",
+                      "_compress", "_jitted", "sampler")
+
+
+def _is_jit_call(node: ast.Call) -> bool:
+    fn = dotted_name(node.func)
+    return fn in _JIT_NAMES
+
+
+def _donated_positions(node: ast.Call) -> Tuple[int, ...]:
+    """Literal donate_argnums of a jax.jit call (empty when absent or
+    non-literal — we only reason about what we can see statically)."""
+    for kw in node.keywords:
+        if kw.arg != "donate_argnums":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, int):
+            return (v.value,)
+        if isinstance(v, (ast.Tuple, ast.List)):
+            out = []
+            for e in v.elts:
+                if isinstance(e, ast.Constant) and isinstance(e.value, int):
+                    out.append(e.value)
+            return tuple(out)
+    return ()
+
+
+def _reads_writes(node: ast.AST) -> Tuple[Set[str], Set[str]]:
+    """Dotted names loaded / stored anywhere under ``node``."""
+    reads: Set[str] = set()
+    writes: Set[str] = set()
+    for n in ast.walk(node):
+        if isinstance(n, (ast.Name, ast.Attribute)):
+            d = dotted_name(n)
+            if d is None:
+                continue
+            c = getattr(n, "ctx", None)
+            if isinstance(c, (ast.Store, ast.Del)):
+                writes.add(d)
+            elif isinstance(c, ast.Load):
+                reads.add(d)
+    return reads, writes
+
+
+@register
+class DonatedReuseRule(Rule):
+    """J1 — a buffer passed at a donated position must not be read again
+    in the same scope.
+
+    ``donate_argnums`` hands the input buffer to XLA for in-place reuse:
+    reading the donated array afterwards returns garbage (or raises,
+    depending on backend) — the whole fused-decode path (PR 6) donates
+    every cache slab, so this mistake produces silently wrong tokens,
+    not a crash.  The rule tracks ``g = jax.jit(f, donate_argnums=...)``
+    bindings per scope and flags any later load of a variable that was
+    passed at a donated position and not rebound first (the sanctioned
+    idiom is ``cache = step(..., cache, ...)``).
+    """
+    id = "J1"
+    name = "donated-buffer-reuse"
+
+    def check(self, ctx: ModuleCtx) -> Iterator[Finding]:
+        scopes: List[ast.AST] = [ctx.tree]
+        scopes += [n for n in ast.walk(ctx.tree)
+                   if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+        for scope in scopes:
+            yield from self._check_scope(ctx, scope)
+
+    def _check_scope(self, ctx: ModuleCtx, scope: ast.AST):
+        body = getattr(scope, "body", [])
+        donating: Dict[str, Tuple[int, ...]] = {}
+        # donated-name -> (call node, donated arg dotted-name)
+        for i, stmt in enumerate(body):
+            for tgt, val in self._assignments(stmt):
+                if isinstance(val, ast.Call) and _is_jit_call(val):
+                    pos = _donated_positions(val)
+                    if pos:
+                        donating[tgt] = pos
+            for call in self._calls_of(stmt, donating):
+                pos = donating[dotted_name(call.func)]  # type: ignore[index]
+                for p in pos:
+                    if p >= len(call.args):
+                        continue
+                    arg = dotted_name(call.args[p])
+                    if arg is None:
+                        continue
+                    rebound = arg in self._stmt_targets(stmt)
+                    if rebound:
+                        continue
+                    use = self._later_read(body[i + 1:], arg)
+                    if use is not None:
+                        yield ctx.finding(
+                            self, use,
+                            f"{arg!r} was donated to "
+                            f"{dotted_name(call.func)}() (donate_argnums="
+                            f"{pos}) and read again — rebind the result "
+                            "or copy before donating")
+
+    @staticmethod
+    def _assignments(stmt: ast.stmt):
+        if isinstance(stmt, ast.Assign):
+            for t in stmt.targets:
+                d = dotted_name(t)
+                if d:
+                    yield d, stmt.value
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            d = dotted_name(stmt.target)
+            if d:
+                yield d, stmt.value
+
+    @staticmethod
+    def _stmt_targets(stmt: ast.stmt) -> Set[str]:
+        out: Set[str] = set()
+        if isinstance(stmt, ast.Assign):
+            for t in stmt.targets:
+                for n in ast.walk(t):
+                    d = dotted_name(n)
+                    if d:
+                        out.add(d)
+        return out
+
+    @staticmethod
+    def _calls_of(stmt: ast.stmt, donating: Dict[str, Tuple[int, ...]]):
+        for n in ast.walk(stmt):
+            if isinstance(n, ast.Call):
+                d = dotted_name(n.func)
+                if d in donating:
+                    yield n
+
+    @staticmethod
+    def _later_read(stmts: List[ast.stmt], name: str) -> Optional[ast.AST]:
+        """First statement reading ``name`` before any rebind, else None."""
+        for s in stmts:
+            reads, writes = _reads_writes(s)
+            if name in reads:
+                # `x = f(x)` self-rebind both reads and writes — treat the
+                # read as pre-rebind only when it is NOT the same statement
+                # rebinding it from a call (conservative: flag it)
+                if name in writes and isinstance(s, ast.Assign) \
+                        and name not in _reads_writes(s.value)[0]:
+                    return None
+                return s
+            if name in writes:
+                return None
+        return None
+
+
+@register
+class HostSyncHotPathRule(Rule):
+    """J2 — no host-synchronizing calls on device values in the serving
+    decode/dispatch hot path (modules under ``repro/serving/``).
+
+    ``.item()``, ``float(jitted(...))``, ``np.asarray(jitted(...))``,
+    ``jax.block_until_ready`` and ``jax.device_get`` all block the host
+    until the device catches up.  The async prefill pipeline (PR 7)
+    only overlaps prefill with decode because dispatches return
+    *futures*; one stray sync in ``step()``/``_dispatch_*`` re-serializes
+    the whole engine, costing the entire disaggregation win without any
+    test failing.  The single sanctioned sync point is the sampler
+    readback in ``Engine._sample_host`` (suppressed inline with a
+    justification).
+    """
+    id = "J2"
+    name = "host-sync-hot-path"
+
+    def check(self, ctx: ModuleCtx) -> Iterator[Finding]:
+        if not ctx.in_pkg("repro", "serving"):
+            return
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = dotted_name(node.func)
+            if fn in _SYNC_FUNCS:
+                yield ctx.finding(
+                    self, node, f"{fn}() blocks the host on device work "
+                    "inside the serving hot path — keep dispatches async")
+            elif isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in _SYNC_METHODS \
+                    and not node.args and not node.keywords:
+                yield ctx.finding(
+                    self, node, f".{node.func.attr}() forces a device→host "
+                    "sync inside the serving hot path")
+            elif fn in ("float", "np.asarray", "numpy.asarray", "asarray") \
+                    and node.args and self._wraps_dispatch(node.args[0]):
+                yield ctx.finding(
+                    self, node, f"{fn}() directly wraps a jitted dispatch — "
+                    "this blocks on the result and serializes the async "
+                    "pipeline; keep the future and convert at the host edge")
+
+    @staticmethod
+    def _wraps_dispatch(arg: ast.AST) -> bool:
+        if not isinstance(arg, ast.Call):
+            return False
+        if isinstance(arg.func, ast.Attribute):
+            return arg.func.attr.startswith(_DISPATCH_PREFIXES)
+        return False
+
+
+@register
+class ShardingSpecsRule(Rule):
+    """S1 — ``shard_map`` must declare BOTH ``in_specs`` and
+    ``out_specs``; ``jax.jit`` must pass ``in_shardings`` and
+    ``out_shardings`` together or not at all.
+
+    Half-specified shardings compile (JAX infers the missing side) but
+    the inferred side can silently change with the input layout — the
+    PR 4 mesh work requires EXPLICIT in/out shardings on every sharded
+    step so 8-device serving stays byte-identical to 1-device; an
+    inferred out-sharding is exactly the kind of drift that broke the
+    conformance twin during development.
+    """
+    id = "S1"
+    name = "sharding-specs-complete"
+
+    def check(self, ctx: ModuleCtx) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = dotted_name(node.func) or ""
+            kws = {kw.arg for kw in node.keywords if kw.arg}
+            if fn.rsplit(".", 1)[-1] == "shard_map":
+                missing = {"in_specs", "out_specs"} - kws
+                if missing:
+                    yield ctx.finding(
+                        self, node, "shard_map without "
+                        f"{'/'.join(sorted(missing))} — declare both so "
+                        "per-device layouts are explicit")
+            elif fn in _JIT_NAMES:
+                has_in = "in_shardings" in kws
+                has_out = "out_shardings" in kws
+                if has_in != has_out:
+                    present = "in_shardings" if has_in else "out_shardings"
+                    absent = "out_shardings" if has_in else "in_shardings"
+                    yield ctx.finding(
+                        self, node, f"jit with {present} but no {absent} — "
+                        "an inferred sharding can drift; declare both")

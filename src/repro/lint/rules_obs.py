@@ -1,0 +1,143 @@
+"""Observability neutrality rule O1: obs stays host-side, and no obs
+call ever runs inside a traced function body."""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Set
+
+from .core import Finding, ModuleCtx, Rule, dotted_name, register
+
+_TRACED_WRAPPERS = {"jax.jit", "jit", "pjit", "jax.pjit", "shard_map"}
+# engine-attribute roots that reach the obs layer from serving code
+_OBS_ATTR_ROOTS = ("self.obs", "self.trace", "self.tracer", "self.stats")
+
+
+def _is_traced_wrapper(fn: str) -> bool:
+    return fn in _TRACED_WRAPPERS or fn.rsplit(".", 1)[-1] == "shard_map"
+
+
+def collect_traced_bodies(ctx: ModuleCtx) -> List[ast.AST]:
+    """Function/lambda nodes that are jitted or shard_mapped in this
+    module: first positional arg of a jit/shard_map call (Name resolved
+    within the enclosing scope, or an inline Lambda), plus defs
+    decorated with ``@jax.jit`` / ``@partial(jax.jit, ...)``."""
+    traced: List[ast.AST] = []
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Call) and node.args:
+            fn = dotted_name(node.func)
+            if fn and _is_traced_wrapper(fn):
+                first = node.args[0]
+                if isinstance(first, ast.Lambda):
+                    traced.append(first)
+                elif isinstance(first, ast.Name):
+                    traced.extend(_defs_named(ctx, node, first.id))
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                d = dotted_name(dec)
+                if d and _is_traced_wrapper(d):
+                    traced.append(node)
+                elif isinstance(dec, ast.Call):
+                    dfn = dotted_name(dec.func) or ""
+                    if dfn.rsplit(".", 1)[-1] == "partial" and dec.args:
+                        inner = dotted_name(dec.args[0])
+                        if inner and _is_traced_wrapper(inner):
+                            traced.append(node)
+    return traced
+
+
+def _defs_named(ctx: ModuleCtx, call: ast.AST, name: str) -> List[ast.AST]:
+    scope: ast.AST = call
+    while hasattr(scope, "parent") and not isinstance(
+            scope, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Module)):
+        scope = scope.parent  # type: ignore[attr-defined]
+    return [n for n in ast.walk(scope)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+            and n.name == name]
+
+
+@register
+class ObsNeutralityRule(Rule):
+    """O1 — observability is host-side only: ``repro/obs/`` modules must
+    not import ``jax.numpy``, and serving code must not call the obs API
+    inside a jitted/shard_mapped function body.
+
+    The PR 8 hard rule — conformance-gated at runtime by
+    ``test_observability_is_token_neutral`` — is that tokens are
+    byte-identical with obs on or off.  That only holds if (a) the obs
+    layer never computes on device (a ``jnp`` op in a histogram changes
+    dispatch order), and (b) no span/counter call lands inside a traced
+    body, where it would either fail tracing or — worse — bake a
+    tracer-time value into the compiled program.  This rule makes the
+    runtime gate's precondition a static guarantee.
+    """
+    id = "O1"
+    name = "obs-token-neutral"
+
+    def check(self, ctx: ModuleCtx) -> Iterator[Finding]:
+        if ctx.in_pkg("repro", "obs"):
+            yield from self._check_obs_purity(ctx)
+        if ctx.in_pkg("repro", "serving"):
+            yield from self._check_no_obs_in_traced(ctx)
+
+    def _check_obs_purity(self, ctx: ModuleCtx):
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name == "jax.numpy" or a.name.startswith(
+                            "jax.numpy."):
+                        yield ctx.finding(
+                            self, node, "repro.obs must stay host-side: "
+                            "importing jax.numpy pulls device compute "
+                            "into the observability layer")
+            elif isinstance(node, ast.ImportFrom):
+                mod = node.module or ""
+                if mod == "jax.numpy" or mod.startswith("jax.numpy."):
+                    yield ctx.finding(
+                        self, node, "repro.obs must stay host-side: "
+                        "importing from jax.numpy pulls device compute "
+                        "into the observability layer")
+                elif mod == "jax" and any(a.name == "numpy"
+                                          for a in node.names):
+                    yield ctx.finding(
+                        self, node, "repro.obs must stay host-side: "
+                        "`from jax import numpy` pulls device compute "
+                        "into the observability layer")
+            elif isinstance(node, ast.Attribute):
+                if dotted_name(node) == "jax.numpy":
+                    yield ctx.finding(
+                        self, node, "repro.obs must stay host-side: "
+                        "jax.numpy use in the observability layer")
+
+    def _check_no_obs_in_traced(self, ctx: ModuleCtx):
+        obs_names = self._obs_imports(ctx)
+        seen: Set[int] = set()
+        for body in collect_traced_bodies(ctx):
+            for n in ast.walk(body):
+                d = dotted_name(n) if isinstance(
+                    n, (ast.Name, ast.Attribute)) else None
+                if d is None or id(n) in seen:
+                    continue
+                root = d.split(".")[0]
+                hit = (root in obs_names
+                       or any(d == r or d.startswith(r + ".")
+                              for r in _OBS_ATTR_ROOTS))
+                if hit:
+                    seen.add(id(n))
+                    for ch in ast.walk(n):
+                        seen.add(id(ch))
+                    yield ctx.finding(
+                        self, n, f"obs API {d!r} inside a jitted/traced "
+                        "function body — instrumentation must stay on "
+                        "the host side of every dispatch")
+
+    @staticmethod
+    def _obs_imports(ctx: ModuleCtx) -> Set[str]:
+        names: Set[str] = set()
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ImportFrom):
+                mod = node.module or ""
+                if mod.endswith("obs") or ".obs." in mod \
+                        or mod.startswith("obs."):
+                    for a in node.names:
+                        names.add(a.asname or a.name)
+        return names

@@ -1,0 +1,216 @@
+"""Pallas kernel invariants P1: every ``pl.pallas_call`` site must plumb
+``interpret`` from the platform, match index_map arity to grid rank, and
+guard block-divisibility."""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional, Set, Tuple
+
+from .core import Finding, ModuleCtx, Rule, dotted_name, register
+
+
+def _enclosing_scope(node: ast.AST) -> ast.AST:
+    while hasattr(node, "parent"):
+        node = node.parent  # type: ignore[attr-defined]
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Module)):
+            return node
+    return node
+
+
+def _kw(call: ast.Call, name: str) -> Optional[ast.AST]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _grid_rank(grid: ast.AST) -> Optional[int]:
+    if isinstance(grid, (ast.Tuple, ast.List)):
+        return len(grid.elts)
+    if isinstance(grid, ast.Constant) and isinstance(grid.value, int):
+        return 1
+    return None          # dynamic expression — rank unknown statically
+
+
+def _block_specs(node: ast.AST) -> List[ast.Call]:
+    """All BlockSpec(...) constructor calls under ``node``."""
+    out = []
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call):
+            fn = dotted_name(n.func) or ""
+            if fn.rsplit(".", 1)[-1] == "BlockSpec":
+                out.append(n)
+    return out
+
+
+def _divisibility_guards(scope: ast.AST) -> Set[Tuple[str, str]]:
+    """(numerator, denominator) name pairs proven divisible in ``scope``:
+    ``assert X % Y == 0`` or ``Y = _block_divisor(X, ...)``."""
+    guards: Set[Tuple[str, str]] = set()
+    for n in ast.walk(scope):
+        if isinstance(n, ast.Assert):
+            t = n.test
+            if isinstance(t, ast.Compare) and len(t.ops) == 1 \
+                    and isinstance(t.ops[0], ast.Eq) \
+                    and isinstance(t.left, ast.BinOp) \
+                    and isinstance(t.left.op, ast.Mod) \
+                    and isinstance(t.comparators[0], ast.Constant) \
+                    and t.comparators[0].value == 0:
+                x = dotted_name(t.left.left)
+                y = dotted_name(t.left.right)
+                if x and y:
+                    guards.add((x, y))
+        elif isinstance(n, ast.Assign) and isinstance(n.value, ast.Call):
+            fn = (dotted_name(n.value.func) or "").rsplit(".", 1)[-1]
+            if fn in ("_block_divisor", "block_divisor") and n.value.args:
+                x = dotted_name(n.value.args[0])
+                for tgt in n.targets:
+                    y = dotted_name(tgt)
+                    if x and y:
+                        guards.add((x, y))
+    return guards
+
+
+@register
+class PallasCallRule(Rule):
+    """P1 — Pallas launch-site invariants, distilled from the PR 1/PR 3
+    kernel work:
+
+    * ``interpret=`` must be present and *plumbed* (a variable resolved
+      via ``engine.platform.resolve_interpret``), never a hardcoded
+      bool — the pre-PR-3 kernels defaulted ``interpret=True`` and a
+      TPU deployment had to override every call site by hand;
+    * every ``BlockSpec`` index_map lambda takes exactly ``len(grid)``
+      indices (plus ``num_scalar_prefetch`` leading refs under a
+      ``PrefetchScalarGridSpec``) — an arity mismatch is a TypeError at
+      trace time *only* on the first unlucky shape that reaches it;
+    * a ``X // Y`` grid dimension needs a divisibility guard in scope
+      (``assert X % Y == 0`` or ``Y = _block_divisor(X, ...)``) — an
+      unguarded remainder silently drops tail rows (the PR 3
+      arbitrary-cache-length bug class).
+    """
+    id = "P1"
+    name = "pallas-call-invariants"
+
+    def check(self, ctx: ModuleCtx) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = dotted_name(node.func) or ""
+            if fn.rsplit(".", 1)[-1] != "pallas_call":
+                continue
+            yield from self._check_interpret(ctx, node)
+            yield from self._check_arity(ctx, node)
+            yield from self._check_divisibility(ctx, node)
+
+    # -- interpret plumbing -------------------------------------------------
+    def _check_interpret(self, ctx: ModuleCtx, call: ast.Call):
+        v = _kw(call, "interpret")
+        if v is None:
+            yield ctx.finding(
+                self, call, "pallas_call without interpret= — plumb the "
+                "platform default via engine.platform.resolve_interpret")
+        elif isinstance(v, ast.Constant):
+            yield ctx.finding(
+                self, v, f"interpret={v.value!r} hardcoded — resolve it "
+                "via engine.platform.resolve_interpret so TPU and CPU "
+                "deployments share one call site")
+
+    # -- index_map arity vs grid rank ----------------------------------------
+    def _check_arity(self, ctx: ModuleCtx, call: ast.Call):
+        rank: Optional[int] = None
+        prefetch = 0
+        spec_holders: List[ast.AST] = []
+        grid = _kw(call, "grid")
+        if grid is not None:
+            rank = _grid_rank(grid)
+            spec_holders.append(call)
+        gs = _kw(call, "grid_spec")
+        if gs is not None:
+            ctor = self._resolve_grid_spec(call, gs)
+            if ctor is not None:
+                g = _kw(ctor, "grid")
+                rank = _grid_rank(g) if g is not None else None
+                np_ = _kw(ctor, "num_scalar_prefetch")
+                if isinstance(np_, ast.Constant) \
+                        and isinstance(np_.value, int):
+                    prefetch = np_.value
+                spec_holders.append(ctor)
+        if rank is None:
+            return
+        want = rank + prefetch
+        for holder in spec_holders:
+            for spec in self._specs_of(holder):
+                idx_map = spec.args[1] if len(spec.args) > 1 \
+                    else _kw(spec, "index_map")
+                if not isinstance(idx_map, ast.Lambda):
+                    continue
+                got = len(idx_map.args.args)
+                if got != want:
+                    yield ctx.finding(
+                        self, idx_map,
+                        f"BlockSpec index_map takes {got} args but the "
+                        f"grid has rank {rank}"
+                        + (f" + {prefetch} scalar-prefetch ref(s)"
+                           if prefetch else "")
+                        + f" — expected {want}")
+
+    @staticmethod
+    def _specs_of(holder: ast.AST) -> List[ast.Call]:
+        specs: List[ast.Call] = []
+        if isinstance(holder, ast.Call):
+            for name in ("in_specs", "out_specs"):
+                v = _kw(holder, name)
+                if v is not None:
+                    specs.extend(_block_specs(v))
+        return specs
+
+    @staticmethod
+    def _resolve_grid_spec(call: ast.Call,
+                           gs: ast.AST) -> Optional[ast.Call]:
+        """grid_spec= value: inline constructor, or a Name assigned from
+        one in the enclosing scope."""
+        if isinstance(gs, ast.Call):
+            return gs
+        if not isinstance(gs, ast.Name):
+            return None
+        scope = _enclosing_scope(call)
+        for n in ast.walk(scope):
+            if isinstance(n, ast.Assign) and isinstance(n.value, ast.Call):
+                for tgt in n.targets:
+                    if isinstance(tgt, ast.Name) and tgt.id == gs.id:
+                        return n.value
+        return None
+
+    # -- grid divisibility guards --------------------------------------------
+    def _check_divisibility(self, ctx: ModuleCtx, call: ast.Call):
+        grid = _kw(call, "grid")
+        holders: List[ast.AST] = [grid] if grid is not None else []
+        gs = _kw(call, "grid_spec")
+        if gs is not None:
+            ctor = self._resolve_grid_spec(call, gs)
+            if ctor is not None:
+                g = _kw(ctor, "grid")
+                if g is not None:
+                    holders.append(g)
+        if not holders:
+            return
+        scope = _enclosing_scope(call)
+        guards = _divisibility_guards(scope)
+        for holder in holders:
+            elts = holder.elts if isinstance(
+                holder, (ast.Tuple, ast.List)) else [holder]
+            for e in elts:
+                if isinstance(e, ast.BinOp) \
+                        and isinstance(e.op, ast.FloorDiv):
+                    x = dotted_name(e.left)
+                    y = dotted_name(e.right)
+                    if x and y and (x, y) not in guards:
+                        yield ctx.finding(
+                            self, e,
+                            f"grid dimension {x} // {y} has no "
+                            f"divisibility guard in scope — add "
+                            f"`assert {x} % {y} == 0` or derive {y} via "
+                            "_block_divisor so tail rows can't be "
+                            "silently dropped")

@@ -13,7 +13,6 @@ from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..configs.base import ArchConfig, ShapeSpec
 from . import encdec, hybrid, mamba2, moe, transformer, vlm

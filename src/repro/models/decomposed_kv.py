@@ -51,7 +51,6 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..engine import DecomposeEngine, EngineConfig
 from . import layers as L

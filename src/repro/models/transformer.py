@@ -4,7 +4,6 @@ llama2).  Layer params are stacked on a leading L axis and driven by
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

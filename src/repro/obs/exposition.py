@@ -9,11 +9,11 @@ CI smoke and tests gate on (no external client library in the image).
 """
 from __future__ import annotations
 
-import json
 import math
 import re
 from typing import Dict, List, Tuple
 
+from ..ioutil import atomic_write_json, atomic_write_text
 from .registry import Histogram, MetricsRegistry
 
 _NAME_OK = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
@@ -152,8 +152,7 @@ def write_prometheus(path: str, *registries: MetricsRegistry,
                      namespace: str = NAMESPACE) -> str:
     text = to_prometheus(*registries, namespace=namespace)
     parse_prometheus(text)                # never write what we can't parse
-    with open(path, "w") as f:
-        f.write(text)
+    atomic_write_text(path, text)
     return text
 
 
@@ -162,6 +161,5 @@ def write_json_snapshot(path: str, *registries: MetricsRegistry) -> dict:
     for reg in registries:
         for name, rows in reg.snapshot().items():
             snap.setdefault(name, []).extend(rows)
-    with open(path, "w") as f:
-        json.dump(snap, f, indent=2)
+    atomic_write_json(path, snap, indent=2)
     return snap

@@ -156,8 +156,8 @@ class Tracer:
                 "displayTimeUnit": "ms"}
 
     def export(self, path: str) -> None:
-        with open(path, "w") as f:
-            json.dump(self.to_json(), f)
+        from ..ioutil import atomic_write_json
+        atomic_write_json(path, self.to_json())
 
 
 def validate_trace(obj) -> int:

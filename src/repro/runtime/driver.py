@@ -16,10 +16,9 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, List, Optional
 
 import jax
-import numpy as np
 
 from .. import checkpoint as ckpt
 from ..configs.base import ArchConfig, ShapeSpec
@@ -107,12 +106,14 @@ def train_loop(cfg: ArchConfig, shape: ShapeSpec, *, total_steps: int,
                                            watchdog.flagged)
                 if failure_hook is not None:
                     failure_hook(step)
-                t0 = time.time()
+                # perf_counter, not time.time(): the watchdog's straggler
+                # EWMA is interval math and must not see NTP slew (lint D2)
+                t0 = time.perf_counter()
                 batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
                 params, opt_state, metrics = train_step(params, opt_state,
                                                         batch)
                 loss = float(metrics["loss"])
-                dt = time.time() - t0
+                dt = time.perf_counter() - t0
                 if watchdog.observe(dt):
                     print_fn(f"[watchdog] straggler step {step}: "
                              f"{dt:.2f}s vs ewma {watchdog.ewma:.2f}s")

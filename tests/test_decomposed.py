@@ -1,6 +1,5 @@
 """Decomposed-execution integration (the paper's technique end to end)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -2,7 +2,6 @@
 probe plans (the full sweep runs via launch.dryrun --all).
 
 Also guards the 1-device invariant: no test may import launch.dryrun."""
-import os
 
 import jax
 import pytest

@@ -266,7 +266,6 @@ def test_ssd_chunk_intra(q, nh, hd, hb):
 
 def test_ssd_chunk_matches_model_math():
     """The kernel reproduces mamba2.ssd_apply's intra-chunk term exactly."""
-    from repro.models import mamba2 as M
     q, nh, hd, ds = 16, 4, 8, 8
     g = 2
     key = jax.random.PRNGKey(40)

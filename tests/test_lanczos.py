@@ -7,10 +7,8 @@ import cleanly with only the pinned requirements-dev.txt basics.
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.core import (decompose, from_dense_svd, lanczos_svd,
-                        relative_error)
+from repro.core import decompose, lanczos_svd, relative_error
 
 
 def lowrank_matrix(key, s, h, r, noise=0.0):

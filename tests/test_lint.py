@@ -1,0 +1,512 @@
+"""dcomlint (repro.lint) — per-rule true-positive / true-negative /
+suppression fixtures, framework mechanics, CLI exit codes, and the
+meta-test that the repo's own tree is clean.
+
+Every fixture snippet is the smallest program exhibiting (or legally
+avoiding) one rule's defect class; the TN twin of each TP pins the
+rule's precision so a refactor of the analyzer can't silently start
+flagging sanctioned idioms (or stop flagging the bug it was built for).
+"""
+import json
+import os
+import textwrap
+
+import pytest
+
+from repro.lint import (REGISTRY, check_file, parse_suppressions,
+                        run_paths)
+from repro.lint.__main__ import main as lint_main
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# paths chosen so package-scoped rules (J2/O1 serving & obs allowlists)
+# see the right module; plain rules don't care
+SERVING = "src/repro/serving/fixture.py"
+OBS = "src/repro/obs/fixture.py"
+KERNELS = "src/repro/kernels/fixture.py"
+ANY = "src/repro/tune/fixture.py"
+
+
+def lint(src: str, path: str = ANY, select=None):
+    """Lint a snippet → (active rule-id list, suppressed rule-id list)."""
+    rules = None
+    if select:
+        rules = [REGISTRY[r] for r in select]
+    active, suppressed = check_file(path, rules, textwrap.dedent(src))
+    return [f.rule for f in active], [f.rule for f in suppressed]
+
+
+def test_registry_has_all_shipped_rules():
+    assert {"D1", "D2", "D3", "J1", "J2", "O1", "P1", "S1"} <= set(REGISTRY)
+    for rule in REGISTRY.values():
+        assert rule.doc(), f"{rule.id} must document its motivating bug"
+        assert rule.severity in ("error", "warning")
+
+
+# ---------------------------------------------------------------- D1 ----
+
+def test_d1_flags_builtin_hash():
+    active, _ = lint("seed = abs(hash(str(path))) % 2**31\n")
+    assert active == ["D1"]
+
+
+def test_d1_flags_id_into_filename():
+    active, _ = lint('name = f"cache-{id(table)}.json"\n')
+    assert active == ["D1"]
+
+
+def test_d1_allows_crc32_and_identity_dict():
+    active, _ = lint("""\
+        import zlib
+        seed = zlib.crc32(str(path).encode()) % 2**31
+        registry[id(obj)] = obj          # host-lifetime identity key
+    """)
+    assert active == []
+
+
+def test_d1_suppression():
+    active, suppressed = lint(
+        "h = hash(key)  # dcomlint: disable=D1\n")
+    assert active == [] and suppressed == ["D1"]
+
+
+# ---------------------------------------------------------------- D2 ----
+
+def test_d2_flags_wall_clock():
+    active, _ = lint("""\
+        import time
+        t0 = time.time()
+    """)
+    assert active == ["D2"]
+
+
+def test_d2_flags_from_import_alias():
+    active, _ = lint("""\
+        from time import time as now
+        t0 = now()
+    """)
+    assert active == ["D2"]
+
+
+def test_d2_allows_perf_counter_and_monotonic():
+    active, _ = lint("""\
+        import time
+        t0 = time.perf_counter()
+        t1 = time.monotonic()
+    """)
+    assert active == []
+
+
+def test_d2_suppression_for_epoch_use():
+    active, suppressed = lint("""\
+        import time
+        # compared against mtimes, which are wall-clock
+        now = time.time()  # dcomlint: disable=D2
+    """)
+    assert active == [] and suppressed == ["D2"]
+
+
+# ---------------------------------------------------------------- D3 ----
+
+def test_d3_flags_bare_write():
+    active, _ = lint("""\
+        import json
+        def save(path, obj):
+            with open(path, "w") as f:
+                json.dump(obj, f)
+    """)
+    assert active == ["D3"]
+
+
+def test_d3_allows_tmp_replace_pattern():
+    active, _ = lint("""\
+        import json, os
+        def save(path, obj):
+            tmp = path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(obj, f)
+            os.replace(tmp, path)
+    """)
+    assert active == []
+
+
+def test_d3_ignores_reads():
+    active, _ = lint("""\
+        def load(path):
+            with open(path) as f:
+                return f.read()
+        def load2(path):
+            with open(path, "rb") as f:
+                return f.read()
+    """)
+    assert active == []
+
+
+def test_d3_suppression():
+    active, suppressed = lint("""\
+        def save(path, text):
+            f = open(path, "w")  # dcomlint: disable=D3
+            f.write(text)
+    """)
+    assert active == [] and suppressed == ["D3"]
+
+
+# ---------------------------------------------------------------- J1 ----
+
+def test_j1_flags_read_after_donation():
+    active, _ = lint("""\
+        import jax
+        def serve(cache, x):
+            step = jax.jit(f, donate_argnums=(0,))
+            out = step(cache, x)
+            return cache.sum()
+    """)
+    assert active == ["J1"]
+
+
+def test_j1_allows_rebind_idiom():
+    active, _ = lint("""\
+        import jax
+        def serve(cache, x):
+            step = jax.jit(f, donate_argnums=(0,))
+            cache = step(cache, x)
+            return cache.sum()
+    """)
+    assert active == []
+
+
+def test_j1_rebind_through_other_name_then_read_is_flagged():
+    # donating position 1, reading the donated buffer later
+    active, _ = lint("""\
+        import jax
+        def serve(cache, x):
+            step = jax.jit(f, donate_argnums=1)
+            y = step(x, cache)
+            z = cache + 1
+            return y, z
+    """)
+    assert active == ["J1"]
+
+
+def test_j1_suppression():
+    active, suppressed = lint("""\
+        import jax
+        def serve(cache, x):
+            step = jax.jit(f, donate_argnums=(0,))
+            out = step(cache, x)
+            return cache.shape  # dcomlint: disable=J1
+    """)
+    assert active == [] and suppressed == ["J1"]
+
+
+# ---------------------------------------------------------------- J2 ----
+
+def test_j2_flags_sync_in_serving():
+    active, _ = lint("""\
+        import jax
+        def step(self, x):
+            jax.block_until_ready(x)
+            n = x.item()
+            return n
+    """, path=SERVING)
+    assert active == ["J2", "J2"]
+
+
+def test_j2_flags_asarray_on_dispatch():
+    active, _ = lint("""\
+        import numpy as np
+        def step(self, x):
+            return np.asarray(self._decode_fn(x))
+    """, path=SERVING)
+    assert active == ["J2"]
+
+
+def test_j2_ignores_non_serving_modules():
+    active, _ = lint("""\
+        import jax
+        def measure(x):
+            jax.block_until_ready(x)
+            return x.item()
+    """, path=ANY)
+    assert active == []
+
+
+def test_j2_allows_host_edge_conversion():
+    # np.asarray on a plain value (not a jitted dispatch) is the
+    # sanctioned host-edge conversion
+    active, _ = lint("""\
+        import numpy as np
+        def emit(self, tok_host):
+            return np.asarray(tok_host)
+    """, path=SERVING)
+    assert active == []
+
+
+def test_j2_suppression():
+    active, suppressed = lint("""\
+        import numpy as np
+        def sample(self, logits):
+            return np.asarray(self.sampler(logits))  # dcomlint: disable=J2
+    """, path=SERVING)
+    assert active == [] and suppressed == ["J2"]
+
+
+# ---------------------------------------------------------------- O1 ----
+
+def test_o1_flags_jnp_import_in_obs():
+    active, _ = lint("import jax.numpy as jnp\n", path=OBS)
+    assert "O1" in active
+
+
+def test_o1_flags_from_jax_import_numpy_in_obs():
+    active, _ = lint("from jax import numpy\n", path=OBS)
+    assert "O1" in active
+
+
+def test_o1_allows_plain_numpy_in_obs():
+    active, _ = lint("import numpy as np\nx = np.zeros(3)\n", path=OBS)
+    assert active == []
+
+
+def test_o1_flags_obs_call_inside_traced_body():
+    active, _ = lint("""\
+        import jax
+        def make(self):
+            def body(x):
+                self.stats.tokens += 1
+                return x * 2
+            return jax.jit(body)
+    """, path=SERVING)
+    assert active == ["O1"]
+
+
+def test_o1_allows_obs_call_outside_traced_body():
+    active, _ = lint("""\
+        import jax
+        def step(self, x):
+            out = self._fn(x)
+            self.stats.tokens += 1
+            return out
+    """, path=SERVING)
+    assert active == []
+
+
+def test_o1_file_suppression():
+    active, suppressed = lint("""\
+        # dcomlint: disable-file=O1
+        import jax.numpy as jnp
+    """, path=OBS)
+    assert active == [] and suppressed == ["O1"]
+
+
+# ---------------------------------------------------------------- P1 ----
+
+def test_p1_flags_missing_interpret():
+    active, _ = lint("""\
+        import jax.experimental.pallas as pl
+        def launch(x):
+            return pl.pallas_call(kern, grid=(4,))(x)
+    """, path=KERNELS)
+    assert active == ["P1"]
+
+
+def test_p1_flags_hardcoded_interpret():
+    active, _ = lint("""\
+        import jax.experimental.pallas as pl
+        def launch(x):
+            return pl.pallas_call(kern, grid=(4,), interpret=True)(x)
+    """, path=KERNELS)
+    assert active == ["P1"]
+
+
+def test_p1_flags_index_map_arity_mismatch():
+    active, _ = lint("""\
+        import jax.experimental.pallas as pl
+        def launch(x, interp):
+            return pl.pallas_call(
+                kern, grid=(4, 2), interpret=interp,
+                in_specs=[pl.BlockSpec((8, 8), lambda i: (i, 0))],
+            )(x)
+    """, path=KERNELS)
+    assert active == ["P1"]
+
+
+def test_p1_flags_unguarded_grid_division():
+    active, _ = lint("""\
+        import jax.experimental.pallas as pl
+        def launch(x, n, b, interp):
+            return pl.pallas_call(kern, grid=(n // b,),
+                                  interpret=interp)(x)
+    """, path=KERNELS)
+    assert active == ["P1"]
+
+
+def test_p1_clean_launch_site():
+    active, _ = lint("""\
+        import jax.experimental.pallas as pl
+        def launch(x, n, b, interp):
+            assert n % b == 0
+            return pl.pallas_call(
+                kern, grid=(n // b, 2), interpret=interp,
+                in_specs=[pl.BlockSpec((8, 8), lambda i, j: (i, j))],
+                out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, j)),
+            )(x)
+    """, path=KERNELS)
+    assert active == []
+
+
+def test_p1_block_divisor_guard_recognized():
+    active, _ = lint("""\
+        import jax.experimental.pallas as pl
+        def launch(x, n, interp):
+            b = _block_divisor(n, 128)
+            return pl.pallas_call(kern, grid=(n // b,),
+                                  interpret=interp)(x)
+    """, path=KERNELS)
+    assert active == []
+
+
+def test_p1_suppression():
+    active, suppressed = lint("""\
+        import jax.experimental.pallas as pl
+        def launch(x):
+            return pl.pallas_call(kern, grid=(4,), interpret=False,  # dcomlint: disable=P1
+                                  )(x)
+    """, path=KERNELS)
+    assert active == [] and suppressed == ["P1"]
+
+
+# ---------------------------------------------------------------- S1 ----
+
+def test_s1_flags_shard_map_missing_out_specs():
+    active, _ = lint("""\
+        from jax.experimental.shard_map import shard_map
+        g = shard_map(f, mesh=mesh, in_specs=(spec,))
+    """)
+    assert active == ["S1"]
+
+
+def test_s1_flags_half_specified_jit_shardings():
+    active, _ = lint("""\
+        import jax
+        g = jax.jit(f, in_shardings=(s,))
+    """)
+    assert active == ["S1"]
+
+
+def test_s1_allows_both_or_neither():
+    active, _ = lint("""\
+        import jax
+        from jax.experimental.shard_map import shard_map
+        g1 = jax.jit(f, in_shardings=(s,), out_shardings=s)
+        g2 = jax.jit(f)
+        g3 = shard_map(f, mesh=mesh, in_specs=(spec,), out_specs=spec)
+    """)
+    assert active == []
+
+
+def test_s1_suppression():
+    active, suppressed = lint("""\
+        import jax
+        g = jax.jit(f, in_shardings=(s,))  # dcomlint: disable=S1
+    """)
+    assert active == [] and suppressed == ["S1"]
+
+
+# ------------------------------------------------------ framework -------
+
+def test_syntax_error_becomes_e0_finding():
+    active, _ = lint("def broken(:\n")
+    assert active == ["E0"]
+
+
+def test_line_suppression_is_line_scoped():
+    active, _ = lint("""\
+        h1 = hash(a)  # dcomlint: disable=D1
+        h2 = hash(b)
+    """)
+    assert active == ["D1"]          # only the unsuppressed line
+
+
+def test_disable_all_on_line():
+    active, suppressed = lint(
+        "h = hash(a)  # dcomlint: disable=all\n")
+    assert active == [] and suppressed == ["D1"]
+
+
+def test_parse_suppressions_shapes():
+    per_line, per_file = parse_suppressions([
+        "x = 1  # dcomlint: disable=D1,D2",
+        "# dcomlint: disable-file=P1",
+    ])
+    assert per_line == {1: {"D1", "D2"}} and per_file == {"P1"}
+
+
+def test_unknown_rule_id_raises():
+    with pytest.raises(ValueError, match="unknown rule id"):
+        run_paths([os.path.join(REPO, "src", "repro", "lint")],
+                  select=["ZZ"])
+
+
+def test_select_filters_rules():
+    src = "import time\nh = hash(time.time())\n"
+    assert lint(src, select=["D1"])[0] == ["D1"]
+    assert lint(src, select=["D2"])[0] == ["D2"]
+
+
+# ------------------------------------------------------------ CLI ------
+
+def _write(tmp_path, name, src):
+    p = tmp_path / name
+    p.write_text(textwrap.dedent(src))
+    return str(p)
+
+
+def test_cli_exit_codes_and_json_report(tmp_path, capsys):
+    bad = _write(tmp_path, "bad.py", "h = hash(x)\n")
+    good = _write(tmp_path, "good.py", "y = 1\n")
+    report_path = str(tmp_path / "report.json")
+
+    assert lint_main([bad, "--json", report_path]) == 1
+    report = json.loads(open(report_path).read())
+    assert report["schema"] == "repro.lint/v1"
+    assert report["ok"] is False and report["counts"] == {"D1": 1}
+    assert report["findings"][0]["rule"] == "D1"
+
+    assert lint_main([good, "--json", report_path]) == 0
+    report = json.loads(open(report_path).read())
+    assert report["ok"] is True and report["findings"] == []
+
+    assert lint_main([bad, "--select", "NOPE"]) == 2
+    capsys.readouterr()
+
+
+def test_cli_list_rules(capsys):
+    assert lint_main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rid in ("D1", "D2", "D3", "J1", "J2", "O1", "P1", "S1"):
+        assert rid in out
+
+
+def test_cli_counts_suppressions(tmp_path, capsys):
+    p = _write(tmp_path, "sup.py",
+               "h = hash(x)  # dcomlint: disable=D1\n")
+    assert lint_main([p]) == 0
+    assert "(1 suppressed)" in capsys.readouterr().out
+
+
+# ------------------------------------------------------- meta-test -----
+
+def test_repo_tree_is_clean():
+    """The acceptance gate: `python -m repro.lint src benchmarks` exits 0
+    on this repo.  Every suppression in the tree is deliberate, so the
+    suppressed count is also pinned here — raising it needs a justified
+    diff to this test."""
+    findings, suppressed, nfiles = run_paths(
+        [os.path.join(REPO, "src"), os.path.join(REPO, "benchmarks")])
+    assert findings == [], "\n".join(f.render() for f in findings)
+    assert nfiles > 90          # the whole tree was actually walked
+    # 3 sanctioned suppressions today: checkpoint gc_old epoch time (D2),
+    # the two Engine._sample_host sampler readbacks (J2)
+    assert len(suppressed) <= 6, \
+        "\n".join(f.render() for f in suppressed)

@@ -1,10 +1,9 @@
 """LowRank pytree: reconstruction identities and rank algebra."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import from_dense_svd, rank_concat, relative_error, retruncate
-from repro.core.lowrank import LowRank, add_bias_rank
+from repro.core.lowrank import add_bias_rank
 
 
 def test_from_dense_roundtrip_fullrank():

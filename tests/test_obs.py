@@ -2,17 +2,16 @@
 quantile accuracy, trace export/validation, Prometheus exposition
 round-trip, and the uniform snapshot schema."""
 import json
-import math
 
 import numpy as np
 import pytest
 
-from repro.obs import (BUCKETS_PER_DECADE, LatencySeries, MetricsRegistry,
-                       NULL_SPAN, Observability, Tracer, bucket_label,
+from repro.obs import (BUCKETS_PER_DECADE, NULL_SPAN, LatencySeries,
+                       MetricsRegistry, Observability, Tracer, bucket_label,
                        parse_prometheus, stats_snapshot, to_prometheus,
                        validate_trace, write_json_snapshot,
                        write_prometheus)
-from repro.obs.registry import RESERVOIR_CAP, Counter, Gauge, Histogram
+from repro.obs.registry import RESERVOIR_CAP, Histogram
 
 #: half-bucket relative error bound of the log-bucketed quantiles
 QERR = 10.0 ** (0.5 / BUCKETS_PER_DECADE) - 1.0

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.optim import AdamW, Adafactor, clip_by_global_norm, \
+from repro.optim import Adafactor, AdamW, clip_by_global_norm, \
     cosine_schedule
 
 

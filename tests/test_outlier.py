@@ -4,9 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (ThresholdTable, calibrate_threshold, extract,
-                        measured_extraction_frac, select_outlier_channels,
-                        split_outliers)
-from repro.core.lowrank import gather_channels, zero_channels
+                        measured_extraction_frac, select_outlier_channels)
+from repro.core.lowrank import gather_channels
 
 
 def spiky_matrix(key, s=64, h=96, channels=(3, 40, 77), scale=25.0):
@@ -32,7 +31,7 @@ def test_split_roundtrip():
 def test_outliers_help_lowrank_error():
     """Removing outlier channels must reduce truncation error (the paper's
     whole point)."""
-    from repro.core import decompose, relative_error, attach_dense_outliers
+    from repro.core import attach_dense_outliers, decompose, relative_error
     a = spiky_matrix(jax.random.PRNGKey(2), scale=50.0)
     plain = decompose(a, rank=4, iters=10)
     base, vals, idx = extract(a, jnp.asarray(5.0), 3)

@@ -4,10 +4,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (activation_compression_ratio, chain_flops,
+from repro.core import (activation_compression_ratio,
+                        attach_dense_outliers, chain_flops,
                         compute_reduction_ratio_input_only,
                         compute_reduction_ratio_input_weight, decompose,
-                        decompose_weight, extract, attach_dense_outliers,
+                        decompose_weight, extract,
                         from_dense_svd, lowrank_matmul,
                         lowrank_x_lowrank_weight, plan_chain,
                         preserved_pv, preserved_qk_scores,

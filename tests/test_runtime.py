@@ -1,8 +1,6 @@
 """Fault-tolerant driver: checkpoint/restart, failure injection, watchdog."""
-import time
 
 import numpy as np
-import pytest
 
 from repro.configs import all_archs
 from repro.configs.base import ShapeSpec

@@ -75,8 +75,9 @@ def test_admission_preserves_live_sequences():
 
 def test_decomposed_kv_serving():
     """Engine on the low-rank KV cache completes requests + compacts tail."""
-    from repro.configs import all_archs
     import jax
+
+    from repro.configs import all_archs
     from repro.models import model_fns
     cfg = all_archs()["deepseek-7b"].reduced()
     params = model_fns(cfg).init(jax.random.PRNGKey(0), cfg)

@@ -8,7 +8,6 @@ properties for the same rules live in tests/test_properties.py.
 """
 import jax
 import jax.numpy as jnp
-import pytest
 from jax.sharding import AbstractMesh, PartitionSpec as P
 
 from repro.configs import all_archs

@@ -1,7 +1,5 @@
 """Baseline SVD algorithms (paper Fig. 2 comparison set)."""
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.core.svd_alt import (oracle_svd, qr_iteration_svd, randomized_svd,
                                 reconstruction_error)
