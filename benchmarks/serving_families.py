@@ -1,0 +1,138 @@
+"""Multi-family serving A/B: every registered ServingFamily on the ONE
+generic engine — Mamba2 (O(1) conv/ssm state), MoE, hybrid, and the
+dense-KV baseline — under the same staggered workload.
+
+Two claims are measured (and the first ASSERTED):
+
+1. **fused vs single-step** — per family, block-4 fused decode must
+   produce byte-identical tokens to the single-step engine (execution
+   strategy, never semantics) while launching fewer dispatches; tok/s
+   and mean TTFT are reported for both.
+
+2. **state footprint** — the per-family resident cache bytes (an SSM
+   slot holds O(1) state vs the dense engine's O(max_len) KV slab) are
+   reported so the family table's memory story is visible in CI.
+
+CLI (writes the CI artifact):
+
+  PYTHONPATH=src python -m benchmarks.serving_families --quick \
+      --json benchmarks/out/serving_families.json
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from .common import Row, write_json
+
+# one reduced arch per family; MoE pins capacity_factor so the router is
+# batch-size-invariant and fused-vs-single token conformance is a real
+# engine invariant (see tests/test_serving_conformance._family_model)
+FAMILY_ARCHS = (("dense", "llama2-7b"), ("ssm", "mamba2-780m"),
+                ("moe", "olmoe-1b-7b"), ("hybrid", "zamba2-1.2b"))
+
+
+def _arrivals(cfg, requests: int, stagger: int, max_new: int):
+    from repro.serving import Request
+    rng = np.random.RandomState(0)
+    sched: Dict[int, list] = {}
+    for i in range(requests):
+        req = Request(uid=i,
+                      prompt=rng.randint(0, cfg.vocab, 8 + 4 * (i % 3),
+                                         dtype=np.int32),
+                      max_new_tokens=max_new + (i % 3) * max_new // 2)
+        sched.setdefault(i * stagger, []).append(req)
+    return sched
+
+
+def _cache_bytes(eng) -> int:
+    import jax
+    if eng.cache is None:
+        return 0
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(eng.cache))
+
+
+def _simulate(eng, arrivals, total: int, max_steps: int = 5000):
+    t0 = time.perf_counter()
+    done: List = []
+    step = 0
+    while len(done) < total and step < max_steps:
+        for req in arrivals.get(step, []):
+            eng.submit(req)
+        done.extend(eng.step())
+        step += 1
+    wall = time.perf_counter() - t0
+    assert len(done) == total, f"only {len(done)}/{total} finished"
+    return wall, step, {r.uid: r.out_tokens for r in done}
+
+
+def run(quick: bool = False, json_path: str = None) -> List[Row]:
+    import jax
+    from repro.configs import all_archs
+    from repro.models import model_fns
+    from repro.obs import engine_snapshot
+    from repro.serving import Engine
+
+    requests = 4 if quick else 8
+    slots, max_len = 2 if quick else 4, 96
+    max_new, block, stagger = 8 if quick else 14, 4, 5
+
+    rows: List[Row] = []
+    report = {"slots": slots, "requests": requests, "block": block,
+              "families": {}}
+
+    for fam, arch in FAMILY_ARCHS:
+        cfg = all_archs()[arch].reduced()
+        if fam == "moe":
+            cfg = cfg.replace(capacity_factor=8.0)
+        params = model_fns(cfg).init(jax.random.PRNGKey(0), cfg)
+        fam_report = {"arch": cfg.name, "modes": {}}
+        toks_by_mode = {}
+        for mode, blk in (("single", 1), ("fused", block)):
+            mk = lambda: Engine(cfg, params, slots=slots, max_len=max_len,
+                                decode_block=blk)
+            _simulate(mk(), _arrivals(cfg, requests, stagger, max_new),
+                      requests)                   # jit warmup
+            runs = []
+            for _ in range(3):
+                eng = mk()
+                wall, steps, toks = _simulate(
+                    eng, _arrivals(cfg, requests, stagger, max_new),
+                    requests)
+                runs.append((wall, steps, toks, eng))
+            runs.sort(key=lambda t: t[0])
+            wall, steps, toks, eng = runs[len(runs) // 2]
+            toks_by_mode[mode] = toks
+            s = eng.stats
+            # uniform repro.obs/v1 snapshot per family × mode
+            fam_report["modes"][mode] = engine_snapshot(
+                eng, wall_s=wall, sched_steps=steps,
+                resident_cache_bytes=_cache_bytes(eng))
+            rows.append((
+                f"serving_families/{fam}/{mode}/r{requests}xs{slots}",
+                wall * 1e6,
+                f"tok_per_s="
+                f"{fam_report['modes'][mode]['tokens_per_s']:.1f};"
+                f"ttft_ms={s.mean_ttft_s*1e3:.1f};"
+                f"blocks={s.blocks}"))
+        assert toks_by_mode["fused"] == toks_by_mode["single"], \
+            f"{fam}: fused decode diverged from single-step"
+        fam_report["token_conformance"] = True
+        report["families"][fam] = fam_report
+
+    if json_path:
+        write_json(json_path, report, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=None, help="write the report here")
+    args = ap.parse_args()
+    for r in run(quick=args.quick, json_path=args.json):
+        print(f"{r[0]},{r[1]:.3f},{r[2]}")

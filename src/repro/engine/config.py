@@ -49,13 +49,19 @@ class EngineConfig:
                         slots × max_len with fold headroom), and the
                         prefix-cache entry capacity (0 = no prefix
                         reuse).
-    * ``sched_*``     — serving-scheduler knobs: prefill lengths round up
-                        to multiples of ``sched_bucket`` (bounds the set of
-                        prefill shapes, hence re-jits), admission is
-                        checked every ``sched_admit_every`` decode rounds
+    * ``sched_*``     — serving-scheduler knobs: prefill COSTS (the
+                        family-reported prompt length plus any modality
+                        constant, e.g. VLM image rows — see
+                        ``serving.families``) round up to multiples of
+                        ``sched_bucket`` (bounds the set of prefill
+                        shapes, hence re-jits), admission is checked
+                        every ``sched_admit_every`` decode rounds
                         (prefill/decode interleaving policy), and one
                         admission batch takes at most ``sched_max_admit``
                         requests (0 = as many as there are free slots).
+                        These and ``decode_block`` apply to EVERY
+                        registered ServingFamily, not just the
+                        decomposed-KV path.
     * ``decode_block`` — fused decode steps per device launch (serving):
                         1 (default) is the classic one-dispatch-per-token
                         loop; N > 1 runs up to N steps inside one jitted

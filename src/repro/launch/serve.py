@@ -2,6 +2,12 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --requests 8
 
+The engine is family-generic (``repro.serving.families``): ``--family
+ssm|moe|hybrid|dense`` serves that family's default reduced arch on the
+same slot/fused/async machinery, e.g.
+
+  PYTHONPATH=src python -m repro.launch.serve --family ssm --requests 8
+
 Decomposed-KV serving (the paper's activation decomposition applied to the
 KV stream) rides one DecomposeEngine, constructed here from the CLI flags
 and handed to the serving engine:
@@ -31,9 +37,27 @@ from ..serving import Engine, Request
 from .mesh import parse_mesh
 
 
+# default arch per serving family for `--family NAME` without `--arch`
+_FAMILY_DEFAULT_ARCH = {
+    "dense": "llama2-7b",
+    "ssm": "mamba2-780m",
+    "moe": "olmoe-1b-7b",
+    "hybrid": "zamba2-1.2b",
+}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None,
+                    help="architecture name (required unless --family "
+                         "picks its default arch)")
+    ap.add_argument("--family", default=None,
+                    choices=sorted(_FAMILY_DEFAULT_ARCH),
+                    help="serve this family's default arch (ssm = "
+                         "mamba2-780m, moe = olmoe-1b-7b, hybrid = "
+                         "zamba2-1.2b, dense = llama2-7b); --arch "
+                         "overrides the arch, and the engine checks it "
+                         "really is that family")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
@@ -114,8 +138,15 @@ def main() -> None:
                          "engine steps (0 = only the final summary)")
     args = ap.parse_args()
 
+    if args.arch is None:
+        if args.family is None:
+            ap.error("one of --arch / --family is required")
+        args.arch = _FAMILY_DEFAULT_ARCH[args.family]
     mesh = parse_mesh(args.mesh)
     cfg = get_arch(args.arch).reduced()
+    if args.family is not None and cfg.family != args.family:
+        ap.error(f"--arch {args.arch} is family {cfg.family!r}, "
+                 f"not {args.family!r}")
     fns = api.model_fns(cfg)
     params = fns.init(jax.random.PRNGKey(0), cfg)
     expansion = args.expansion if args.expansion == "auto" \
@@ -189,7 +220,8 @@ def main() -> None:
     mesh_desc = "none" if mesh is None else \
         "x".join(str(mesh.shape[a]) for a in mesh.axis_names)
     async_desc = f"async({eng.ready_order})" if eng.prefill_async else "sync"
-    print(f"engine: {dengine}  admission={args.admission}  "
+    print(f"engine: {dengine}  family={cfg.family}"
+          f"[{type(eng.family).__name__}]  admission={args.admission}  "
           f"mesh={mesh_desc} ({len(jax.devices())} devices)  "
           f"decode_block={eng.decode_block}  prefill={async_desc}")
     print(f"stats: prefills={s.prefills} batches={s.prefill_batches} "

@@ -16,6 +16,8 @@ into an AST rule that runs on every commit:
                                       keys, seeds, cache filenames
  D2      wall-clock-interval          ``perf_counter`` for latency math
  D3      non-atomic-write             tmp + ``os.replace`` for every write
+ F1      family-table-complete        family dispatch only via the
+                                      ModelFns / ServingFamily registries
  J1      donated-buffer-reuse         never read a donated buffer again
  J2      host-sync-hot-path           no device sync in serving hot paths
  O1      obs-token-neutral            obs is host-side; none in traced fns
@@ -40,6 +42,7 @@ from .core import (REGISTRY, SCHEMA, Finding, ModuleCtx, Rule, all_rules,
                    run_paths)
 # importing the rule modules populates the registry
 from . import rules_determinism  # noqa: F401
+from . import rules_family       # noqa: F401
 from . import rules_jax          # noqa: F401
 from . import rules_obs          # noqa: F401
 from . import rules_pallas       # noqa: F401

@@ -1,0 +1,80 @@
+"""Family dispatch rule: F1 (family-table-complete)."""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from .core import Finding, ModuleCtx, Rule, register
+
+# the registered dispatch points: the ModelFns table (models.api) and the
+# ServingFamily registry (serving.families) — family keys are RESOLVED
+# here, once, and everything downstream calls through the returned object
+_DISPATCH_FNS = {"model_fns", "serving_family"}
+
+
+def _is_family_key(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Attribute) and node.attr == "family") \
+        or (isinstance(node, ast.Name) and node.id == "family")
+
+
+@register
+class FamilyDispatchRule(Rule):
+    """F1 — no per-family dict/if-chain dispatch in the serving engine or
+    the model API outside the registered protocol tables.
+
+    The PR 10 refactor exists because ad-hoc ``cfg.family`` branches
+    drift: ``Engine._prefill_args`` grew a vlm/audio if-chain that
+    duplicated what became ``ModelFns.prefill_inputs`` — a new family
+    silently fell through to the dense arm (wrong prefill inputs, shape
+    error at best) instead of failing at registration, and the same
+    table had to be patched in two places (``models.api`` spec probes
+    and the engine) to stay consistent.  The supported extension points
+    are the ``ModelFns`` registry (``models.api.model_fns``) and the
+    ``ServingFamily`` registry (``serving.families.serving_family``):
+    inside those resolvers a family-keyed table lookup is the design;
+    anywhere else in ``repro/serving/`` or ``repro/models/api.py`` a
+    ``cfg.family`` comparison or subscript is a second dispatch table
+    waiting to go stale.  ``assert cfg.family == ...`` guards are exempt
+    — a loud constraint check is the opposite of silent drift.
+    """
+    id = "F1"
+    name = "family-table-complete"
+
+    def check(self, ctx: ModuleCtx) -> Iterator[Finding]:
+        if not (ctx.in_pkg("repro", "serving")
+                or (ctx.in_pkg("repro", "models")
+                    and ctx.parts[-1] == "api.py")):
+            return
+        for node in ast.walk(ctx.tree):
+            use = self._family_dispatch(node)
+            if use is None or self._exempt(node):
+                continue
+            yield ctx.finding(
+                self, node,
+                f"per-family {use} outside the registered dispatch "
+                "tables — register a ServingFamily "
+                "(serving.families) or extend the ModelFns entry "
+                "(models.api) instead of branching on cfg.family")
+
+    @staticmethod
+    def _family_dispatch(node: ast.AST) -> Optional[str]:
+        if isinstance(node, ast.Compare):
+            if _is_family_key(node.left) \
+                    or any(_is_family_key(c) for c in node.comparators):
+                return "comparison"
+        elif isinstance(node, ast.Subscript):
+            if _is_family_key(node.slice):
+                return "table lookup"
+        return None
+
+    @staticmethod
+    def _exempt(node: ast.AST) -> bool:
+        cur = node
+        while cur is not None:
+            if isinstance(cur, ast.Assert):
+                return True          # loud guard, not silent dispatch
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and cur.name in _DISPATCH_FNS:
+                return True          # inside a registered resolver
+            cur = getattr(cur, "parent", None)
+        return False

@@ -20,14 +20,41 @@ from . import encdec, hybrid, mamba2, moe, transformer, vlm
 Array = jax.Array
 
 
+def tokens_prefill_inputs(cfg, tokens, make, mem_len=None):
+    """Default ``ModelFns.prefill_inputs``: the token matrix is the whole
+    prefill input (dense, moe, ssm, hybrid)."""
+    return (tokens,)
+
+
+def no_batch_extras(cfg, b, s, make):
+    """Default ``ModelFns.batch_extras``: tokens/labels are the whole
+    training batch."""
+    return {}
+
+
 @dataclasses.dataclass(frozen=True)
 class ModelFns:
+    """Per-family model surface.
+
+    ``prefill_inputs``/``batch_extras`` describe the family's EXTRA
+    positional prefill inputs and training-batch members (vlm image
+    embeddings, audio encoder frames) through one table, so every
+    consumer — spec builders here, the serving engine's admission path —
+    reads the same contract instead of growing its own ``cfg.family``
+    if-chain (the per-family table drift ``splice_cache`` warns about).
+    ``make(shape, dtype)`` is the leaf constructor: ShapeDtypeStruct for
+    specs, ``jnp.zeros`` for the serving engine's placeholder inputs.
+    """
     init: Callable                      # (key, cfg) -> params
     loss_fn: Callable                   # (params, cfg, batch) -> scalar
     prefill: Callable                   # (params, cfg, *inputs) -> (logits, cache)
     decode_step: Callable               # (params, cfg, token, cache, pos)
     init_cache: Callable                # (cfg, batch, max_len) -> cache
     forward: Optional[Callable] = None
+    # (cfg, tokens, make, mem_len) -> positional prefill inputs
+    prefill_inputs: Callable = tokens_prefill_inputs
+    # (cfg, b, s, make) -> {name: leaf} extra training-batch members
+    batch_extras: Callable = no_batch_extras
 
 
 def run_decode_block(step: Callable, sampler: Callable, max_block: int,
@@ -91,15 +118,17 @@ _FAMILY = {
     "moe": ModelFns(moe.init, moe.loss_fn, moe.prefill, moe.decode_step,
                     moe.init_cache, moe.forward),
     "ssm": ModelFns(mamba2.init, mamba2.loss_fn, mamba2.prefill,
-                    mamba2.decode_step,
-                    lambda cfg, b, m: mamba2.init_state(cfg, b),
-                    mamba2.forward),
+                    mamba2.decode_step, mamba2.init_state, mamba2.forward),
     "hybrid": ModelFns(hybrid.init, hybrid.loss_fn, hybrid.prefill,
                        hybrid.decode_step, hybrid.init_state, hybrid.forward),
     "vlm": ModelFns(vlm.init, vlm.loss_fn, vlm.prefill, vlm.decode_step,
-                    vlm.init_cache, vlm.forward),
+                    vlm.init_cache, vlm.forward,
+                    prefill_inputs=vlm.prefill_inputs,
+                    batch_extras=vlm.batch_extras),
     "audio": ModelFns(encdec.init, encdec.loss_fn, encdec.prefill,
-                      encdec.decode_step, encdec.init_cache, encdec.forward),
+                      encdec.decode_step, encdec.init_cache, encdec.forward,
+                      prefill_inputs=encdec.prefill_inputs,
+                      batch_extras=encdec.batch_extras),
 }
 
 
@@ -286,11 +315,7 @@ def train_batch_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
     b, s = shape.global_batch, shape.seq_len
     specs = {"tokens": _sds((b, s), jnp.int32),
              "labels": _sds((b, s), jnp.int32)}
-    if cfg.family == "vlm":
-        specs["image_embeds"] = _sds((b, cfg.num_image_tokens, cfg.d_model),
-                                     cfg.jax_dtype)
-    if cfg.family == "audio":
-        specs["frames"] = _sds((b, s, cfg.d_model), cfg.jax_dtype)
+    specs.update(model_fns(cfg).batch_extras(cfg, b, s, _sds))
     return specs
 
 
@@ -298,12 +323,7 @@ def prefill_input_specs(cfg: ArchConfig, shape: ShapeSpec):
     """Positional inputs of fns.prefill after (params, cfg)."""
     b, s = shape.global_batch, shape.seq_len
     tokens = _sds((b, s), jnp.int32)
-    if cfg.family == "vlm":
-        return (tokens, _sds((b, cfg.num_image_tokens, cfg.d_model),
-                             cfg.jax_dtype))
-    if cfg.family == "audio":
-        return (_sds((b, s, cfg.d_model), cfg.jax_dtype), tokens)
-    return (tokens,)
+    return model_fns(cfg).prefill_inputs(cfg, tokens, _sds, mem_len=s)
 
 
 def decode_input_specs(cfg: ArchConfig, shape: ShapeSpec):

@@ -114,6 +114,23 @@ def loss_fn(p: Params, cfg, batch: Dict[str, Array]) -> Array:
 # Serving
 # ---------------------------------------------------------------------------
 
+def prefill_inputs(cfg, tokens, make, mem_len=None):
+    """``ModelFns.prefill_inputs``: encoder frames FIRST, then tokens.
+
+    ``mem_len`` is the encoder memory length: training/dry-run specs pass
+    the workload sequence length; ``None`` (the serving engine) resolves
+    to ``cfg.num_audio_frames`` — the ``init_cache`` cross-KV contract —
+    NOT the token prefix length."""
+    m = cfg.num_audio_frames if mem_len is None else mem_len
+    b = tokens.shape[0]
+    return (make((b, m, cfg.d_model), cfg.jax_dtype), tokens)
+
+
+def batch_extras(cfg, b, s, make):
+    """``ModelFns.batch_extras``: training batches carry audio frames."""
+    return {"frames": make((b, s, cfg.d_model), cfg.jax_dtype)}
+
+
 def init_cache(cfg, batch: int, max_len: int) -> Params:
     kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
     nd, m = cfg.dec_layers, cfg.num_audio_frames

@@ -211,7 +211,8 @@ def loss_fn(p: Params, cfg, batch: Dict[str, Array]) -> Array:
     return L.cross_entropy(forward(p, cfg, batch["tokens"]), batch["labels"])
 
 
-def init_state(cfg, batch: int) -> Params:
+def init_state(cfg, batch: int, max_len: Optional[int] = None) -> Params:
+    del max_len                      # state is O(1); no cache length needed
     nl = cfg.num_layers
     conv_ch = cfg.d_inner + 2 * cfg.ssm_state
     return {

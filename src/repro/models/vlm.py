@@ -93,6 +93,21 @@ def loss_fn(p: Params, cfg, batch: Dict[str, Array]) -> Array:
 # Serving
 # ---------------------------------------------------------------------------
 
+def prefill_inputs(cfg, tokens, make, mem_len=None):
+    """``ModelFns.prefill_inputs``: tokens plus the image-embedding block
+    (``num_image_tokens`` rows — fixed by the cross-KV cache contract,
+    independent of the prompt length)."""
+    b = tokens.shape[0]
+    return (tokens, make((b, cfg.num_image_tokens, cfg.d_model),
+                         cfg.jax_dtype))
+
+
+def batch_extras(cfg, b, s, make):
+    """``ModelFns.batch_extras``: training batches carry image embeddings."""
+    return {"image_embeds": make((b, cfg.num_image_tokens, cfg.d_model),
+                                 cfg.jax_dtype)}
+
+
 def init_cache(cfg, batch: int, max_len: int) -> Params:
     groups, spg = _layout(cfg)
     kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim

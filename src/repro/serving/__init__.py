@@ -4,6 +4,17 @@ A slot-based engine (vLLM-style, sized for the dry-run meshes): ``slots``
 concurrent sequences share one static cache; finished sequences free their
 slot; queued requests prefill into free slots.
 
+The engine is FAMILY-GENERIC: everything model-family-specific — cache
+allocation, splice admission, prefill/decode/fused-block builders, tail
+folds, paged-layout adapters, scheduler admission cost — lives behind the
+:class:`~repro.serving.families.ServingFamily` protocol, resolved once at
+construction (``serving.families.serving_family``).  One engine serves
+transformer (dense or decomposed-KV), Mamba2/SSM state slots, MoE,
+hybrid, VLM, and audio encoder-decoder traffic; this module contains no
+per-family branches (dcomlint rule F1 gates regressions), only the
+family-agnostic machinery: slots, scheduler, tickets, stats, and the
+step loop.
+
 Admission is PER SLOT (``admission="per_slot"``, the default): only the
 newly admitted requests are prefilled — batch and length rounded up to
 scheduler buckets to bound re-jits — and the fresh cache rows are spliced
@@ -25,7 +36,9 @@ global scalar.
 The :class:`Scheduler` dispatches FIFO with prefill-length bucketing (one
 plen bucket per admission LAUNCH; ``_admit`` drains further buckets into
 the remaining free slots, so mixed-length queues no longer idle slots
-behind the head bucket); ``EngineStats`` tracks per-request first-token
+behind the head bucket); bucketing runs on the family's ADMISSION COST
+(prompt tokens plus fixed modality work — image tokens, encoder frames),
+not raw prompt length.  ``EngineStats`` tracks per-request first-token
 and inter-token latency, and wall time accrues per ``step()``.  Requests
 stop the moment they emit ``eos_id`` (or any of ``stop_tokens``) — the
 slot frees immediately — with stopped-vs-budget finishes counted
@@ -45,13 +58,14 @@ replays the slab engine's arithmetic bit-for-bit
 
 Mesh-parallel serving: when the DecomposeEngine's config carries a
 ``mesh``, every cache (dense k/v AND the low-rank ``k_u``/``k_vt``
-factors) is allocated on ``distributed.sharding.cache_sharding`` — slots
-over the DP super-axis, KV heads / kv width over "model" — and every
-jitted step fn constrains its cache inputs/outputs to the same specs, so
-splice admission, per-slot ``frozen_len`` masking, and ``compress_tail``
-folds all stay device-local along the batch axis (no gather-to-host; the
-tail write is a vmapped per-slot ``dynamic_update_slice``).  Greedy
-outputs are byte-identical to the single-device engine
+factors — and the SSM/hybrid state slots) is allocated on
+``distributed.sharding.cache_sharding`` — slots over the DP super-axis,
+KV heads / kv width over "model" — and every jitted step fn constrains
+its cache inputs/outputs to the same specs, so splice admission,
+per-slot ``frozen_len`` masking, and ``compress_tail`` folds all stay
+device-local along the batch axis (no gather-to-host; the tail write is
+a vmapped per-slot ``dynamic_update_slice``).  Greedy outputs are
+byte-identical to the single-device engine
 (tests/test_serving_conformance.py runs the 8-host-device twin).
 
 ``decode_block > 1`` fuses that many decode rounds into ONE jitted
@@ -70,23 +84,23 @@ engine would have run them (DESIGN.md §11).
 ``prefill_async=True`` disaggregates prefill from decode (vLLM-style
 P/D split, DESIGN.md §12): ``_admit`` only DISPATCHES the prefill —
 forward + Lanczos for misses, tail-only suffix prefill for prefix-cache
-hits — as a :class:`PrefillTicket` into the engine's prefill pool, with
-the target slots reserved and (paged mode) the pages/refs already held,
-then returns to the decode loop.  JAX dispatch is asynchronous, so the
-Lanczos factorization runs device-side while live slots keep decoding;
-the ticket's results are spliced into the reserved slots at a later step
-boundary once ``api.tree_ready`` (a non-blocking ``Array.is_ready``
-probe over the result tree) reports them done — decode never blocks on
-an in-flight decomposition.  ``ready_order="ready"`` splices tickets as
-they complete (dispatch order among the simultaneously-ready);
-``ready_order="deterministic"`` completes every ticket inline at its
-dispatch round — the synchronous engine's schedule driven through the
-identical dispatch/complete machinery, which is the conformance mode:
-tokens are byte-identical to ``prefill_async=False``
-(tests/test_serving_async.py, slot AND paged, single AND fused decode,
-1 and 8 devices).  ``cancel_pending`` unwinds in-flight tickets:
-reserved slots free, page refs release, requests requeue in arrival
-order.
+hits — as a :class:`~repro.serving.families.PrefillTicket` into the
+engine's prefill pool, with the target slots reserved and (paged mode)
+the pages/refs already held, then returns to the decode loop.  JAX
+dispatch is asynchronous, so the Lanczos factorization runs device-side
+while live slots keep decoding; the ticket's results are spliced into
+the reserved slots at a later step boundary once ``api.tree_ready`` (a
+non-blocking ``Array.is_ready`` probe over the result tree) reports them
+done — decode never blocks on an in-flight decomposition.
+``ready_order="ready"`` splices tickets as they complete (dispatch order
+among the simultaneously-ready); ``ready_order="deterministic"``
+completes every ticket inline at its dispatch round — the synchronous
+engine's schedule driven through the identical dispatch/complete
+machinery, which is the conformance mode: tokens are byte-identical to
+``prefill_async=False`` (tests/test_serving_async.py, slot AND paged,
+single AND fused decode, 1 and 8 devices).  ``cancel_pending`` unwinds
+in-flight tickets: reserved slots free, page refs release, requests
+requeue in arrival order.
 
 All jitted decode/fold/splice fns DONATE their cache arguments
 (``donate_argnums``): the engine rebinds ``self.cache`` (or the paged
@@ -99,7 +113,6 @@ expected and filtered.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 import warnings
 from typing import Any, Callable, List, Optional, Tuple, Union
@@ -118,6 +131,8 @@ from ..engine import DecomposeEngine, EngineConfig
 from ..models import api
 from ..obs import (NULL_SPAN, LatencySeries, MetricsRegistry, Observability,
                    phase_scope)
+from .families import (PrefillTicket, ServingFamily,  # noqa: F401
+                       family_names, register_family, serving_family)
 
 Array = jax.Array
 
@@ -269,10 +284,13 @@ class Scheduler:
     """FIFO request queue with prefill-length bucketing.
 
     ``next_batch`` serves the HEAD of the queue plus any later requests
-    falling in the same prefill-length bucket (FIFO order within the
+    falling in the same prefill-cost bucket (FIFO order within the
     bucket), so one admission batch compiles exactly one (batch, plen)
-    shape.  Prompt lengths round up to multiples of ``bucket``; admitted
-    batch size is capped at ``max_admit`` (0 = number of free slots).
+    shape.  Bucketing runs on ``cost(request)`` — the family's reported
+    admission cost (prompt tokens by default; modality families add
+    their fixed extra prefill work, e.g. image tokens or encoder
+    frames), rounded up to multiples of ``bucket``; admitted batch size
+    is capped at ``max_admit`` (0 = number of free slots).
 
     Every submission is stamped with a monotonically increasing arrival
     ``seq``; :meth:`requeue` merges a deferred batch back on that stamp,
@@ -282,9 +300,12 @@ class Scheduler:
     to the front yielded [a, c, b] — c jumped b's place in line).
     """
 
-    def __init__(self, bucket: int = 16, max_admit: int = 0):
+    def __init__(self, bucket: int = 16, max_admit: int = 0,
+                 cost: Optional[Callable[[Request], int]] = None):
         self.bucket = max(1, bucket)
         self.max_admit = max_admit
+        self.cost = cost if cost is not None \
+            else (lambda r: len(r.prompt))
         self._q: List[Request] = []
         self._seq = 0
 
@@ -315,7 +336,7 @@ class Scheduler:
             return []
         cap = free_slots if self.max_admit < 1 \
             else min(free_slots, self.max_admit)
-        want = self.bucket_of(len(self._q[0].prompt))
+        want = self.bucket_of(self.cost(self._q[0]))
         take: List[Request] = []
         keep: List[Request] = []
         # Ride-along fairness: a later same-bucket request may join the
@@ -326,7 +347,7 @@ class Scheduler:
         # token a full admission round out (head-bucket starvation).
         skipped = set()
         for r in self._q:
-            bk = self.bucket_of(len(r.prompt))
+            bk = self.bucket_of(self.cost(r))
             if bk == want and len(take) + len(skipped) < cap:
                 take.append(r)
             else:
@@ -337,178 +358,13 @@ class Scheduler:
         return take
 
 
-def _pow2(n: int) -> int:
-    return 1 << max(0, n - 1).bit_length()
-
-
-@dataclasses.dataclass
-class PrefillTicket:
-    """One in-flight admission launch (the prefill side of the P/D split).
-
-    Created at DISPATCH time: the prefill (forward + Lanczos, or a
-    prefix-hit suffix pass) has been launched on device, the target slots
-    are reserved, and — paged mode — the pages are already allocated and
-    the prefix-hit refs held, so nothing the decode loop does during the
-    async window can invalidate the launch.  ``probe`` is the result tree
-    (``api.tree_ready`` gives a non-blocking done check); ``complete``
-    materializes the results (splice + first-token sample — the only
-    blocking point) and ``cancel`` unwinds the reservation (slots free,
-    pages/refs release) without ever blocking on the device.
-    """
-    requests: List[Request]
-    slots: List[int]
-    plen: int
-    probe: Any                       # pytree of in-flight jax arrays
-    complete: Callable               # () -> (first_tokens, frozen_lens)
-    cancel: Callable                 # () -> None (release pages/refs)
-    t_dispatch: float = 0.0
-    span: Any = None                 # obs.Span on the "tickets" track
-
-    def ready(self) -> bool:
-        return api.tree_ready(self.probe)
-
-
-def _constrain(mesh):
-    """Cache-tree ``with_sharding_constraint`` closure for the jitted step
-    fns (identity when ``mesh`` is None — the single-device path traces the
-    exact pre-mesh graph).  ``seq_shard=False``: the batch-1 time-axis
-    ("flash-decoding") rule is for global-batch-1 long-context decode, not
-    serving — a freshly prefilled single-request cache must stay replicated
-    until spliced, not bounce through a sequence reshard per admission."""
-    if mesh is None:
-        return lambda c: c
-    from ..distributed import sharding as sh
-    return lambda c: sh.constrain_cache(c, mesh, seq_shard=False)
-
-
-@functools.lru_cache(maxsize=None)
-def _jitted_steps(fns: api.ModelFns, cfg: ArchConfig, max_len: int,
-                  mesh=None):
-    """Jitted (decode, prefill) shared across Engine instances of the same
-    (config, mesh) — XLA executables are reused instead of re-traced per
-    engine.  Under a mesh both the incoming and outgoing cache trees are
-    sharding-constrained to ``distributed.sharding.cache_pspec``, so GSPMD
-    keeps every per-slot update device-local along the batch axis.  The
-    decode cache is DONATED: the engine rebinds ``self.cache`` at the call
-    site, so the update writes in place."""
-    con = _constrain(mesh)
-
-    def decode(p, t, c, pos):
-        lg, nc = fns.decode_step(p, cfg, t, con(c), pos)
-        return lg, con(nc)
-
-    def prefill(p, *a):
-        lg, c = fns.prefill(p, cfg, *a, max_len)
-        return lg, con(c)
-
-    return jax.jit(decode, donate_argnums=(2,)), jax.jit(prefill)
-
-
-@functools.lru_cache(maxsize=None)
-def _jitted_dkv_decode(cfg: ArchConfig, mesh=None):
-    from ..models import decomposed_kv as DK
-    con = _constrain(mesh)
-
-    def step(p, t, c, pos, fl):
-        lg, nc = DK.decode_step_dkv(p, cfg, t, con(c), pos, frozen_len=fl)
-        return lg, con(nc)
-
-    return jax.jit(step, donate_argnums=(2,))
-
-
-@functools.lru_cache(maxsize=None)
-def _jitted_decode_block(fns: api.ModelFns, cfg: ArchConfig, block: int,
-                         sampler, mesh=None):
-    """Fused decode block for ANY family (dense path included): ``block``
-    is the static loop bound, the actual step count per call is traced.
-    lru-keyed on (fns, cfg, block, sampler, mesh) so equivalently
-    configured engines share one executable; the cache carry is donated."""
-    con = _constrain(mesh)
-
-    def run(p, t, c, pos, n, stops, key, r0):
-        step = lambda tk, cc, ps: fns.decode_step(p, cfg, tk, cc, ps)
-        buf, steps, done, nc = api.run_decode_block(
-            step, sampler, block, t, con(c), pos, n, stops, key, r0)
-        return buf, steps, done, con(nc)
-
-    return jax.jit(run, donate_argnums=(2,))
-
-
-@functools.lru_cache(maxsize=None)
-def _jitted_dkv_decode_block(cfg: ArchConfig, block: int, sampler,
-                             mesh=None):
-    from ..models import decomposed_kv as DK
-    con = _constrain(mesh)
-
-    def run(p, t, c, pos, fl, n, stops, key, r0):
-        buf, steps, done, nc = DK.decode_block_dkv(
-            p, cfg, t, con(c), pos, fl, n, stops, key, r0,
-            sampler=sampler, max_block=block)
-        return buf, steps, done, con(nc)
-
-    return jax.jit(run, donate_argnums=(2,))
-
-
-@functools.lru_cache(maxsize=None)
-def _jitted_dkv_prefill(cfg: ArchConfig, backend: str, expansion: int,
-                        rank: int, tail: int, iters_extra: int,
-                        exact: bool, mesh=None):
-    """Jitted decomposed-KV prefill (forward + Lanczos/SVD factorization in
-    ONE compiled program — ~100× over the eager path on small configs).
-    Keyed on the decomposition-relevant engine knobs so equivalently
-    configured serving engines share executables.  With a mesh the inner
-    DecomposeEngine runs the factorization DP-sharded over the
-    layers×batch axis and the fresh cache comes out sharding-constrained."""
-    from ..models import decomposed_kv as DK
-    eng = DecomposeEngine(EngineConfig(
-        backend=backend, expansion=expansion, kv_rank=rank, kv_tail=tail,
-        kv_iters_extra=iters_extra, mesh=mesh))
-    con = _constrain(mesh)
-
-    def prefill(p, tk):
-        lg, c = DK.prefill_dkv(p, cfg, tk, rank, tail=tail, exact=exact,
-                               engine=eng)
-        return lg, con(c)
-
-    return jax.jit(prefill)
-
-
-@functools.lru_cache(maxsize=None)
-def _jitted_dkv_compress(cfg: ArchConfig, rank: int, mesh=None):
-    # The incoming cache is donated: a fold GROWS the time axis, so only
-    # the same-shaped leaves (tail, factors) alias — the rest is the
-    # "not usable" warning filtered at module import.
-    from ..models import decomposed_kv as DK
-    con = _constrain(mesh)
-    return jax.jit(lambda c, fl, fm, nf: con(DK.compress_tail(
-        con(c), cfg, rank, frozen_len=fl, fold=fm, new_frozen=nf)),
-        donate_argnums=(0,))
-
-
-@functools.lru_cache(maxsize=None)
-def _jitted_splices(mesh=None):
-    """Jitted cache-splice kernels (slot/src index vectors are traced, so
-    one executable serves every admission with the same shape profile).
-    The LIVE side keeps its batch sharding — and is donated, since every
-    call site rebinds the engine cache to the splice result; the fresh
-    side is typically smaller than the slot batch and stays wherever
-    prefill left it."""
-    from ..models import decomposed_kv as DK
-    con = _constrain(mesh)
-    dkv = jax.jit(lambda live, fresh, idx, src:
-                  con(DK.splice_dkv(con(live), fresh, idx, src)),
-                  donate_argnums=(0,))
-    fam = jax.jit(lambda old, new, idx, src, cfg:
-                  con(api.splice_cache(cfg, con(old), new, idx, src)),
-                  static_argnums=(4,), donate_argnums=(0,))
-    return dkv, fam
-
-
 class Engine:
     """Continuous-batching engine over the unified model API.
 
     Decode advances every live slot one token per step; admission splices
     only the newly prefilled rows into the live cache (per-slot policy).
+    Every family-specific operation dispatches through ``self.family``
+    (a :class:`~repro.serving.families.ServingFamily`).
     """
 
     def __init__(self, cfg: ArchConfig, params, *, slots: int = 4,
@@ -569,12 +425,6 @@ class Engine:
         # heads / kv width over "model") per distributed.sharding's spec
         # tables; None keeps the single-device path bit-identical.
         self.mesh = self.dengine.config.mesh
-        if self.dkv_rank:
-            assert cfg.family == "dense", "decomposed KV: dense family"
-            self.cache = None            # built at first prefill
-        else:
-            self.cache = self._place(self.fns.init_cache(cfg, slots,
-                                                         max_len))
         # per-slot state: pos is the next write position, frozen_len the
         # length of the slot's low-rank prefix, rank_eff its effective
         # factor rank (dkv path only — lets the engine slice the rank
@@ -583,24 +433,16 @@ class Engine:
         self.frozen_len = np.zeros((slots,), np.int32)
         self.rank_eff = np.zeros((slots,), np.int32)
         self.live: List[Optional[Request]] = [None] * slots
-        # paged mode: block-table cache + page allocator + prefix cache
+        # the per-family strategy: cache layout, splice admission, jitted
+        # step builders, folds, and (transformer-dkv) the paged adapter —
+        # resolving it also constructs self.pager when paged
         self.pager = None
-        if paged:
-            assert self.dkv_rank, "paged serving runs on the decomposed " \
-                "KV cache (set decompose_kv_rank / kv_rank)"
-            assert admission == "per_slot", "paged serving is per-slot"
-            from .paged import PagedDKV
-            ecfg = self.dengine.config
-            self.pager = PagedDKV(
-                cfg, slots=slots, max_len=max_len, rank=self.dkv_rank,
-                tail=self.dkv_tail, page=ecfg.kv_page,
-                pool_pages=ecfg.kv_pool_pages,
-                prefix_capacity=ecfg.kv_prefix_cache, mesh=self.mesh)
-            if self.mesh is not None:
-                self.pager.cache = self._place(self.pager.cache)
+        self.family = serving_family(self, paged=paged)
+        self.cache = self.family.alloc()
         ecfg = self.dengine.config
         self.sched = Scheduler(bucket=ecfg.sched_bucket,
-                               max_admit=ecfg.sched_max_admit)
+                               max_admit=ecfg.sched_max_admit,
+                               cost=self.family.prefill_cost)
         self.admit_every = max(1, ecfg.sched_admit_every)
         # fused decode-block length: explicit arg wins, else the engine
         # config; "auto" resolves through the repro.tune cost model for
@@ -609,13 +451,13 @@ class Engine:
         blk = ecfg.decode_block if decode_block is None else decode_block
         if blk == "auto":
             from .. import tune
-            horizon = self.dkv_tail if self.dkv_rank else max_len
+            horizon = self.family.tune_horizon()
             kvw = cfg.num_kv_heads * cfg.resolved_head_dim
             blk = tune.tuned_decode_block((slots, horizon, kvw))
         self.decode_block = max(1, int(blk))
-        if self.dkv_rank:
-            # fold cadence bounds every block — don't trace a longer loop
-            self.decode_block = min(self.decode_block, self.dkv_tail)
+        cap = self.family.block_cap()
+        if cap is not None:
+            self.decode_block = min(self.decode_block, cap)
         # -- async prefill/decode disaggregation (DESIGN.md §12) --------
         # prefill_async: explicit arg wins, else the engine config.
         # ready_order="ready" splices tickets as their device results
@@ -644,20 +486,6 @@ class Engine:
         # index it, which is what keeps any interleaving of block sizes
         # byte-identical to the single-step engine
         self._round = 0
-
-        self._decode, self._prefill = _jitted_steps(self.fns, cfg, max_len,
-                                                    self.mesh)
-        self._splice_dkv, self._splice_fam = _jitted_splices(self.mesh)
-        # frozen_len is a traced [B] vector now, so the dkv step jits
-        # cleanly (no retrace per tail fold)
-        if self.dkv_rank:
-            ec = self.dengine.config
-            self._decode_dkv = _jitted_dkv_decode(cfg, self.mesh)
-            self._prefill_dkv = _jitted_dkv_prefill(
-                cfg, ec.backend, ec.expansion, self.dkv_rank, self.dkv_tail,
-                ec.kv_iters_extra, self.dkv_exact, self.mesh)
-            self._compress_dkv = _jitted_dkv_compress(cfg, self.dkv_rank,
-                                                      self.mesh)
 
     def _place(self, cache):
         """device_put a freshly built cache onto its mesh shardings."""
@@ -766,8 +594,7 @@ class Engine:
         req.done = True
         req.t_done = now
         self.live[slot] = None
-        if self.pager is not None:
-            self.pager.free_slot(slot)
+        self.family.free_slot(slot)
         if eos:
             self.stats.stopped_eos += 1
         else:
@@ -806,8 +633,8 @@ class Engine:
             if not free or not len(self.sched):
                 break
             has_live = any(r is not None for r in self.live)
-            if self.admission == "gang" and has_live and \
-                    (self.dkv_rank or self.cfg.family != "dense"):
+            if self.admission == "gang" and has_live \
+                    and not self.family.gang_live_splice:
                 # legacy gang restriction, kept only for the A/B benchmark:
                 # splice-merge used to exist for the dense-cache path only
                 break
@@ -821,88 +648,31 @@ class Engine:
                 # length (one extra jit shape near the cap beats losing
                 # decode room)
                 plen = maxp
-            looks = None
-            if self.pager is not None:
-                # prefix lookups FIRST (page refs taken per hit), so the
-                # reservation below only counts the MISSES' pages and its
-                # evictions can never invalidate this batch's hits
-                looks = self._lookup_prefixes(batch, plen)
-                n_miss = sum(1 for g in looks if g is None)
-                if not self._reserve_pages(n_miss, len(batch), plen):
-                    # page pool can't take this batch yet — release the
-                    # hit refs taken above (exactly once: they were never
-                    # installed anywhere), merge the batch back into the
-                    # queue in ARRIVAL order, and wait for capacity
-                    for got in looks:
-                        if got is not None:
-                            self.pager.alloc.release(got[2])
-                    self.sched.requeue(batch)
-                    self.stats.stalls += 1
-                    blocked = True
-                    break
+            # family capacity check (paged: prefix lookups + page
+            # reservation — hit refs already held inside ctx); None
+            # defers the batch until in-flight work frees resources
+            ctx = self.family.reserve(batch, plen)
+            if ctx is None:
+                self.sched.requeue(batch)
+                self.stats.stalls += 1
+                blocked = True
+                break
             finished.extend(self._admit_batch(batch, free, plen, has_live,
-                                              looks))
+                                              ctx))
             if self.admission == "gang":
                 break                # legacy: one gang per admission
         if blocked and not self._occupied():
-            # Deferred on page capacity with NO live slot and NO in-flight
-            # ticket: nothing can ever free pages (reservation already
-            # evicted every evictable prefix entry), so retrying would
-            # livelock run() until max_steps and silently drop the
-            # request.  Fail loudly instead.
-            head = self.sched._q[0]
-            raise RuntimeError(
-                f"request uid={head.uid} (prompt {len(head.prompt)} tokens)"
-                f" is blocked on page capacity with no in-flight work to "
-                f"free pages — raise kv_pool_pages (pool: "
-                f"{self.pager.num_pages} U pages / "
-                f"{self.pager.num_tail_pages} tail pages) or lower the "
-                f"prompt length / admission batch")
+            # Deferred on capacity with NO live slot and NO in-flight
+            # ticket: nothing can ever free resources (a paged
+            # reservation already evicted every evictable prefix entry),
+            # so retrying would livelock run() until max_steps and
+            # silently drop the request.  Fail loudly instead.
+            raise RuntimeError(self.family.capacity_msg(self.sched._q[0]))
         return finished
-
-    def _lookup_prefixes(self, batch: List[Request], plen: int) -> list:
-        """Prefix-cache lookups for one admission batch.  Each hit's
-        shared page refs are taken IMMEDIATELY — before any reservation
-        eviction or same-batch miss insertion can release them — and
-        handed to ``_dispatch_paged`` (or dropped on deferral).  Lookups
-        run unrecorded (``record=False``): hit/miss stats are counted at
-        DISPATCH, exactly once per admitted request, so defer/retry
-        cycles can no longer inflate them (each retry used to re-count
-        the same request)."""
-        pg = self.pager
-        out: list = []
-        for req in batch:
-            got = None
-            if pg.prefix is not None:
-                pad = plen - len(req.prompt)
-                padded = np.zeros(plen, np.int32)
-                padded[pad:] = req.prompt
-                found = pg.prefix.lookup(padded, self.dkv_tail, pad,
-                                         record=False)
-                if found is not None:
-                    ent, match_len = found
-                    share = ent.pages[:match_len // pg.page]
-                    pg.alloc.ref(share)
-                    got = (ent, match_len, share)
-            out.append(got)
-        return out
-
-    def _reserve_pages(self, n_miss: int, n_req: int, plen: int) -> bool:
-        """Can the pools take this batch (``n_miss`` full prefills plus a
-        tail per request)?  Evicts prefix-cache entries LRU-first if that
-        frees enough — hits are unaffected, they already hold refs."""
-        pg = self.pager
-        need_u = n_miss * pg.pages_for(plen)
-        need_t = n_req * pg.ntp
-        while pg.alloc.free_pages < need_u and pg.prefix is not None \
-                and len(pg.prefix):
-            pg.prefix._evict()
-        return pg.alloc.free_pages >= need_u \
-            and pg.talloc.free_pages >= need_t
 
     def _admit_batch(self, batch: List[Request], free: List[int],
                      plen: int, has_live: bool,
-                     looks: Optional[list] = None) -> List[Request]:
+                     ctx: Any = None) -> List[Request]:
         """One admission batch: stamp dispatch times, launch the prefill
         (ticket dispatch), then either complete inline (sync and
         deterministic modes — identical device-side program order to the
@@ -921,20 +691,15 @@ class Engine:
         self.stats.prefills += len(batch)
         if self.admission == "gang":
             with phase_scope("prefill"):
-                logits = self._admit_gang(batch, slots_idx, plen, has_live)
+                logits = self.family.gang(batch, slots_idx, plen, has_live)
             nxt = self._sample_host(logits, stream=1)[slots_idx]
-            fls = np.full(len(batch), plen if self.dkv_rank else 0,
-                          np.int32)
+            fls = self.family.frozen_after_prefill(len(batch), plen)
             self.stats.prefill_batches += 1
             return self._activate(batch, slots_idx, plen, nxt, fls)
         for slot in slots_idx:
             self._reserved[slot] = True
         with phase_scope("prefill"):
-            if self.pager is not None:
-                tickets = self._dispatch_paged(batch, slots_idx, plen,
-                                               looks)
-            else:
-                tickets = [self._dispatch_slab(batch, slots_idx, plen)]
+            tickets = self.family.dispatch(batch, slots_idx, plen, ctx)
         if self.trace.enabled:
             for t in tickets:
                 t.span = self.trace.begin(
@@ -1061,363 +826,6 @@ class Engine:
             toks[row_of(j), plen - len(req.prompt):] = req.prompt  # left-pad
         return toks
 
-    def _dispatch_slab(self, batch: List[Request], slots_idx: List[int],
-                       plen: int) -> PrefillTicket:
-        """Launch the slab-path prefill for one admission batch (batch
-        padded to a power of two so compile count stays O(log slots ×
-        max_len/bucket)) and return its ticket.  The prefill — Lanczos
-        included on the dkv path — is in flight the moment this returns;
-        the cache splice and first-token sample happen in ``complete()``
-        (ready-pool splice for async, immediately for sync)."""
-        nb = min(_pow2(len(batch)), max(self.slots, 1))
-        toks = self._toks(batch, nb, plen, lambda j: j)
-        if self.dkv_rank:
-            logits, fresh = self._prefill_dkv(self.params, jnp.asarray(toks))
-        else:
-            args = self._prefill_args(jnp.asarray(toks))
-            logits, fresh = self._prefill(self.params, *args)
-        self.stats.prefill_batches += 1
-
-        def complete():
-            idx = np.asarray(slots_idx, np.int32)
-            src = np.arange(len(slots_idx), dtype=np.int32)
-            if self.dkv_rank:
-                from ..models import decomposed_kv as DK
-                if self.cache is None:
-                    self.cache = self._place(DK.init_cache(
-                        self.cfg, self.slots, fresh["k_u"].shape[2],
-                        fresh["k_u"].shape[-1], tail=self.dkv_tail))
-                self.cache = self._splice_dkv(self.cache, fresh, idx, src)
-                self.rank_eff[slots_idx] = fresh["k_u"].shape[-1]
-                fls = np.full(len(batch), plen, np.int32)
-            else:
-                self.cache = self._splice_fam(self.cache, fresh, idx, src,
-                                              self.cfg)
-                fls = np.zeros(len(batch), np.int32)
-            nxt = self._sample_host(logits, stream=1)[:len(batch)]
-            return nxt, fls
-
-        return PrefillTicket(requests=list(batch), slots=list(slots_idx),
-                             plen=plen, probe=(logits, fresh),
-                             complete=complete, cancel=lambda: None,
-                             t_dispatch=time.perf_counter())
-
-    def _dispatch_paged(self, batch: List[Request], slots_idx: List[int],
-                        plen: int,
-                        looks: Optional[list]) -> List[PrefillTicket]:
-        """Paged admission dispatch: the precomputed prefix lookups
-        (``looks``, from ``_lookup_prefixes`` — hit page refs already
-        taken) split the batch into HITS (tail-only suffix prefill over
-        refcounted shared pages — no prefix forward pass, no Lanczos) and
-        MISSES (the slot engine's exact prefill path — same jitted fn,
-        same pow2 batch padding, so the factors are bit-identical).  One
-        ticket per hit group plus one for the misses; all pages are
-        allocated and installed in the slot block tables HERE, at
-        dispatch, so the reservation holds across the async window and
-        ``free_slot`` on cancellation releases everything (shared prefix
-        refs exactly once).  Device-side the launch order — suffix chains
-        on the pool cache, then the miss scatter — is identical to the
-        pre-split engine; only the host-side sample/bookkeeping moves
-        into ``complete()``."""
-        pg = self.pager
-        n = len(batch)
-        padded = self._toks(batch, n, plen, lambda j: j)
-        hits: dict = {}            # (L, r_eff) -> [(j, entry, share), ...]
-        misses: List[int] = []
-        for j in range(n):
-            got = looks[j] if looks is not None else None
-            if got is not None:
-                ent, match_len, share = got
-                hits.setdefault((match_len, ent.r_eff),
-                                []).append((j, ent, share))
-            else:
-                misses.append(j)
-        if pg.prefix is not None:
-            # counted once per ADMITTED request, here at dispatch — the
-            # lookups themselves ran record=False, so a defer/retry cycle
-            # no longer double-counts (engine stats and cache counters)
-            nh = n - len(misses)
-            self.stats.prefix_hits += nh
-            self.stats.prefix_misses += len(misses)
-            pg.prefix.hits += nh
-            pg.prefix.misses += len(misses)
-
-        tickets: List[PrefillTicket] = []
-        # hits first: they only consume tail pages, and their factor
-        # pages already carry this batch's refs
-        for (match_len, r_ent), group in sorted(hits.items()):
-            tickets.append(self._dispatch_paged_hits(
-                batch, slots_idx, plen, padded, match_len, r_ent, group))
-        if misses:
-            tickets.append(self._dispatch_paged_miss(
-                batch, slots_idx, plen, padded, misses))
-        return tickets
-
-    def _dispatch_paged_hits(self, batch: List[Request],
-                             slots_idx: List[int], plen: int,
-                             padded: np.ndarray, match_len: int,
-                             r_ent: int, group: list) -> PrefillTicket:
-        pg = self.pager
-        m = len(group)
-        stoks = np.zeros((m, plen - match_len), np.int32)
-        ent_bt, bt_t, idx = [], [], []
-        reqs: List[Request] = []
-        slots_l: List[int] = []
-        shares: List[list] = []
-        for gi, (j, ent, share) in enumerate(group):
-            slot = slots_idx[j]
-            stoks[gi] = padded[j][match_len:]
-            tpages = pg.talloc.alloc(pg.ntp)
-            assert tpages is not None, "tail pages after _reserve_pages"
-            ent_bt.append(share)
-            shares.append(list(share))
-            bt_t.append(tpages)
-            idx.append(slot)
-            reqs.append(batch[j])
-            slots_l.append(slot)
-        k_vt = jnp.stack([ent.k_vt for _, ent, _ in group], axis=1)
-        v_vt = jnp.stack([ent.v_vt for _, ent, _ in group], axis=1)
-        start = np.full(m, match_len, np.int32)
-        slen = np.full(m, plen - match_len, np.int32)
-        logits, pg.cache = pg._suffix(
-            self.params, jnp.asarray(stoks), pg.cache,
-            np.asarray(ent_bt, np.int32), k_vt, v_vt,
-            jnp.asarray(start), jnp.asarray(slen),
-            np.asarray(bt_t, np.int32), np.asarray(idx, np.int32),
-            match_len, r_ent)
-        self.stats.prefill_batches += 1
-
-        def complete():
-            # install the block tables only NOW: while the ticket was in
-            # flight the slot's bt rows stayed empty (SINK-padded in
-            # bt_array), so intervening decode launches scattered their
-            # dead-row writes into the sink page instead of the suffix
-            # tail pages written at dispatch.  The shared-prefix ref from
-            # _lookup_prefixes transfers to the slot here; free_slot
-            # releases it exactly once.
-            for gi, slot in enumerate(slots_l):
-                pg.bt_u[slot], pg.bt_t[slot] = shares[gi], bt_t[gi]
-                self.rank_eff[slot] = r_ent
-            nxt = self._sample_host(logits, stream=1)[:m]
-            pg.slab_t = max(pg.slab_t, match_len)
-            pg.slab_r = max(pg.slab_r, r_ent)
-            return nxt, np.full(m, match_len, np.int32)
-
-        def cancel():
-            # nothing was installed in the slot block tables yet, so the
-            # lookup's shared ref and the fresh tail pages are released
-            # directly (exactly once each)
-            for gi in range(m):
-                pg.alloc.release(shares[gi])
-                pg.talloc.release(bt_t[gi])
-
-        return PrefillTicket(requests=reqs, slots=slots_l, plen=plen,
-                             probe=logits, complete=complete,
-                             cancel=cancel,
-                             t_dispatch=time.perf_counter())
-
-    def _dispatch_paged_miss(self, batch: List[Request],
-                             slots_idx: List[int], plen: int,
-                             padded: np.ndarray,
-                             misses: List[int]) -> PrefillTicket:
-        pg = self.pager
-        nb = min(_pow2(len(misses)), max(self.slots, 1))
-        mtoks = np.zeros((nb, plen), np.int32)
-        for mi, j in enumerate(misses):
-            mtoks[mi] = padded[j]
-        logits, fresh = self._prefill_dkv(self.params, jnp.asarray(mtoks))
-        self.stats.prefill_batches += 1
-        npg = pg.pages_for(plen)
-        bt_u, bt_t, idx = [], [], []
-        reqs: List[Request] = []
-        slots_l: List[int] = []
-        for j in misses:
-            slot = slots_idx[j]
-            pages = pg.alloc.alloc(npg)
-            tpages = pg.talloc.alloc(pg.ntp)
-            assert pages is not None and tpages is not None, \
-                "page reservation failed after _reserve_pages"
-            bt_u.append(pages)
-            bt_t.append(tpages)
-            idx.append(slot)
-            reqs.append(batch[j])
-            slots_l.append(slot)
-        pads = [plen - len(batch[j].prompt) for j in misses]
-        rows = [padded[j].copy() for j in misses]
-
-        def complete():
-            # block tables are installed only now (see the hit-path note:
-            # bt rows stay SINK during the async window so dead-row decode
-            # writes can't touch the reserved pages); the _admit scatter
-            # below chains device-side AFTER any intervening decode, so it
-            # owns the final contents of every factor/tail page
-            r_eff = fresh["k_u"].shape[-1]
-            src = np.arange(len(misses), dtype=np.int32)
-            pg.cache = pg._admit(pg.cache, fresh["k_u"], fresh["v_u"],
-                                 fresh["k_vt"], fresh["v_vt"],
-                                 np.asarray(bt_u, np.int32),
-                                 np.asarray(bt_t, np.int32),
-                                 np.asarray(idx, np.int32), src)
-            for mi, slot in enumerate(slots_l):
-                pg.bt_u[slot], pg.bt_t[slot] = bt_u[mi], bt_t[mi]
-                self.rank_eff[slot] = r_eff
-            nxt = self._sample_host(logits, stream=1)[:len(misses)]
-            pg.slab_t = max(pg.slab_t, plen)
-            pg.slab_r = max(pg.slab_r, r_eff)
-            if pg.prefix is not None:
-                for mi, slot in enumerate(slots_l):
-                    pg.prefix.insert(rows[mi], pg.bt_u[slot],
-                                     fresh["k_vt"][:, mi],
-                                     fresh["v_vt"][:, mi], r_eff,
-                                     n_pad=pads[mi])
-            return nxt, np.full(len(misses), plen, np.int32)
-
-        def cancel():
-            for mi in range(len(misses)):
-                pg.alloc.release(bt_u[mi])
-                pg.talloc.release(bt_t[mi])
-
-        return PrefillTicket(requests=reqs, slots=slots_l, plen=plen,
-                             probe=(logits, fresh), complete=complete,
-                             cancel=cancel,
-                             t_dispatch=time.perf_counter())
-
-    def _admit_gang(self, batch: List[Request], slots_idx: List[int],
-                    plen: int, has_live: bool) -> Array:
-        """Legacy admission: prefill the WHOLE slot batch (idle and live
-        slots compute padding), splice rows for the dense family, replace
-        the cache wholesale otherwise (all slots are free by the gang
-        restriction)."""
-        toks = self._toks(batch, self.slots, plen,
-                          lambda j: slots_idx[j])
-        if self.dkv_rank:
-            logits, self.cache = self._prefill_dkv(self.params,
-                                                   jnp.asarray(toks))
-            self.rank_eff[slots_idx] = self.cache["k_u"].shape[-1]
-        else:
-            args = self._prefill_args(jnp.asarray(toks))
-            logits, cache = self._prefill(self.params, *args)
-            if has_live:
-                idx = np.asarray(slots_idx, np.int32)
-                cache = self._splice_fam(self.cache, cache, idx, idx,
-                                         self.cfg)
-            self.cache = cache
-        return logits
-
-    def _prefill_args(self, toks: Array):
-        b, s = toks.shape
-        if self.cfg.family == "vlm":
-            img = jnp.zeros((b, self.cfg.num_image_tokens, self.cfg.d_model),
-                            self.cfg.jax_dtype)
-            return (toks, img)
-        if self.cfg.family == "audio":
-            # encoder memory length is cfg.num_audio_frames (the init_cache
-            # cross-KV contract) — NOT the token prefix length
-            frames = jnp.zeros((b, self.cfg.num_audio_frames,
-                                self.cfg.d_model), self.cfg.jax_dtype)
-            return (frames, toks)
-        return (toks,)
-
-    def _fold_slots(self, live_m: np.ndarray, fold: np.ndarray) -> None:
-        """Per-slot tail fold on the SLAB cache (non-paged path)."""
-        from ..models import decomposed_kv as DK
-        r_in = int(self.cache["k_u"].shape[-1])
-        t_frozen = int(self.cache["k_u"].shape[2])
-        new_frozen = np.where(fold, self.pos,
-                              self.frozen_len).astype(np.int32)
-        self.cache = self._compress_dkv(self.cache,
-                                        jnp.asarray(self.frozen_len),
-                                        jnp.asarray(fold),
-                                        jnp.asarray(new_frozen))
-        self.frozen_len = new_frozen
-        self.rank_eff = np.where(
-            fold, DK.fold_rank(self.dkv_rank, r_in, t_frozen,
-                               self.dkv_tail),
-            self.rank_eff).astype(np.int32)
-        self.stats.tail_folds += int(fold.sum())
-        # keep only the rows AND factor columns live slots reference — a
-        # finished slot's stale frozen_len/rank must not pin memory, and
-        # the rank axis shrinks back to the configured kv_rank once
-        # wide-rank splices drain (the old behavior ratcheted forever)
-        t_need = int(self.frozen_len[live_m].max())
-        r_need = int(self.rank_eff[live_m].max())
-        for key in ("k_u", "v_u"):
-            self.cache[key] = self.cache[key][:, :, :t_need, :r_need]
-        for key in ("k_vt", "v_vt"):
-            self.cache[key] = self.cache[key][:, :, :r_need]
-
-    def _fold_slots_paged(self, live_m: np.ndarray, must: np.ndarray,
-                          fold: np.ndarray) -> np.ndarray:
-        """Paged tail fold: retruncated prefixes land in FRESH pages
-        (copy-on-write — shared/prefix-cache pages are never rewritten);
-        the folded slots' old page refs are released after the scatter.
-        Falls back to must-only folds when the pool can't take the
-        opportunistic co-folds."""
-        from ..models import decomposed_kv as DK
-        pg = self.pager
-
-        def grab(mask):
-            idxs = [int(i) for i in np.where(mask)[0]]
-            need = {i: pg.pages_for(int(self.pos[i])) for i in idxs}
-            if sum(need.values()) > pg.alloc.free_pages:
-                return None
-            return {i: pg.alloc.alloc(n) for i, n in need.items()}
-
-        newp = grab(fold)
-        if newp is None:
-            fold = must
-            newp = grab(fold)
-        while newp is None and pg.prefix is not None and len(pg.prefix):
-            pg.prefix._evict()
-            newp = grab(fold)
-        if newp is None:
-            raise RuntimeError(
-                "paged KV pool exhausted during a tail fold — raise "
-                "kv_pool_pages (or lower slots/max_len)")
-        npn = max(len(v) for v in newp.values())
-        bt_new = pg.bt_array([newp.get(i, []) for i in range(self.slots)],
-                             npn)
-        new_frozen = np.where(fold, self.pos,
-                              self.frozen_len).astype(np.int32)
-        pg.cache = pg._fold(
-            pg.cache, jnp.asarray(self.frozen_len), jnp.asarray(fold),
-            jnp.asarray(new_frozen), jnp.asarray(pg.bt_array(pg.bt_u)),
-            jnp.asarray(bt_new), jnp.asarray(pg.bt_array(pg.bt_t, pg.ntp)),
-            pg.slab_t, pg.slab_r, self.dkv_tail)
-        r_fold = DK.fold_rank(self.dkv_rank, pg.slab_r, pg.slab_t,
-                              self.dkv_tail)
-        for i, pages in newp.items():
-            pg.alloc.release(pg.bt_u[i])
-            pg.bt_u[i] = pages
-            self.rank_eff[i] = r_fold
-        self.frozen_len = new_frozen
-        self.stats.tail_folds += int(fold.sum())
-        pg.slab_t = int(self.frozen_len[live_m].max())
-        pg.slab_r = int(self.rank_eff[live_m].max())
-        return fold
-
-    def _maybe_fold(self) -> None:
-        """Tail-fold check at a decode/block boundary (decomposed KV)."""
-        live_m = np.array([r is not None for r in self.live])
-        occ = self.pos - self.frozen_len
-        must = live_m & (occ >= self.dkv_tail)
-        if must.any():
-            # a slot's tail is full — fold it, and opportunistically
-            # co-fold every live slot at least half full: co-folded
-            # slots restart at occupancy 0 together, re-synchronizing
-            # fold cadence under staggered admissions (fold ≈ one
-            # event per TAIL decode rounds instead of one per slot).
-            # A co-folded slot's unused tail rows are zeros and fold
-            # as zero rows — exactness is unaffected.
-            fold = must | (live_m & (occ >= max(1, self.dkv_tail // 2)))
-            with self.trace.span("fold", "engine",
-                                 {"slots": int(fold.sum())}), \
-                    phase_scope("fold"):
-                if self.pager is not None:
-                    self._fold_slots_paged(live_m, must, fold)
-                else:
-                    self._fold_slots(live_m, fold)
-
     def _last_tokens(self) -> np.ndarray:
         tok = np.zeros((self.slots,), np.int32)
         for i, req in enumerate(self.live):
@@ -1429,9 +837,9 @@ class Engine:
         """One decode LAUNCH: the single-step round (decode_block == 1,
         bit-identical to the pre-fusion engine) or a fused block of up to
         ``decode_block`` rounds.  Fold checks run here, at the boundary —
-        identical cadence either way."""
-        if self.dkv_rank:
-            self._maybe_fold()
+        identical cadence either way (a no-op for families whose state
+        never grows)."""
+        self.family.maybe_fold()
         if self.decode_block <= 1:
             done = self._decode_round()
             self._round += 1
@@ -1442,25 +850,7 @@ class Engine:
         tok = self._last_tokens()
         with self.trace.span("decode-step", "engine"), \
                 phase_scope("decode"):
-            if self.dkv_rank:
-                if self.pager is not None:
-                    pg = self.pager
-                    logits, pg.cache = pg._decode(
-                        self.params, jnp.asarray(tok), pg.cache,
-                        jnp.asarray(self.pos),
-                        jnp.asarray(self.frozen_len),
-                        jnp.asarray(pg.bt_array(pg.bt_u)),
-                        jnp.asarray(pg.bt_array(pg.bt_t, pg.ntp)),
-                        pg.slab_t, pg.slab_r, self.dkv_tail)
-                else:
-                    logits, self.cache = self._decode_dkv(
-                        self.params, jnp.asarray(tok), self.cache,
-                        jnp.asarray(self.pos),
-                        jnp.asarray(self.frozen_len))
-            else:
-                logits, self.cache = self._decode(
-                    self.params, jnp.asarray(tok), self.cache,
-                    jnp.asarray(self.pos))
+            logits = self.family.decode(tok)
             nxt = self._sample_host(logits)
         self.stats.decode_steps += 1
         self.stats.blocks += 1
@@ -1491,8 +881,9 @@ class Engine:
 
         * budget: no live slot may decode past ``max_new_tokens`` or the
           cache end (the single-step engine would have finished it);
-        * fold: ``dkv_tail − max(occupancy)`` steps until some tail fills
-          (folds only happen at boundaries, at the exact same occupancy);
+        * fold: the family's ``fold_horizon()`` — steps until some tail
+          fills (folds only happen at boundaries, at the exact same
+          occupancy); None for families whose state never grows;
         * admission: with ``admit_every > 1`` and a non-empty queue, stop
           at the next due round.  With ``admit_every == 1`` no cap is
           needed — a queued request that admission just deferred (no free
@@ -1506,10 +897,9 @@ class Engine:
             blk = min(blk,
                       req.max_new_tokens - len(req.out_tokens),
                       (self.max_len - 1) - int(self.pos[i]))
-        if self.dkv_rank:
-            occ = max(int(self.pos[i] - self.frozen_len[i])
-                      for i, r in enumerate(self.live) if r is not None)
-            blk = min(blk, self.dkv_tail - occ)
+        fh = self.family.fold_horizon()
+        if fh is not None:
+            blk = min(blk, fh)
         if len(self.sched) and self.admit_every > 1:
             due = (self._round // self.admit_every + 1) * self.admit_every
             blk = min(blk, due - self._round)
@@ -1538,31 +928,7 @@ class Engine:
         t0 = time.perf_counter()
         bspan = self.trace.begin("decode-block", "engine", {"max_steps": blk})
         with phase_scope("decode"):
-            if self.dkv_rank and self.pager is not None:
-                pg = self.pager
-                from .paged import _jitted_paged_decode_block
-                fn = _jitted_paged_decode_block(self.cfg, self.decode_block,
-                                                self.sampler, self.mesh)
-                buf, steps, _, pg.cache = fn(
-                    self.params, jnp.asarray(tok), pg.cache,
-                    jnp.asarray(self.pos), jnp.asarray(self.frozen_len),
-                    jnp.asarray(pg.bt_array(pg.bt_u)),
-                    jnp.asarray(pg.bt_array(pg.bt_t, pg.ntp)),
-                    n, stops, key, r0, pg.slab_t, pg.slab_r, self.dkv_tail)
-            elif self.dkv_rank:
-                fn = _jitted_dkv_decode_block(self.cfg, self.decode_block,
-                                              self.sampler, self.mesh)
-                buf, steps, _, self.cache = fn(
-                    self.params, jnp.asarray(tok), self.cache,
-                    jnp.asarray(self.pos), jnp.asarray(self.frozen_len),
-                    n, stops, key, r0)
-            else:
-                fn = _jitted_decode_block(self.fns, self.cfg,
-                                          self.decode_block,
-                                          self.sampler, self.mesh)
-                buf, steps, _, self.cache = fn(
-                    self.params, jnp.asarray(tok), self.cache,
-                    jnp.asarray(self.pos), n, stops, key, r0)
+            buf, steps = self.family.decode_block(tok, n, stops, key, r0)
             steps = int(steps)
             toks = np.asarray(buf)[:steps]          # [steps, slots], syncs
         bspan.end(steps=steps)

@@ -37,7 +37,8 @@ def lint(src: str, path: str = ANY, select=None):
 
 
 def test_registry_has_all_shipped_rules():
-    assert {"D1", "D2", "D3", "J1", "J2", "O1", "P1", "S1"} <= set(REGISTRY)
+    assert {"D1", "D2", "D3", "F1", "J1", "J2", "O1", "P1",
+            "S1"} <= set(REGISTRY)
     for rule in REGISTRY.values():
         assert rule.doc(), f"{rule.id} must document its motivating bug"
         assert rule.severity in ("error", "warning")
@@ -149,6 +150,56 @@ def test_d3_suppression():
             f.write(text)
     """)
     assert active == [] and suppressed == ["D3"]
+
+
+# ---------------------------------------------------------------- F1 ----
+
+def test_f1_flags_family_branch_in_serving():
+    # the PR 10 motivating bug: Engine._prefill_args special-cased
+    # vlm/audio in an if-chain — a new family silently fell through to
+    # the dense arm instead of failing at registration
+    active, _ = lint("""\
+        def _prefill_args(self, toks):
+            if self.cfg.family == "vlm":
+                return (toks, self._image_zeros())
+            return (toks,)
+    """, path=SERVING)
+    assert active == ["F1"]
+
+
+def test_f1_flags_family_table_outside_resolver():
+    active, _ = lint("""\
+        def admit(self, cfg):
+            return _SPLICERS[cfg.family](self.cache)
+    """, path="src/repro/models/api.py")
+    assert active == ["F1"]
+
+
+def test_f1_allows_registered_resolvers_and_asserts():
+    active, _ = lint("""\
+        def model_fns(cfg):
+            return _FAMILY[cfg.family]
+        def serving_family(eng, paged=False):
+            key = "transformer-dkv" if eng.dkv_rank else eng.cfg.family
+            return _REGISTRY[key](eng, paged=paged)
+        def decomposed_fns(cfg):
+            assert cfg.family == "dense", "decomposed KV: dense family"
+    """, path=SERVING)
+    assert active == []
+
+
+def test_f1_ignores_modules_outside_scope():
+    # launch/benchmark/config code may branch on family (CLI plumbing);
+    # only the serving engine and the model API are gated
+    active, _ = lint('wide = cfg.family in ("vlm", "audio")\n', path=ANY)
+    assert active == []
+
+
+def test_f1_suppression():
+    active, suppressed = lint("""\
+        legacy = cfg.family == "audio"  # dcomlint: disable=F1
+    """, path=SERVING)
+    assert active == [] and suppressed == ["F1"]
 
 
 # ---------------------------------------------------------------- J1 ----
@@ -484,7 +535,7 @@ def test_cli_exit_codes_and_json_report(tmp_path, capsys):
 def test_cli_list_rules(capsys):
     assert lint_main(["--list-rules"]) == 0
     out = capsys.readouterr().out
-    for rid in ("D1", "D2", "D3", "J1", "J2", "O1", "P1", "S1"):
+    for rid in ("D1", "D2", "D3", "F1", "J1", "J2", "O1", "P1", "S1"):
         assert rid in out
 
 

@@ -105,32 +105,47 @@ def test_property_scheduler_fifo_within_bucket(lens, bucket, max_admit,
 
 _MODEL = {}
 
+# one reduced arch per serving family the engine properties draw from;
+# MoE pins capacity_factor so the router is batch-size-invariant (a
+# capacity-dropped token routes differently between interleavings by
+# design — see test_serving_conformance._family_model)
+_PROP_ARCHS = {"dense": "llama2-7b", "ssm": "mamba2-780m",
+               "moe": "olmoe-1b-7b"}
 
-def _dense_model():
-    if not _MODEL:
+
+def _family_model(family):
+    if family not in _MODEL:
         import jax as _jax
         from repro.configs import all_archs
         from repro.models import model_fns
-        cfg = all_archs()["llama2-7b"].reduced()
-        _MODEL["cfg"] = cfg
-        _MODEL["params"] = model_fns(cfg).init(_jax.random.PRNGKey(0), cfg)
-    return _MODEL["cfg"], _MODEL["params"]
+        cfg = all_archs()[_PROP_ARCHS[family]].reduced()
+        if family == "moe":
+            cfg = cfg.replace(capacity_factor=8.0)
+        _MODEL[family] = (cfg,
+                          model_fns(cfg).init(_jax.random.PRNGKey(0), cfg))
+    return _MODEL[family]
+
+
+def _dense_model():
+    return _family_model("dense")
 
 
 @settings(max_examples=5, deadline=None)
 @given(data=st.data())
 def test_property_engine_finishes_once_no_leaks_monotone(data):
-    """Engine invariants under random arrivals: every submitted request
-    finishes exactly once, no slot leaks, and while a slot keeps its
-    occupant its ``pos`` strictly advances and ``frozen_len`` never
-    shrinks (per-slot monotonicity)."""
-    cfg, params = _dense_model()
+    """Engine invariants under random arrivals FOR ANY SERVING FAMILY:
+    every submitted request finishes exactly once, no slot leaks, and
+    while a slot keeps its occupant its ``pos`` strictly advances and
+    ``frozen_len`` never shrinks (per-slot monotonicity).  The dkv and
+    paged layouts only exist for the dense family's KV cache."""
+    family = data.draw(st.sampled_from(["dense", "ssm", "moe"]))
+    cfg, params = _family_model(family)
     n = data.draw(st.integers(1, 5))
     lens = data.draw(st.lists(st.integers(1, 12), min_size=n, max_size=n))
     news = data.draw(st.lists(st.integers(1, 4), min_size=n, max_size=n))
     arrive = sorted(data.draw(st.lists(st.integers(0, 6), min_size=n,
                                        max_size=n)))
-    dkv = data.draw(st.booleans())
+    dkv = family == "dense" and data.draw(st.booleans())
     paged = dkv and data.draw(st.booleans())
     kw = dict(decompose_kv_rank=6, dkv_tail=2, paged=paged) if dkv else {}
     eng = Engine(cfg, params, slots=2, max_len=48, **kw)
@@ -413,14 +428,17 @@ def test_property_async_engine_interleavings(data):
     organically from a deliberately tight page pool, the ready/splice
     timing from the ticket pool): slot and page conservation after
     drain, FIFO-per-bucket dispatch order, and token exactness vs the
-    synchronous engine in deterministic ready-order mode."""
-    cfg, params = _dense_model()
+    synchronous engine in deterministic ready-order mode.  The family
+    draw runs the same interleavings through the O(1)-state SSM engine
+    (no dkv, no pages — ticket/splice machinery is family-generic)."""
+    family = data.draw(st.sampled_from(["dense", "ssm"]))
+    cfg, params = _family_model(family)
     n = data.draw(st.integers(1, 5))
     lens = data.draw(st.lists(st.integers(1, 20), min_size=n, max_size=n))
     news = data.draw(st.lists(st.integers(1, 4), min_size=n, max_size=n))
     arrive = sorted(data.draw(st.lists(st.integers(0, 6), min_size=n,
                                        max_size=n)))
-    paged = data.draw(st.booleans())
+    paged = family == "dense" and data.draw(st.booleans())
     mode = data.draw(st.sampled_from(["deterministic", "ready"]))
     block = data.draw(st.sampled_from([1, 3]))
 
@@ -436,8 +454,11 @@ def test_property_async_engine_interleavings(data):
             kv_rank=6, kv_tail=8, kv_page=16,
             kv_pool_pages=3 if paged else 0, sched_max_admit=1,
             decode_block=block))
+        # an explicit rank-0 keeps the SSM engine on its family cache
+        # (the engine config still supplies sched/block knobs)
+        fam_kw = {} if family == "dense" else dict(decompose_kv_rank=0)
         return Engine(cfg, params, slots=2, max_len=48, paged=paged,
-                      decompose_engine=deng, **extra)
+                      decompose_engine=deng, **fam_kw, **extra)
 
     def drive(eng):
         rng = np.random.RandomState(0)

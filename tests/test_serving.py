@@ -257,3 +257,46 @@ def test_compress_tail_uniform_retruncates_to_rank():
     assert out["k_u"].shape[-1] == rank           # was max(r_in, r_fold)=12
     assert out["k_vt"].shape[-2] == rank
     assert out["k_u"].shape[2] == t + tl
+
+
+def test_scheduler_buckets_on_cost_hook():
+    """The scheduler buckets on the injected COST function, not raw
+    prompt length: a +10 modality constant (deliberately not a bucket
+    multiple) moves requests across bucket boundaries and regroups the
+    admission batches."""
+    from repro.serving import Scheduler
+    lens = (4, 8, 20, 24)
+    reqs = [Request(uid=i, prompt=np.zeros(n, np.int32))
+            for i, n in enumerate(lens)]
+    plain = Scheduler(bucket=16)
+    cost = Scheduler(bucket=16, cost=lambda r: len(r.prompt) + 10)
+    for s in (plain, cost):
+        for r in reqs:
+            s.submit(r)
+    # length-based: {4, 8} share bucket 16, {20, 24} share bucket 32
+    assert [r.uid for r in plain.next_batch(4)] == [0, 1]
+    assert [r.uid for r in plain.next_batch(4)] == [2, 3]
+    # cost-based: 14 → 16 | 18, 30 → 32 | 34 → 48
+    assert [r.uid for r in cost.next_batch(4)] == [0]
+    assert [r.uid for r in cost.next_batch(4)] == [1, 2]
+    assert [r.uid for r in cost.next_batch(4)] == [3]
+    assert not len(cost)
+
+
+def test_engine_buckets_on_family_prefill_cost():
+    """The engine's scheduler uses the FAMILY-reported prefill cost: a
+    VLM prompt costs its token length plus the image-embed rows that
+    join the prefill batch, so two prompts whose lengths share a bucket
+    land in different buckets once the modality constant is added."""
+    cfg = all_archs()["llama-3.2-vision-11b"].reduced()
+    params = model_fns(cfg).init(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, slots=2, max_len=96)
+    req = Request(uid=0, prompt=np.zeros(7, np.int32))
+    assert cfg.num_image_tokens == 16
+    assert eng.family.prefill_cost(req) == 7 + 16
+    assert eng.sched.cost(req) == eng.family.prefill_cost(req)
+    # 7 and 15 share bucket 16 by length, but 23 vs 31: with the image
+    # rows both still bucket 32 — push one across: 7+16=23→32, 20+16=36→48
+    b = eng.sched.bucket_of
+    assert b(eng.sched.cost(Request(uid=1, prompt=np.zeros(7, np.int32)))) \
+        != b(eng.sched.cost(Request(uid=2, prompt=np.zeros(20, np.int32))))
